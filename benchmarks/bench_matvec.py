@@ -1,0 +1,66 @@
+"""§4 data-structure claim: K~ beta in O(n) time / O(n) memory.
+
+Times the WLSH matvec (exact sort mode and CountSketch table mode, both the
+jnp path and the Pallas kernel path) across n, against the O(n^2) dense
+matvec; reports microseconds per call and the empirical scaling exponent."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import GammaPDF, featurize, get_bucket_fn, sample_lsh_params
+from repro.core.wlsh import (build_exact_index, build_table_index,
+                             exact_kernel_matrix, exact_matvec, table_matvec)
+from repro.kernels.binning.ops import table_matvec_op
+
+from .common import emit, time_fn
+
+
+def run(ns=(1024, 4096, 16384), d: int = 8, m: int = 16, seed: int = 0):
+    f = get_bucket_fn("rect")
+    rows = []
+    for n in ns:
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.uniform(key, (n, d)) * 2.0
+        params = sample_lsh_params(jax.random.fold_in(key, 1), m, d,
+                                   GammaPDF(2.0, 1.0))
+        feats = featurize(params, f, x)
+        beta = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+        eidx = build_exact_index(feats)
+        tidx = build_table_index(feats, 1 << max(10, (2 * n - 1).bit_length()))
+
+        t_exact = time_fn(jax.jit(lambda b: exact_matvec(eidx, b)), beta)
+        t_table = time_fn(jax.jit(lambda b: table_matvec(tidx, b)), beta)
+        row = {"n": n, "exact_us": t_exact * 1e6, "table_us": t_table * 1e6}
+        if n <= 1024:
+            # interpret-mode Pallas runs the kernel body in Python — correct-
+            # ness validation only, meaningless as a wall-clock datapoint
+            row["pallas_us"] = time_fn(
+                jax.jit(lambda b: table_matvec_op(tidx, b, interpret=True)),
+                beta) * 1e6
+        if n <= 4096:  # dense comparison only where the matrix fits
+            kmat = exact_kernel_matrix(feats)
+            row["dense_us"] = time_fn(jax.jit(lambda b: kmat @ b), beta) * 1e6
+        rows.append(row)
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    print("n,exact_us,table_us,pallas_interp_us,dense_us")
+    for r in rows:
+        print(f"{r['n']},{r['exact_us']:.1f},{r['table_us']:.1f},"
+              f"{r.get('pallas_us', float('nan')):.1f},"
+              f"{r.get('dense_us', float('nan')):.1f}")
+    # empirical exponent between the LAST two sizes (smaller ones are
+    # dominated by dispatch overhead); dense matvec would show ~2.0
+    e = np.log(rows[-1]["table_us"] / rows[-2]["table_us"]) / \
+        np.log(rows[-1]["n"] / rows[-2]["n"])
+    emit("bench_matvec", rows[-1]["table_us"] * 1e-6,
+         f"table_scaling_exponent={e:.2f} (1.0 = linear, dense = 2.0)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Render the §Roofline table from dry-run JSONL reports.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh pod --out reports/pod.jsonl
+    PYTHONPATH=src python -m benchmarks.roofline reports/pod.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path: str) -> list[dict]:
+    rows = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    # keep the newest entry per cell name
+    by_name = {}
+    for r in rows:
+        by_name[r["name"]] = r
+    return list(by_name.values())
+
+
+def render(rows: list[dict]) -> str:
+    hdr = ("| cell | chips | t_compute | t_memory | t_collective | dominant | "
+           "GB/dev | useful/HLO | roofline |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: r["name"]):
+        gb = (r.get("arg_bytes_per_device", 0) +
+              r.get("temp_bytes_per_device", 0)) / 1e9
+        lines.append(
+            f"| {r['name']} | {r['chips']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {gb:.1f} | {r['useful_flop_frac']:.2f} | "
+            f"{r['roofline_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    paths = sys.argv[1:] or ["reports/pod.jsonl"]
+    for p in paths:
+        try:
+            print(render(load(p)))
+        except FileNotFoundError:
+            print(f"(no report at {p} — run repro.launch.dryrun with --out)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Run every benchmark at CPU-friendly scale.  One section per paper
+table/figure; each emits ``name,us_per_call,derived`` CSV lines plus its own
+detail table.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> None:
+    from . import bench_matvec, bench_ose, table1_gp, table2_krr
+    sections = [
+        ("Table 1 (GP regression RMSE)", lambda: table1_gp.main(scale=0.15,
+                                                                m=280)),
+        ("Table 2 (large-scale KRR)", table2_krr.main),
+        ("Matvec O(n) scaling (paper §4)", bench_matvec.main),
+        ("OSE eps vs m (Thm 11/12)", bench_ose.main),
+    ]
+    failures = 0
+    for name, fn in sections:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"=== done in {time.time() - t0:.1f}s ===")
+    if failures:
+        raise SystemExit(f"{failures} benchmark section(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Paper Table 2: large-scale KRR — RMSE + fit time for Exact KRR vs Random
+Fourier Features vs WLSH, on synthetic stand-ins matching the UCI datasets'
+dimensionality (offline container; see repro/data/regression.py).
+
+The paper's qualitative claims reproduced here:
+  * WLSH ~ exact-KRR accuracy at a fraction of the time on mid-size data;
+  * exact KRR is infeasible at Forest-Cover scale while WLSH still runs;
+  * WLSH beats RFF accuracy when RFF's feature budget is memory-capped.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (WLSHKernelSpec, exact_krr_fit, exact_krr_predict,
+                        get_bucket_fn, laplace_kernel, rff_krr_fit,
+                        rff_krr_predict, wlsh_krr_fit, wlsh_krr_predict)
+from repro.data import make_regression_dataset
+
+from .common import emit
+
+# (dataset, scale, m, D_rff, exact feasible at this scale?)
+DEFAULT_GRID = [
+    ("wine", 0.25, 450, 1024, True),
+    ("insurance", 0.25, 250, 1024, True),
+    ("ct_slices", 0.03, 64, 512, False),
+    ("forest", 0.004, 64, 256, False),
+]
+
+
+def _rmse(a, b):
+    return float(jnp.sqrt(jnp.mean((a - b) ** 2)))
+
+
+def _median_dists(x, key, k=256):
+    """Median L1 and L2 pairwise distance on a subsample — the standard
+    'median heuristic' anchors each kernel's lengthscale to ITS geometry
+    (Laplace/WLSH live on L1, the RFF Gaussian on L2)."""
+    idx = jax.random.choice(key, x.shape[0], (min(k, x.shape[0]),),
+                            replace=False)
+    xs = x[idx]
+    diff = xs[:, None, :] - xs[None, :, :]
+    l1 = jnp.median(jnp.sum(jnp.abs(diff), -1))
+    l2 = jnp.median(jnp.sqrt(jnp.sum(diff * diff, -1)))
+    return float(l1), float(l2)
+
+
+def run(grid=DEFAULT_GRID, lam: float = 0.5, seed: int = 0):
+    rows = []
+    for name, scale, m, d_rff, exact_ok in grid:
+        xtr, ytr, xte, yte = make_regression_dataset(name, seed, scale=scale)
+        row = {"dataset": name, "n": int(xtr.shape[0]), "d": int(xtr.shape[1])}
+        l1, l2 = _median_dists(xtr, jax.random.PRNGKey(seed + 3))
+        ell1, ell2 = l1 / 2.0, l2  # e^{-L1/ell}: ~e^-2 at median; RFF ~e^-1
+
+        if exact_ok:
+            t0 = time.perf_counter()
+            kern = lambda a, b: laplace_kernel(a, b, ell1)
+            beta = exact_krr_fit(kern, xtr, ytr, lam)
+            jax.block_until_ready(beta)
+            row["exact_time"] = time.perf_counter() - t0
+            row["exact_rmse"] = _rmse(exact_krr_predict(kern, xtr, beta, xte),
+                                      yte)
+        else:
+            row["exact_time"] = float("nan")
+            row["exact_rmse"] = float("nan")
+
+        t0 = time.perf_counter()
+        rmod = rff_krr_fit(jax.random.PRNGKey(seed + 1), xtr, ytr,
+                           n_features=d_rff, lam=lam, lengthscale=ell2)
+        jax.block_until_ready(rmod.alpha)
+        row["rff_time"] = time.perf_counter() - t0
+        row["rff_rmse"] = _rmse(rff_krr_predict(rmod, xte), yte)
+
+        t0 = time.perf_counter()
+        spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"), lengthscale=ell1)
+        wmod = wlsh_krr_fit(jax.random.PRNGKey(seed + 2), xtr, ytr, spec,
+                            m=m, lam=lam)
+        jax.block_until_ready(wmod.beta)
+        row["wlsh_time"] = time.perf_counter() - t0
+        row["wlsh_rmse"] = _rmse(wlsh_krr_predict(wmod, xte), yte)
+        rows.append(row)
+    return rows
+
+
+def main(grid=DEFAULT_GRID) -> None:
+    rows = run(grid)
+    print("dataset,n,d,exact_rmse,exact_s,rff_rmse,rff_s,wlsh_rmse,wlsh_s")
+    for r in rows:
+        print(f"{r['dataset']},{r['n']},{r['d']},{r['exact_rmse']:.4f},"
+              f"{r['exact_time']:.2f},{r['rff_rmse']:.4f},{r['rff_time']:.2f},"
+              f"{r['wlsh_rmse']:.4f},{r['wlsh_time']:.2f}")
+    emit("table2_krr", 0.0, f"datasets={len(rows)}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger scales (minutes on CPU)")
+    a = ap.parse_args()
+    grid = DEFAULT_GRID
+    if a.full:
+        grid = [(n, min(1.0, s * 10), m * 2, d * 2, ok)
+                for n, s, m, d, ok in DEFAULT_GRID]
+    main(grid)

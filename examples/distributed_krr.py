@@ -1,0 +1,21 @@
+"""The paper's workload, distributed: WLSH-KRR on an 8-device mesh (forced
+CPU devices), exercising the psum-merged bucket tables and sharded CG that the
+multi-pod dry-run lowers for 512 chips.
+
+    python examples/distributed_krr.py      (sets its own XLA_FLAGS)
+"""
+import os
+import subprocess
+import sys
+
+CMD = [sys.executable, "-m", "repro.launch.krr_train",
+       "--dataset", "forest", "--scale", "0.002", "--m", "64",
+       "--lam", "0.5", "--cg-iters", "40"]
+
+if __name__ == "__main__":
+    env = dict(os.environ)
+    env.update({"PYTHONPATH": "src",
+                "XLA_FLAGS": "--xla_force_host_platform_device_count=8"})
+    print("+ XLA_FLAGS=--xla_force_host_platform_device_count=8",
+          " ".join(CMD))
+    raise SystemExit(subprocess.run(CMD, env=env).returncode)

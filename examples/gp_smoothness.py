@@ -1,0 +1,66 @@
+"""Paper §3.2 / Table 1: smooth WLSH kernels for GP regression.
+
+Shows the paper's central qualitative claim: plain random binning (f = rect)
+gives a NON-smooth kernel (Laplace) that underfits smooth processes, while the
+weighted estimator with the smooth bucket f = (rect*rect_1/4*rect_1/4)(2x) and
+p(w) = w^6 e^-w / 6! yields a Matern-like smooth kernel — same machinery,
+strictly wider kernel family.  Each kernel's lengthscale is selected on a
+validation split (the kernels' native scales differ by ~an order of
+magnitude, so a fixed lengthscale would compare apples to oranges).
+
+    PYTHONPATH=src python examples/gp_smoothness.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (GammaPDF, WLSHKernelSpec, gaussian_kernel,
+                        get_bucket_fn, wlsh_krr_fit, wlsh_krr_predict)
+from repro.core.gp import gp_regression_dataset
+
+
+def fit_with_ell_selection(key, xtr, ytr, xval, yval, bucket, pdf, m, lam,
+                           ells=(0.125, 0.25, 0.5, 1.0)):
+    best = (None, jnp.inf, None)
+    for ell in ells:
+        spec = WLSHKernelSpec(bucket=get_bucket_fn(bucket), pdf=pdf,
+                              lengthscale=ell)
+        model = wlsh_krr_fit(key, xtr, ytr, spec, m=m, lam=lam, mode="exact")
+        rmse = float(jnp.sqrt(jnp.mean((wlsh_krr_predict(model, xval) -
+                                        yval) ** 2)))
+        if rmse < best[1]:
+            best = (model, rmse, ell)
+    return best
+
+
+def main():
+    key = jax.random.PRNGKey(1)
+    n_train, n_val, n_test = 1200, 300, 500
+    # the ground truth is a SMOOTH process (squared-exponential covariance)
+    x, y, f_true = gp_regression_dataset(
+        key, gaussian_kernel, n=n_train + n_val + n_test, d=3, noise=0.05)
+    xtr, ytr = x[:n_train], y[:n_train]
+    xval, yval = x[n_train:n_train + n_val], y[n_train:n_train + n_val]
+    xte, fte = x[n_train + n_val:], f_true[n_train + n_val:]
+
+    results = {}
+    for label, bucket, pdf in [
+            ("rect (plain binning -> Laplace kernel)", "rect",
+             GammaPDF(2.0, 1.0)),
+            ("smooth (weighted -> Matern-like kernel)", "smooth",
+             GammaPDF(7.0, 1.0))]:
+        model, _, ell = fit_with_ell_selection(
+            jax.random.fold_in(key, len(label)), xtr, ytr, xval, yval,
+            bucket, pdf, m=800, lam=0.05)
+        pred = wlsh_krr_predict(model, xte)
+        results[label] = (float(jnp.sqrt(jnp.mean((pred - fte) ** 2))), ell)
+
+    for label, (rmse, ell) in results.items():
+        print(f"{label:45s} test RMSE = {rmse:.4f}  (ell*={ell})")
+    smooth_rmse = results["smooth (weighted -> Matern-like kernel)"][0]
+    rect_rmse = results["rect (plain binning -> Laplace kernel)"][0]
+    print(f"\nsmooth-bucket WLSH vs plain binning on a smooth target: "
+          f"{(1 - smooth_rmse / rect_rmse) * 100:+.1f}% RMSE change")
+
+
+if __name__ == "__main__":
+    main()

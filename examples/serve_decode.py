@@ -1,0 +1,19 @@
+"""Batched serving example: prefill + autoregressive decode with ring-buffer
+KV caches on the hybrid zamba2 (Mamba2 states + shared windowed attention).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import subprocess
+import sys
+
+CMD = [
+    sys.executable, "-m", "repro.launch.serve",
+    "--arch", "zamba2-7b", "--smoke",
+    "--batch", "4", "--prompt-len", "24", "--gen", "16",
+    "--temperature", "0.8",
+]
+
+if __name__ == "__main__":
+    print("+", " ".join(CMD))
+    proc = subprocess.run(CMD, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    raise SystemExit(proc.returncode)

@@ -1,0 +1,23 @@
+"""End-to-end LM training with fault injection: trains a reduced gemma3 on
+the synthetic token stream for a few hundred steps, killing the process state
+twice along the way — the run auto-resumes from checkpoints and still
+converges.  (This is the end-to-end driver deliverable; on real hardware drop
+--smoke and point the mesh at the pod.)
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import subprocess
+import sys
+
+CMD = [
+    sys.executable, "-m", "repro.launch.train",
+    "--arch", "gemma3-1b", "--smoke",
+    "--steps", "200", "--batch", "8", "--seq", "128",
+    "--lr", "3e-3", "--ckpt-dir", "/tmp/repro_train_lm_example",
+    "--ckpt-every", "25", "--fail-at", "60", "130",
+]
+
+if __name__ == "__main__":
+    print("+", " ".join(CMD))
+    proc = subprocess.run(CMD, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    raise SystemExit(proc.returncode)

@@ -1,0 +1,2 @@
+"""repro — WLSH kernel ridge regression framework (JAX, multi-pod)."""
+__version__ = "0.1.0"

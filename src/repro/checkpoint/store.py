@@ -1,0 +1,146 @@
+"""Checkpointing: atomic on-disk snapshots with async writes, latest-complete
+discovery, and elastic (mesh-changing) restore.
+
+Layout:  <dir>/step_<n>/arrays.npz + meta.json, written to step_<n>.tmp and
+atomically renamed — a crash mid-write can never produce a half checkpoint
+that restore() would pick up.  Arrays are stored UNSHARDED (gathered to host),
+so a checkpoint saved on mesh A restores onto any mesh B by resharding at
+load ("elastic restore"): pass target shardings to ``restore_resharded``.
+
+Async mode snapshots to host memory on the training thread (cheap device->host
+copy) and runs the file write on a worker thread, keeping serialization off
+the step critical path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): np.asarray(leaf)
+            for path, leaf in flat}
+
+
+def _unflatten(template: Any, arrays: dict[str, np.ndarray]) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, tmpl in flat:
+        key = jax.tree_util.keystr(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing array for {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"expected {tmpl.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, [l for _, l in
+                                                  zip(flat, leaves)])
+
+
+def save_checkpoint(directory: str, step: int, state: Any,
+                    meta: dict | None = None) -> str:
+    """Blocking atomic save.  Returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "arrays.npz"), **_flatten(state))
+    with open(os.path.join(tmp, "meta.json"), "w") as fh:
+        json.dump({"step": step, **(meta or {})}, fh)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    """Largest step with a COMPLETE checkpoint (tmp dirs are ignored)."""
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(directory, name, "meta.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template: Any, step: int | None = None):
+    """Returns (state, step, meta); state leaves are numpy (device_put by the
+    caller with whatever shardings the current mesh wants)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step}")
+    with np.load(os.path.join(path, "arrays.npz")) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    with open(os.path.join(path, "meta.json")) as fh:
+        meta = json.load(fh)
+    return _unflatten(template, arrays), step, meta
+
+
+def restore_resharded(directory: str, template: Any, shardings: Any,
+                      step: int | None = None):
+    """Elastic restore: place every leaf with the TARGET mesh's sharding —
+    the checkpoint may have been written from a different mesh entirely."""
+    state, step, meta = restore_checkpoint(directory, template, step)
+    state = jax.tree.map(jax.device_put, state, shardings)
+    return state, step, meta
+
+
+class CheckpointManager:
+    """Async checkpointing with bounded retention.
+
+    save() snapshots device arrays to host and hands the file write to a
+    worker thread; wait() joins the in-flight write (call before exit and in
+    tests).  Keeps the newest ``keep`` checkpoints.
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, state: Any, meta: dict | None = None,
+             blocking: bool = False) -> None:
+        host_state = jax.tree.map(np.asarray, state)   # device -> host now
+        self.wait()
+
+        def _write():
+            save_checkpoint(self.directory, step, host_state, meta)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(s for s in (
+            int(m.group(1)) for m in (_STEP_RE.match(n) for n in
+                                      os.listdir(self.directory)) if m))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)

@@ -1,0 +1,2 @@
+from .base import EncoderSpec, LayerSpec, ModelConfig, MoESpec, SHAPES, ShapeSpec, SSMSpec
+from .registry import ARCH_IDS, CONFIGS, get_config, smoke_config

@@ -1,0 +1,31 @@
+"""The paper's own workload as a dry-run config: distributed WLSH-KRR.
+
+Sized like the paper's largest experiment scaled to a 256-chip pod:
+Forest-Cover-scale n with m instances, CountSketch table mode (the only mode
+whose bucket merge is a psum — see DESIGN.md §3).
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class WLSHKRRConfig:
+    name: str = "wlsh_krr"
+    family: str = "krr"
+    n_points: int = 4_194_304     # 2^22 training points (Forest Cover x ~7)
+    dim: int = 64                 # feature dimension
+    m: int = 64                   # independent WLSH instances
+    table_size: int = 1 << 23     # CountSketch table (2 x n)
+    bucket: str = "rect"
+    pdf_shape: float = 2.0        # p(w) = w e^{-w}
+    lam: float = 1.0
+    cg_iters: int = 32            # iterations fused into one lowered step
+    notes: str = "paper's technique; data-sharded CG step over the mesh"
+
+
+CONFIG = WLSHKRRConfig()
+
+# Shape cells for the dry-run grid: (name, n_points, m).
+KRR_SHAPES = {
+    "krr_4m": dict(n_points=4_194_304, m=64, table_size=1 << 23),
+    "krr_32m": dict(n_points=33_554_432, m=32, table_size=1 << 26),
+}

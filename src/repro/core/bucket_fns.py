@@ -1,0 +1,167 @@
+"""Bucket-shaping functions f for the WLSH estimator (paper Def. 6/8).
+
+Every f is even, supported on [-1/2, 1/2], and normalized so that ||f||_2 = 1.
+We provide closed-form piecewise-polynomial evaluation (TPU-friendly: no gathers,
+pure VPU arithmetic) plus numerically tabulated autocorrelation (f*f) used by the
+analytic kernel (Def. 8).
+
+Provided shapes:
+  * ``rect``   — paper's Section-5 choice; recovers Rahimi–Recht random binning.
+  * ``tent``   — C^0: (rect * rect)(2x), one bounded derivative.
+  * ``smooth`` — paper's Table-1 choice (rect * rect_{1/4} * rect_{1/4})(2x),
+                 continuous derivative + bounded second derivative.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+# Fine grid used to tabulate autocorrelations (f*f); construction is numpy-only
+# and happens once per BucketFn instance.
+_ACORR_GRID = 8192
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: instances are
+class BucketFn:                                # module-level singletons and
+    """A bucket-shaping function with the metadata the theory needs."""  # jit-static args
+
+    name: str
+    # Closed-form evaluation of f at arbitrary points (vectorized, jittable).
+    eval_fn: Callable[[Array], Array]
+    # ||f||_inf — appears in the OSE sample-count m = Ω(||f^{⊗d}||_inf^2 ...).
+    f_inf: float
+    # smoothness order: number of bounded derivatives of f (0 for rect).
+    smoothness: int
+    # Tabulated autocorrelation (f*f) on [-1, 1] (numpy arrays; used for the
+    # analytic kernel and for unbiasedness tests).
+    acorr_x: np.ndarray = dataclasses.field(repr=False, default=None)
+    acorr_y: np.ndarray = dataclasses.field(repr=False, default=None)
+
+    def __call__(self, x: Array) -> Array:
+        return self.eval_fn(x)
+
+    def acorr(self, t: np.ndarray) -> np.ndarray:
+        """(f*f)(t) via the precomputed table (numpy; analysis/tests only)."""
+        return np.interp(np.abs(np.asarray(t)), self.acorr_x, self.acorr_y,
+                         left=0.0, right=0.0)
+
+
+def _tabulate_acorr(eval_np: Callable[[np.ndarray], np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
+    """Autocorrelation of f on a fine grid. (f even => f*f even; table on [0,1])."""
+    n = _ACORR_GRID
+    xs = np.linspace(-0.5, 0.5, n + 1)
+    dx = xs[1] - xs[0]
+    fx = eval_np(xs)
+    # full autocorrelation: support [-1, 1]; np.convolve(f, f) * dx
+    ac = np.convolve(fx, fx[::-1]) * dx  # length 2n+1, centered at index n
+    ts = (np.arange(2 * n + 1) - n) * dx
+    keep = ts >= 0.0
+    return ts[keep], ac[keep]
+
+
+# ---------------------------------------------------------------------------
+# rect: f(x) = 1 on [-1/2, 1/2].  ||f||_2 = 1 already.
+# ---------------------------------------------------------------------------
+
+def _rect_eval(x: Array) -> Array:
+    return jnp.where(jnp.abs(x) <= 0.5, 1.0, 0.0).astype(jnp.result_type(x, jnp.float32))
+
+
+def _rect_np(x: np.ndarray) -> np.ndarray:
+    return np.where(np.abs(x) <= 0.5, 1.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# tent: f(x) = sqrt(3) * (1 - 2|x|) on [-1/2, 1/2].
+#   ||f||_2^2 = 3 * 2*int_0^{1/2} (1-2x)^2 dx = 3 * (1/3) = 1.
+# ---------------------------------------------------------------------------
+
+_SQRT3 = float(np.sqrt(3.0))
+
+
+def _tent_eval(x: Array) -> Array:
+    ax = jnp.abs(x)
+    return jnp.where(ax <= 0.5, _SQRT3 * (1.0 - 2.0 * ax), 0.0)
+
+
+def _tent_np(x: np.ndarray) -> np.ndarray:
+    ax = np.abs(x)
+    return np.where(ax <= 0.5, _SQRT3 * (1.0 - 2.0 * ax), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# smooth: the paper's f(x) = c * (rect * rect_{1/4} * rect_{1/4})(2x).
+#
+# With G = rect * rect_{1/4} * rect_{1/4} (support [-3/4, 3/4]), for t = |2x|:
+#   G(t) = 1/16                      for 0   <= t <= 1/4
+#   G(t) = -t^2/2 + t/4 + 1/32       for 1/4 <= t <= 1/2
+#   G(t) = (3/4 - t)^2 / 2           for 1/2 <= t <= 3/4
+#   G(t) = 0                         otherwise.
+# f has support [-3/8, 3/8] ⊂ [-1/2, 1/2]; continuous first derivative,
+# bounded second derivative — exactly the smoothness class used for the
+# Matérn-5/2 comparison in the paper's Table 1.
+# ---------------------------------------------------------------------------
+
+def _smooth_G_np(t: np.ndarray) -> np.ndarray:
+    t = np.abs(t)
+    out = np.zeros_like(t, dtype=np.float64)
+    m1 = t <= 0.25
+    m2 = (t > 0.25) & (t <= 0.5)
+    m3 = (t > 0.5) & (t <= 0.75)
+    out[m1] = 1.0 / 16.0
+    out[m2] = -0.5 * t[m2] ** 2 + 0.25 * t[m2] + 1.0 / 32.0
+    out[m3] = 0.5 * (0.75 - t[m3]) ** 2
+    return out
+
+
+def _smooth_norm_const() -> float:
+    # ||G(2x)||_2^2 = int_0^{3/4} G(t)^2 dt ; computed with dense quadrature of
+    # the exact piecewise polynomial (error ~1e-12).
+    ts = np.linspace(0.0, 0.75, 200001)
+    val = np.trapezoid(_smooth_G_np(ts) ** 2, ts)
+    return float(1.0 / np.sqrt(val))
+
+
+_SMOOTH_C = _smooth_norm_const()
+
+
+def _smooth_eval(x: Array) -> Array:
+    t = jnp.abs(2.0 * x)
+    p1 = jnp.full_like(t, 1.0 / 16.0)
+    p2 = -0.5 * t * t + 0.25 * t + 1.0 / 32.0
+    p3 = 0.5 * (0.75 - t) ** 2
+    out = jnp.where(t <= 0.25, p1, jnp.where(t <= 0.5, p2, jnp.where(t <= 0.75, p3, 0.0)))
+    return _SMOOTH_C * out
+
+
+def _smooth_np(x: np.ndarray) -> np.ndarray:
+    return _SMOOTH_C * _smooth_G_np(2.0 * np.asarray(x, dtype=np.float64))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def _make(name: str, eval_fn, eval_np, f_inf: float, smoothness: int) -> BucketFn:
+    ax, ay = _tabulate_acorr(eval_np)
+    return BucketFn(name=name, eval_fn=eval_fn, f_inf=f_inf, smoothness=smoothness,
+                    acorr_x=ax, acorr_y=ay)
+
+
+RECT = _make("rect", _rect_eval, _rect_np, f_inf=1.0, smoothness=0)
+TENT = _make("tent", _tent_eval, _tent_np, f_inf=_SQRT3, smoothness=1)
+SMOOTH = _make("smooth", _smooth_eval, _smooth_np, f_inf=_SMOOTH_C / 16.0, smoothness=2)
+
+BUCKET_FNS = {"rect": RECT, "tent": TENT, "smooth": SMOOTH}
+
+
+def get_bucket_fn(name: str) -> BucketFn:
+    try:
+        return BUCKET_FNS[name]
+    except KeyError:
+        raise ValueError(f"unknown bucket fn {name!r}; have {sorted(BUCKET_FNS)}") from None

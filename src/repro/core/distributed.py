@@ -1,0 +1,292 @@
+"""Distributed WLSH-KRR: the paper's algorithm on a (pod, data, model) mesh.
+
+Parallelization (DESIGN.md §3/§6):
+
+* **points** are sharded over the data axes ('pod', 'data') — featurization is
+  embarrassingly parallel (the LSH parameters are replicated, tiny).
+* **instances** (the m independent WLSH estimators) are sharded over 'model' —
+  they only interact at the final (1/m)-average.
+* **bucket tables** are the only cross-shard object: each data shard scatters
+  its points' signed loads into a local (m_local, B) CountSketch table, a
+  single ``psum`` over the data axes merges them, and every shard reads its
+  own points' loads back out.  A dense table is psum-able; the paper's
+  per-bucket lists are not — that is the whole reason for the CountSketch
+  adaptation.
+* **CG** runs on sharded vectors; the two dot products per iteration are
+  scalar psums.
+
+Everything is expressed with ``jax.shard_map`` + ``jax.lax`` collectives; no
+host-side communication.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .bucket_fns import BucketFn
+from .lsh import GammaPDF, LSHParams, featurize, sample_lsh_params, \
+    slots_from_features
+
+Array = jnp.ndarray
+
+
+class KRRStepConfig(NamedTuple):
+    m: int                 # total WLSH instances (sharded over 'model')
+    table_size: int        # CountSketch table slots (power of two)
+    lam: float             # ridge regularizer
+    cg_iters: int          # fixed CG iteration count fused into the step
+    data_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+
+def _local_tables(slot: Array, contrib: Array, table_size: int) -> Array:
+    """(m_loc, n_loc) scatter-add -> (m_loc, B) local partial tables."""
+    m_loc = slot.shape[0]
+    rows = jnp.arange(m_loc, dtype=jnp.int32)[:, None]
+    tables = jnp.zeros((m_loc, table_size), jnp.float32)
+    return tables.at[rows, slot].add(contrib)
+
+
+def make_distributed_matvec(cfg: KRRStepConfig):
+    """Returns matvec(slot, sign, weight, beta_local) -> (K~ beta)_local.
+
+    Must be called inside shard_map: slot/sign/weight are the local
+    featurization (m_loc, n_loc); beta_local is (n_loc,).
+    """
+    def matvec(slot, sign, weight, beta_local):
+        contrib = beta_local[None, :] * weight * sign          # (m_loc, n_loc)
+        tables = _local_tables(slot, contrib, cfg.table_size)
+        tables = jax.lax.psum(tables, cfg.data_axes)           # merge data shards
+        rows = jnp.arange(slot.shape[0], dtype=jnp.int32)[:, None]
+        vals = tables[rows, slot] * sign * weight              # (m_loc, n_loc)
+        out = jnp.sum(vals, axis=0)                            # partial over m_loc
+        return jax.lax.psum(out, cfg.model_axis) / cfg.m
+    return matvec
+
+
+def _sharded_dot(a: Array, b: Array, axes: Sequence[str]) -> Array:
+    return jax.lax.psum(jnp.vdot(a, b), axes)
+
+
+def cg_iterations(matvec, y_local: Array, cfg: KRRStepConfig):
+    """Fixed-iteration CG on (K~ + lam I) beta = y, vectors data-sharded.
+    Returns (beta_local, resnorm)."""
+    lam = jnp.asarray(cfg.lam, jnp.float32)
+
+    def amv(v):
+        return matvec(v) + lam * v
+
+    x = jnp.zeros_like(y_local)
+    r = y_local - amv(x)
+    p = r
+    rs = _sharded_dot(r, r, cfg.data_axes)
+
+    def body(_, state):
+        x, r, p, rs = state
+        ap = amv(p)
+        alpha = rs / jnp.maximum(_sharded_dot(p, ap, cfg.data_axes), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = _sharded_dot(r, r, cfg.data_axes)
+        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
+        return x, r, p, rs_new
+
+    x, r, p, rs = jax.lax.fori_loop(0, cfg.cg_iters, body, (x, r, p, rs))
+    return x, jnp.sqrt(rs)
+
+
+def make_krr_step(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
+    """Builds the jit-able distributed KRR training step.
+
+    step(x, y, lsh) -> (beta, resnorm, tables)
+      x (n, d) sharded P(data_axes, None); y (n,) sharded P(data_axes)
+      lsh: LSHParams with leading m dim sharded P(model_axis)
+    The returned beta is sharded like y; tables (m, B) are the prediction
+    data structure (model-sharded, data-replicated).
+    """
+    data_spec = P(cfg.data_axes)
+    in_specs = (P(cfg.data_axes, None), data_spec,
+                LSHParams(w=P(cfg.model_axis, None), z=P(cfg.model_axis, None),
+                          r1=P(cfg.model_axis, None), r2=P(cfg.model_axis, None)))
+    out_specs = (data_spec, P(), P(cfg.model_axis, None))
+
+    matvec_builder = make_distributed_matvec(cfg)
+
+    @functools.partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    def step(x_local, y_local, lsh_local):
+        feats = featurize(lsh_local, f, x_local)
+        slot = slots_from_features(feats, cfg.table_size)
+        mv = lambda v: matvec_builder(slot, feats.sign, feats.weight, v)
+        beta_local, resnorm = cg_iterations(mv, y_local, cfg)
+        # final prediction tables for the solved beta
+        contrib = beta_local[None, :] * feats.weight * feats.sign
+        tables = _local_tables(slot, contrib, cfg.table_size)
+        tables = jax.lax.psum(tables, cfg.data_axes)
+        return beta_local, resnorm, tables
+
+    return step
+
+
+def make_krr_predict(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
+    """predict(x_test, lsh, tables) -> yhat; test points data-sharded."""
+    in_specs = (P(cfg.data_axes, None),
+                LSHParams(w=P(cfg.model_axis, None), z=P(cfg.model_axis, None),
+                          r1=P(cfg.model_axis, None), r2=P(cfg.model_axis, None)),
+                P(cfg.model_axis, None))
+    out_specs = P(cfg.data_axes)
+
+    @functools.partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    def predict(x_local, lsh_local, tables_local):
+        feats = featurize(lsh_local, f, x_local)
+        slot = slots_from_features(feats, cfg.table_size)
+        rows = jnp.arange(slot.shape[0], dtype=jnp.int32)[:, None]
+        vals = tables_local[rows, slot] * feats.sign * feats.weight
+        out = jnp.sum(vals, axis=0)
+        return jax.lax.psum(out, cfg.model_axis) / cfg.m
+
+    return predict
+
+
+def sample_sharded_lsh(key: jax.Array, m: int, d: int, pdf: GammaPDF,
+                       lengthscale: float = 1.0) -> LSHParams:
+    """Host-side LSH parameter sampling (tiny; replicate then shard)."""
+    return sample_lsh_params(key, m, d, pdf, lengthscale)
+
+
+# ---------------------------------------------------------------------------
+# BEYOND-PAPER: hash-join table mode
+# ---------------------------------------------------------------------------
+#
+# The psum of the (m_loc, B) CountSketch tables moves O(B) floats per CG
+# iteration per chip even though each shard contributes and reads only
+# O(n_local) nonzeros.  The hash join shards the TABLE over the data axes
+# (each shard owns B/n_shards slots) and routes only the nonzeros:
+#
+#   scatter:  (slot, contrib) pairs -> owner shard  (all_to_all, ~n_local f32)
+#   readout:  slot requests -> owner -> values back (all_to_all, precomputed
+#             routing: slots are fixed for the whole CG solve)
+#
+# Collective bytes per iteration drop from m_loc*B*4 to ~2*capacity*n_local*4
+# — 16x at the krr_4m cell (measured; see EXPERIMENTS.md §Perf).  Entries
+# beyond the per-destination capacity are dropped (probability ~0 for
+# capacity_factor >= 2 with uniform hashing; the estimator stays unbiased in
+# sign expectation, and tests compare against the exact table mode).
+
+class _Routing(NamedTuple):
+    bpos: Array        # (E,) destination bucket cell per entry (sentinel = NB)
+    sidx: Array        # (NB,) source entry per bucket cell (sentinel = E)
+    recv_packed: Array # (NB,) received (m*spp + slot%spp) ids after a2a
+    spp: int           # slots per shard
+    cap: int           # bucket capacity per destination shard
+
+
+def _build_routing(slot: Array, n_shards: int, table_size: int,
+                   data_axes, cap_factor: float) -> _Routing:
+    """Precompute the entry <-> bucket-cell maps and exchange slot requests.
+    slot (m_loc, n_loc); runs once per CG solve (slots are fixed)."""
+    m_loc, n_loc = slot.shape
+    e = m_loc * n_loc
+    spp = table_size // n_shards
+    cap = max(8, int(-(-e * cap_factor // n_shards) // 8 * 8))
+    nb = n_shards * cap
+
+    flat_slot = slot.reshape(-1)
+    owner = (flat_slot // spp).astype(jnp.int32)
+    packed = (jnp.arange(e, dtype=jnp.int32) // n_loc) * spp + \
+        (flat_slot % spp)                                     # m_idx*spp + mod
+
+    order = jnp.argsort(owner)
+    so, sidx_entries = owner[order], jnp.arange(e, dtype=jnp.int32)[order]
+    start = jnp.searchsorted(so, jnp.arange(n_shards, dtype=so.dtype))
+    pos = jnp.arange(e, dtype=jnp.int32) - start[so].astype(jnp.int32)
+    keep = pos < cap
+    cell = jnp.where(keep, so.astype(jnp.int32) * cap + pos, nb)
+
+    bpos = jnp.full((e,), nb, jnp.int32).at[sidx_entries].set(
+        jnp.where(keep, cell, nb), mode="drop")               # entry -> cell
+    sidx = jnp.full((nb,), e, jnp.int32).at[cell].set(sidx_entries,
+                                                      mode="drop")
+    # send each destination the packed ids it must serve (fixed per solve)
+    send_packed = jnp.full((nb,), -1, jnp.int32).at[cell].set(
+        packed[sidx_entries], mode="drop").reshape(n_shards, cap)
+    recv_packed = jax.lax.all_to_all(send_packed, data_axes, 0, 0,
+                                     tiled=True).reshape(-1)
+    return _Routing(bpos=bpos, sidx=sidx, recv_packed=recv_packed, spp=spp,
+                    cap=cap)
+
+
+def _hashjoin_matvec(rt: _Routing, sign: Array, weight: Array, m_total: int,
+                     m_loc: int, data_axes, model_axis, beta_local: Array,
+                     payload_dtype=jnp.float32):
+    """payload_dtype=bfloat16 halves bucket/wire bytes; the table scatter-add
+    still accumulates in f32, so only individual contributions are rounded
+    (CG tolerates the ~0.4% relative matvec noise; tests pin the accuracy)."""
+    n_shards = rt.recv_packed.shape[0] // rt.cap
+    nb = n_shards * rt.cap
+    contrib = (beta_local[None, :] * weight * sign).reshape(-1)   # (E,)
+    # route contributions to slot owners
+    send_c = jnp.zeros((nb,), payload_dtype).at[rt.bpos].set(
+        contrib.astype(payload_dtype), mode="drop")
+    recv_c = jax.lax.all_to_all(send_c.reshape(n_shards, rt.cap), data_axes,
+                                0, 0, tiled=True).reshape(-1)
+    # local scatter-add into MY table shard (m_loc, spp)
+    valid = rt.recv_packed >= 0
+    ids = jnp.where(valid, rt.recv_packed, m_loc * rt.spp)
+    table = jnp.zeros((m_loc * rt.spp,), jnp.float32).at[ids].add(
+        recv_c.astype(jnp.float32), mode="drop")
+    # serve the (fixed) readout requests and route values back
+    vals_serve = jnp.where(valid, table[jnp.clip(rt.recv_packed, 0)],
+                           0.0).astype(payload_dtype)
+    back = jax.lax.all_to_all(vals_serve.reshape(n_shards, rt.cap), data_axes,
+                              0, 0, tiled=True).reshape(-1)
+    vals = jnp.zeros((sign.size,), jnp.float32).at[rt.sidx].set(
+        back.astype(jnp.float32), mode="drop")
+    out = jnp.sum((vals.reshape(sign.shape)) * sign * weight, axis=0)
+    return jax.lax.psum(out, model_axis) / m_total
+
+
+def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
+                           cap_factor: float = 2.0,
+                           payload_dtype=jnp.float32):
+    """Hash-join variant of make_krr_step (same signature/semantics; returns
+    (beta, resnorm, table_shard) with the table left SHARDED over data)."""
+    n_shards = 1
+    for a in cfg.data_axes:
+        n_shards *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    data_spec = P(cfg.data_axes)
+    in_specs = (P(cfg.data_axes, None), data_spec,
+                LSHParams(w=P(cfg.model_axis, None), z=P(cfg.model_axis, None),
+                          r1=P(cfg.model_axis, None), r2=P(cfg.model_axis, None)))
+    out_specs = (data_spec, P(), P(cfg.model_axis, cfg.data_axes))
+
+    @functools.partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    def step(x_local, y_local, lsh_local):
+        feats = featurize(lsh_local, f, x_local)
+        slot = slots_from_features(feats, cfg.table_size)
+        m_loc = slot.shape[0]
+        rt = _build_routing(slot, n_shards, cfg.table_size, cfg.data_axes,
+                            cap_factor)
+        mv = lambda v: _hashjoin_matvec(rt, feats.sign, feats.weight, cfg.m,
+                                        m_loc, cfg.data_axes, cfg.model_axis,
+                                        v, payload_dtype)
+        beta_local, resnorm = cg_iterations(mv, y_local, cfg)
+        # final sharded prediction table for the solved beta
+        contrib = (beta_local[None, :] * feats.weight * feats.sign).reshape(-1)
+        send_c = jnp.zeros((n_shards * rt.cap,), jnp.float32).at[rt.bpos].set(
+            contrib, mode="drop")
+        recv_c = jax.lax.all_to_all(send_c.reshape(n_shards, rt.cap),
+                                    cfg.data_axes, 0, 0, tiled=True).reshape(-1)
+        valid = rt.recv_packed >= 0
+        ids = jnp.where(valid, rt.recv_packed, m_loc * rt.spp)
+        table = jnp.zeros((m_loc * rt.spp,), jnp.float32).at[ids].add(
+            recv_c, mode="drop")
+        return beta_local, resnorm, table.reshape(m_loc, rt.spp)
+
+    return step

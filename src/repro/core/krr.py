@@ -1,0 +1,130 @@
+"""Kernel ridge regression solvers.
+
+* ``cg_solve`` — jittable conjugate gradients on (A + lam I) with an arbitrary
+  matvec (the WLSH O(n) structure, an explicit matrix, or a distributed
+  shard_map matvec — CG only touches the operator through ``matvec``).
+* ``exact_krr_fit`` / ``exact_krr_predict`` — Cholesky baseline.
+* ``wlsh_krr_fit`` / ``wlsh_krr_predict`` — the paper's §4.2 algorithm: solve
+  (K̃ + lam I) beta = y with CG, predict via bucket loads.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .bucket_fns import BucketFn, get_bucket_fn
+from .kernels import WLSHKernelSpec
+from .lsh import Features, LSHParams, featurize, sample_lsh_params, slots_from_features
+from .wlsh import (TableIndex, build_exact_index, build_table_index, exact_matvec,
+                   table_loads, table_readout)
+
+Array = jnp.ndarray
+MatVec = Callable[[Array], Array]
+
+
+class CGResult(NamedTuple):
+    x: Array
+    iters: Array
+    resnorm: Array
+
+
+def cg_solve(matvec: MatVec, b: Array, lam: float, *, tol: float = 1e-6,
+             maxiter: int = 200, x0: Array | None = None) -> CGResult:
+    """Solve (A + lam I) x = b with conjugate gradients (A PSD via matvec)."""
+    lam = jnp.asarray(lam, b.dtype)
+
+    def amv(v):
+        return matvec(v) + lam * v
+
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - amv(x)
+    p = r
+    rs = jnp.vdot(r, r)
+    bnorm = jnp.sqrt(jnp.vdot(b, b))
+    thresh = (tol * bnorm) ** 2
+
+    def cond(state):
+        _, _, _, rs, it = state
+        return (rs > thresh) & (it < maxiter)
+
+    def body(state):
+        x, r, p, rs, it = state
+        ap = amv(p)
+        alpha = rs / jnp.maximum(jnp.vdot(p, ap), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.vdot(r, r)
+        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
+        return x, r, p, rs_new, it + 1
+
+    x, r, p, rs, it = jax.lax.while_loop(cond, body, (x, r, p, rs, jnp.asarray(0)))
+    return CGResult(x=x, iters=it, resnorm=jnp.sqrt(rs))
+
+
+# ---------------------------------------------------------------------------
+# exact KRR (dense baseline)
+# ---------------------------------------------------------------------------
+
+def exact_krr_fit(kernel_fn, x: Array, y: Array, lam: float) -> Array:
+    k = kernel_fn(x, x)
+    n = x.shape[0]
+    a = k + lam * jnp.eye(n, dtype=k.dtype)
+    return jnp.linalg.solve(a, y)
+
+
+def exact_krr_predict(kernel_fn, x_train: Array, beta: Array, x_test: Array) -> Array:
+    return kernel_fn(x_test, x_train) @ beta
+
+
+# ---------------------------------------------------------------------------
+# WLSH approximate KRR (paper §4.2)
+# ---------------------------------------------------------------------------
+
+class WLSHKRRModel(NamedTuple):
+    lsh: LSHParams
+    bucket_name: str
+    beta: Array           # (n,) CG solution of (K̃ + lam I) beta = y
+    tables: Array         # (m, B) bucket loads of beta — all prediction needs
+    table_size: int
+    cg_iters: Array
+    cg_resnorm: Array
+
+
+def wlsh_krr_fit(key: jax.Array, x: Array, y: Array, spec: WLSHKernelSpec, *,
+                 m: int, lam: float, mode: str = "table", table_size: int = 0,
+                 tol: float = 1e-5, maxiter: int = 400) -> WLSHKRRModel:
+    n, d = x.shape
+    if table_size <= 0:
+        # heuristic: ~4x points per instance keeps same-slot collisions rare
+        table_size = 1 << max(8, int(jnp.ceil(jnp.log2(4 * n))))
+    f = get_bucket_fn(spec.bucket.name)
+    lsh = sample_lsh_params(key, m, d, spec.pdf, spec.lengthscale)
+    feats = featurize(lsh, f, x)
+
+    if mode == "exact":
+        idx = build_exact_index(feats)
+        mv = lambda v: exact_matvec(idx, v)
+    else:
+        idx = build_table_index(feats, table_size)
+        mv = lambda v: table_readout(idx, table_loads(idx, v))
+
+    res = cg_solve(mv, y, lam, tol=tol, maxiter=maxiter)
+    # Prediction tables are always CountSketch (exact-mode key lookup for
+    # out-of-sample points would need a hash join; the signed table is unbiased
+    # and O(1) per query — see DESIGN.md §3).
+    tidx = build_table_index(feats, table_size)
+    tables = table_loads(tidx, res.x)
+    return WLSHKRRModel(lsh=lsh, bucket_name=spec.bucket.name, beta=res.x,
+                        tables=tables, table_size=table_size,
+                        cg_iters=res.iters, cg_resnorm=res.resnorm)
+
+
+def wlsh_krr_predict(model: WLSHKRRModel, x_test: Array) -> Array:
+    f = get_bucket_fn(model.bucket_name)
+    feats = featurize(model.lsh, f, x_test)
+    idx = TableIndex(slot=slots_from_features(feats, model.table_size),
+                     sign=feats.sign, weight=feats.weight,
+                     table_size=model.table_size)
+    return table_readout(idx, model.tables)

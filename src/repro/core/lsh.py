@@ -1,0 +1,125 @@
+"""The LSH family H (paper Def. 5) and WLSH featurization (Def. 6).
+
+An LSH function h_{w,z}(x)_l = round((x_l - z_l) / w_l) with w_l ~ p(·) iid and
+z ~ Unif[0, w].  We draw ``m`` independent instances at once.
+
+TPU adaptation (see DESIGN.md §3): bucket identity in Z^d is reduced to two
+independent 32-bit universal hashes (exact mode — pair-collision probability
+~ n^2 / 2^64) plus a CountSketch (slot, sign) pair for the distributed dense
+table mode.  All arithmetic is uint32 with wraparound (well-defined in XLA).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .bucket_fns import BucketFn
+
+Array = jnp.ndarray
+
+
+class GammaPDF(NamedTuple):
+    """p(w) = w^{shape-1} e^{-w/scale} / (Gamma(shape) scale^shape).
+
+    Paper's Laplace-kernel choice: shape=2, scale=1 (p(w) = w e^{-w}).
+    Paper's Table-1 smooth choice: shape=7, scale=1 (p(w) = w^6 e^{-w} / 6!).
+    """
+
+    shape: float = 2.0
+    scale: float = 1.0
+
+
+class LSHParams(NamedTuple):
+    """Parameters of m independent LSH instances over R^d."""
+
+    w: Array          # (m, d) bucket widths, w ~ Gamma(shape, scale)
+    z: Array          # (m, d) offsets, z ~ Unif[0, w]
+    r1: Array         # (m, d) uint32 universal-hash coefficients (key 1)
+    r2: Array         # (m, d) uint32 universal-hash coefficients (key 2)
+
+    @property
+    def m(self) -> int:
+        return self.w.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.w.shape[1]
+
+
+class Features(NamedTuple):
+    """Featurization of a point set under m LSH instances.
+
+    ``key1``/``key2`` identify the bucket (exact mode); ``slot``/``sign`` are the
+    CountSketch coordinates for the dense-table mode; ``weight`` is
+    f^{⊗d}(h(x) + (z - x)/w) — the WLSH weight of each point.
+    """
+
+    key1: Array    # (m, n) uint32
+    key2: Array    # (m, n) uint32
+    weight: Array  # (m, n) float32
+    sign: Array    # (m, n) float32 in {-1, +1}
+
+
+def sample_lsh_params(key: jax.Array, m: int, d: int, pdf: GammaPDF,
+                      lengthscale: float = 1.0) -> LSHParams:
+    """Draw m iid LSH instances.  ``lengthscale`` rescales the kernel: hashing
+    x/ell with widths w is identical to widths ell*w, so we fold it into w."""
+    kw, kz, k1, k2 = jax.random.split(key, 4)
+    w = jax.random.gamma(kw, pdf.shape, (m, d), dtype=jnp.float32) * pdf.scale
+    w = w * jnp.asarray(lengthscale, jnp.float32)
+    z = jax.random.uniform(kz, (m, d), dtype=jnp.float32) * w
+    # Odd multipliers give a 2^32-universal-ish linear hash of the int vector.
+    r1 = jax.random.randint(k1, (m, d), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32)
+    r2 = jax.random.randint(k2, (m, d), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32)
+    r1 = (r1.astype(jnp.uint32) << 1) | jnp.uint32(1)
+    r2 = (r2.astype(jnp.uint32) << 1) | jnp.uint32(1)
+    return LSHParams(w=w, z=z, r1=r1, r2=r2)
+
+
+def _fmix32(x: Array) -> Array:
+    """murmur3 finalizer — decorrelates low/high bits of the linear hash."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EB_CA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2_AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def featurize(params: LSHParams, f: BucketFn, x: Array) -> Features:
+    """Hash + weight a point set x (n, d) under all m instances.
+
+    Memory: O(m*n).  The Pallas kernel ``repro.kernels.featurize`` implements a
+    fused version of this function; this is the reference path.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(f"x must be (n, d), got {x.shape}")
+    n, d = x.shape
+    if d != params.d:
+        raise ValueError(f"dim mismatch: points {d} vs params {params.d}")
+
+    # t: (m, n, d)
+    t = (x[None, :, :] - params.z[:, None, :]) / params.w[:, None, :]
+    h = jnp.round(t)
+    u = h - t  # residual in [-1/2, 1/2]
+    weight = jnp.prod(f(u), axis=-1)  # (m, n)
+
+    hi = h.astype(jnp.int32).astype(jnp.uint32)
+    key1 = _fmix32(jnp.sum(hi * params.r1[:, None, :].astype(jnp.uint32), axis=-1,
+                           dtype=jnp.uint32))
+    key2 = _fmix32(jnp.sum(hi * params.r2[:, None, :].astype(jnp.uint32), axis=-1,
+                           dtype=jnp.uint32))
+    # CountSketch sign from a key2 bit that the slot (low bits of key1) ignores.
+    sign = 1.0 - 2.0 * (key2 >> 31).astype(jnp.float32)
+    return Features(key1=key1, key2=key2, weight=weight.astype(jnp.float32), sign=sign)
+
+
+def slots_from_features(feats: Features, table_size: int) -> Array:
+    """CountSketch slot per (instance, point): low bits of key1. table_size must
+    be a power of two."""
+    if table_size & (table_size - 1):
+        raise ValueError(f"table_size must be a power of 2, got {table_size}")
+    return (feats.key1 & jnp.uint32(table_size - 1)).astype(jnp.int32)

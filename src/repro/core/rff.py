@@ -1,0 +1,44 @@
+"""Random Fourier Features baseline (Rahimi & Recht 2007), as compared against
+in the paper's Table 2.
+
+Approximates the squared-exponential kernel exp(-||x-y||^2 / ell^2) with
+phi(x) = sqrt(2/D) cos(W x + b), W ~ N(0, 2/ell^2 I), b ~ Unif[0, 2pi].
+KRR is solved in the primal: (Phi^T Phi + lam I_D) alpha = Phi^T y  — O(n D^2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class RFFModel(NamedTuple):
+    w: Array      # (d, D)
+    b: Array      # (D,)
+    alpha: Array  # (D,)
+
+
+def rff_features(w: Array, b: Array, x: Array) -> Array:
+    d_feat = w.shape[1]
+    return jnp.sqrt(2.0 / d_feat) * jnp.cos(x @ w + b)
+
+
+def rff_krr_fit(key: jax.Array, x: Array, y: Array, *, n_features: int,
+                lam: float, lengthscale: float = 1.0) -> RFFModel:
+    n, d = x.shape
+    kw, kb = jax.random.split(key)
+    # Var chosen so E[phi(x)phi(y)] = exp(-||x-y||^2/ell^2):
+    # k(delta)=exp(-||delta||^2/ell^2) has spectral density N(0, 2/ell^2).
+    w = jax.random.normal(kw, (d, n_features)) * jnp.sqrt(2.0) / lengthscale
+    b = jax.random.uniform(kb, (n_features,), maxval=2.0 * jnp.pi)
+    phi = rff_features(w, b, x)  # (n, D)
+    gram = phi.T @ phi + lam * jnp.eye(n_features, dtype=phi.dtype)
+    alpha = jnp.linalg.solve(gram, phi.T @ y)
+    return RFFModel(w=w, b=b, alpha=alpha)
+
+
+def rff_krr_predict(model: RFFModel, x_test: Array) -> Array:
+    return rff_features(model.w, model.b, x_test) @ model.alpha

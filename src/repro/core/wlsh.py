@@ -1,0 +1,153 @@
+"""WLSH estimator (paper Def. 6) — kernel matvec data structures.
+
+Two execution modes:
+
+* **exact** — groups equal buckets by lexicographic sort of the two 32-bit keys
+  and uses ``segment_sum`` for the bucket loads.  This is the paper's estimator
+  verbatim (up to 2^-64 hash collisions) and is the validation / small-scale
+  path.
+
+* **table** (CountSketch) — scatters signed loads into a dense table of size B.
+  Cross-bucket collisions are sign-randomized, so the estimator stays unbiased
+  and the implied kernel matrix (S Phi)(S Phi)^T stays PSD.  The dense table is
+  ``psum``-able across data shards, which is what makes the method run on a
+  512-chip mesh (see core/distributed.py).
+
+Both modes expose ``matvec`` computing (1/m) sum_s K̃^s beta in O(n·m).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .bucket_fns import BucketFn
+from .lsh import Features, LSHParams, featurize, slots_from_features
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# exact mode: sort + segment-sum
+# ---------------------------------------------------------------------------
+
+class ExactIndex(NamedTuple):
+    """Per-instance sorted bucket structure for a fixed point set."""
+
+    perm: Array      # (m, n) int32 — sort order by (key1, key2)
+    seg_id: Array    # (m, n) int32 — bucket id of sorted position (0..n-1)
+    weight: Array    # (m, n) float32 — WLSH weights (unsorted order)
+
+
+def build_exact_index(feats: Features) -> ExactIndex:
+    def one(key1, key2):
+        # lexsort: secondary key first.
+        perm = jnp.lexsort((key2, key1))
+        k1s, k2s = key1[perm], key2[perm]
+        new_seg = jnp.concatenate([
+            jnp.zeros((1,), jnp.int32),
+            ((k1s[1:] != k1s[:-1]) | (k2s[1:] != k2s[:-1])).astype(jnp.int32),
+        ])
+        seg_id = jnp.cumsum(new_seg)
+        return perm.astype(jnp.int32), seg_id.astype(jnp.int32)
+
+    perm, seg_id = jax.vmap(one)(feats.key1, feats.key2)
+    return ExactIndex(perm=perm, seg_id=seg_id, weight=feats.weight)
+
+
+def exact_matvec(index: ExactIndex, beta: Array) -> Array:
+    """(1/m) sum_s K̃^s beta — O(m n) (after the one-off O(m n log n) sort)."""
+    n = beta.shape[0]
+
+    def one(perm, seg_id, weight):
+        contrib = (beta * weight)[perm]
+        loads = jax.ops.segment_sum(contrib, seg_id, num_segments=n)
+        out_sorted = loads[seg_id] * weight[perm]
+        return jnp.zeros_like(beta).at[perm].set(out_sorted)
+
+    outs = jax.vmap(one)(index.perm, index.seg_id, index.weight)
+    return jnp.mean(outs, axis=0)
+
+
+def exact_kernel_matrix(feats: Features) -> Array:
+    """Explicit K̃ = (1/m) sum_s K̃^s — O(m n^2); tests/small-n only."""
+    eq = (feats.key1[:, :, None] == feats.key1[:, None, :]) & \
+         (feats.key2[:, :, None] == feats.key2[:, None, :])
+    ww = feats.weight[:, :, None] * feats.weight[:, None, :]
+    return jnp.mean(eq * ww, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# table (CountSketch) mode
+# ---------------------------------------------------------------------------
+
+class TableIndex(NamedTuple):
+    slot: Array    # (m, n) int32 in [0, B)
+    sign: Array    # (m, n) float32
+    weight: Array  # (m, n) float32
+    table_size: int
+
+
+def build_table_index(feats: Features, table_size: int) -> TableIndex:
+    return TableIndex(slot=slots_from_features(feats, table_size),
+                      sign=feats.sign, weight=feats.weight, table_size=table_size)
+
+
+def table_loads(index: TableIndex, beta: Array) -> Array:
+    """Bucket-load tables for all m instances: (m, B)."""
+    contrib = beta[None, :] * index.weight * index.sign  # (m, n)
+    m = index.slot.shape[0]
+    tables = jnp.zeros((m, index.table_size), contrib.dtype)
+    rows = jnp.arange(m, dtype=jnp.int32)[:, None]
+    return tables.at[rows, index.slot].add(contrib)
+
+
+def table_readout(index: TableIndex, tables: Array) -> Array:
+    """Per-point readout of the (possibly psum-merged) tables: (1/m) sum_s ..."""
+    rows = jnp.arange(index.slot.shape[0], dtype=jnp.int32)[:, None]
+    vals = tables[rows, index.slot] * index.sign * index.weight
+    return jnp.mean(vals, axis=0)
+
+
+def table_matvec(index: TableIndex, beta: Array) -> Array:
+    return table_readout(index, table_loads(index, beta))
+
+
+def table_kernel_matrix(index: TableIndex) -> Array:
+    """Explicit CountSketch kernel matrix (tests only): PSD by construction."""
+    eq = index.slot[:, :, None] == index.slot[:, None, :]
+    ss = index.sign[:, :, None] * index.sign[:, None, :]
+    ww = index.weight[:, :, None] * index.weight[:, None, :]
+    return jnp.mean(eq * ss * ww, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# high-level estimator façade
+# ---------------------------------------------------------------------------
+
+class WLSHEstimator(NamedTuple):
+    """m independent WLSH instances bound to a bucket fn; the public API."""
+
+    params: LSHParams
+    bucket_name: str
+    mode: str            # 'exact' | 'table'
+    table_size: int
+
+    def featurize(self, f: BucketFn, x: Array) -> Features:
+        return featurize(self.params, f, x)
+
+
+def make_matvec(feats: Features, mode: str = "exact", table_size: int = 0):
+    """Returns (matvec_fn, index). matvec_fn is jit-compatible and closes over
+    the prebuilt index (the paper's O(dn)-preprocessing / O(n)-matvec split)."""
+    if mode == "exact":
+        idx = build_exact_index(feats)
+        return functools.partial(exact_matvec, idx), idx
+    elif mode == "table":
+        if table_size <= 0:
+            raise ValueError("table mode needs table_size > 0")
+        idx = build_table_index(feats, table_size)
+        return functools.partial(table_matvec, idx), idx
+    raise ValueError(f"unknown mode {mode!r}")

@@ -1,0 +1,2 @@
+from .tokens import synthetic_lm_batch, token_stream
+from .regression import REGRESSION_DATASETS, make_regression_dataset

@@ -1,0 +1,343 @@
+"""Roofline analysis from compiled HLO (no hardware required).
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any
+program with a scan (every model here: the layer stack, microbatching, CG
+iterations) under-reports FLOPs and bytes by the trip count.  This module
+parses the optimized HLO text instead:
+
+* builds the computation call graph (entry -> while bodies / fusions / calls)
+  with multiplicities from ``known_trip_count`` backend configs;
+* FLOPs: every ``dot`` op contributes 2 * |output| * |contraction| * trips;
+* HBM bytes: operand + result bytes of top-level memory ops (fusions, dots,
+  copies, dynamic slices, collectives) * trips — fusion-internal ops never
+  touch HBM and are excluded;
+* collective bytes: moved payload per op class * trips.
+
+Terms (per step, per chip) against TPU v5e constants:
+
+    compute    = FLOPs / (chips * 197e12)        [bf16 MXU peak]
+    memory     = bytes / (chips * 819e9)         [HBM bandwidth]
+    collective = coll_bytes / (chips * 50e9)     [per-link ICI]
+
+The dominant term approximates the step's lower-bound latency; the roofline
+fraction reported for optimization is model_flops_time / dominant_term.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e, per chip
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# type string may be a long tuple with /*index=N*/ comments (they contain '='),
+# so match lazily up to the first "opcode(" token.
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s?([\w\-]+)\(")
+_HEADER_NAME_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose operands/results move through HBM at computation top level
+_MEM_OPS = {"fusion", "dot", "copy", "dynamic-slice", "dynamic-update-slice",
+            "convolution", "gather", "scatter", "transpose", "reshape",
+            "broadcast", "convert", "reduce", "concatenate", "slice", "sort",
+            "iota", "pad", "select-and-scatter", "bitcast-convert"} | \
+    set(COLLECTIVES) | {c + "-start" for c in COLLECTIVES}
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.groups()
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: list = field(default_factory=list)
+
+
+def _parse_module(hlo_text: str):
+    """Returns (computations dict, entry name, name->type symbol table)."""
+    comps: dict[str, _Computation] = {}
+    symbols: dict[str, str] = {}
+    entry = None
+    cur: _Computation | None = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # computation headers: "%name (args...) -> type {" at zero indent;
+        # robust to tuple-typed params (nested parens break naive regexes)
+        if (stripped.endswith("{") and "->" in stripped and "=" not in
+                stripped.split("(")[0] and not line.startswith(" ")):
+            hm = _HEADER_NAME_RE.match(stripped)
+            if hm:
+                is_entry, name = hm.groups()
+                cur = _Computation(name=name)
+                comps[name] = cur
+                if is_entry:
+                    entry = name
+                continue
+        dm = _DEF_RE.match(line)
+        if dm and cur is not None:
+            name, type_str, opcode = dm.groups()
+            symbols[name] = type_str.strip()
+            cur.ops.append(_Op(name=name, type_str=type_str.strip(),
+                               opcode=opcode, line=line))
+    return comps, entry, symbols
+
+
+def _called_comps(op: _Op) -> list[tuple[str, float]]:
+    """(computation, multiplicity factor) pairs an op invokes."""
+    out = []
+    if op.opcode == "while":
+        trip = 1.0
+        mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.line)
+        if mt:
+            trip = float(mt.group(1))
+        mb = re.search(r"body=%?([\w.\-]+)", op.line)
+        mc = re.search(r"condition=%?([\w.\-]+)", op.line)
+        if mb:
+            out.append((mb.group(1), trip))
+        if mc:
+            out.append((mc.group(1), trip + 1))
+    else:
+        for attr in ("calls", "to_apply"):
+            m = re.search(attr + r"=%?([\w.\-]+)", op.line)
+            if m:
+                out.append((m.group(1), 1.0))
+        m = re.search(r"branch_computations=\{([^}]*)\}", op.line)
+        if m:
+            for b in m.group(1).split(","):
+                out.append((b.strip().lstrip("%"), 1.0))
+    return out
+
+
+def _dot_flops(op: _Op, symbols: dict[str, str]) -> float:
+    outs = _shape_dims(op.type_str)
+    if not outs:
+        return 0.0
+    out_elems = 1
+    for d in outs[0][1]:
+        out_elems *= d
+    m = re.search(r"dot\(%?([\w.\-]+)", op.line)
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contraction = 1
+    if m and mc and mc.group(1):
+        lhs_type = symbols.get(m.group(1), "")
+        dims = _shape_dims(lhs_type)
+        if dims:
+            shape = dims[0][1]
+            for idx in mc.group(1).split(","):
+                i = int(idx)
+                if i < len(shape):
+                    contraction *= shape[i]
+    return 2.0 * out_elems * contraction
+
+
+def _collective_kind(opcode: str) -> str | None:
+    base = opcode[:-6] if opcode.endswith("-start") else opcode
+    return base if base in COLLECTIVES else None
+
+
+def _collective_bytes(op: _Op, symbols: dict[str, str], kind: str) -> int:
+    """Payload bytes moved by one execution of the collective (per device)."""
+    if kind == "all-gather":
+        return _shape_bytes(op.type_str)            # result = gathered tensor
+    # operand bytes (all-reduce/reduce-scatter/all-to-all/permute)
+    m = re.search(r"\(\s*%?([\w.\-]+)", op.line[op.line.find(op.opcode):])
+    if m and m.group(1) in symbols:
+        return _shape_bytes(symbols[m.group(1)])
+    return _shape_bytes(op.type_str)
+
+
+@dataclass
+class HLOStats:
+    flops: float = 0.0                # per-device dot FLOPs, trip-weighted
+    mem_bytes: float = 0.0            # per-device HBM traffic estimate
+    collective_bytes: float = 0.0     # per-device collective payload
+    collective_counts: dict = field(default_factory=dict)
+    collective_bytes_by_op: dict = field(default_factory=dict)
+    xla_flops: float = 0.0            # cost_analysis flops (no trip counts)
+    xla_bytes: float = 0.0
+
+
+def analyze_hlo_text(hlo_text: str) -> HLOStats:
+    comps, entry, symbols = _parse_module(hlo_text)
+    if entry is None:
+        return HLOStats()
+
+    # multiplicity of each computation (BFS over the call graph)
+    mult: dict[str, float] = {entry: 1.0}
+    fusion_bodies: set[str] = set()
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        cm = mult.get(cname, 0.0)
+        for op in comps.get(cname, _Computation(cname)).ops:
+            for callee, factor in _called_comps(op):
+                if callee not in comps:
+                    continue
+                mult[callee] = mult.get(callee, 0.0) + cm * factor
+                if op.opcode == "fusion":
+                    fusion_bodies.add(callee)
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    stats = HLOStats()
+    for cname, comp in comps.items():
+        cm = mult.get(cname, 0.0)
+        if cm == 0.0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for op in comp.ops:
+            if op.opcode == "dot":
+                stats.flops += cm * _dot_flops(op, symbols)
+            kind = _collective_kind(op.opcode)
+            if kind is not None and not op.opcode.endswith("-done"):
+                nbytes = _collective_bytes(op, symbols, kind)
+                stats.collective_counts[kind] = \
+                    stats.collective_counts.get(kind, 0) + 1
+                stats.collective_bytes_by_op[kind] = \
+                    stats.collective_bytes_by_op.get(kind, 0.0) + cm * nbytes
+                stats.collective_bytes += cm * nbytes
+            if not in_fusion and op.opcode in _MEM_OPS:
+                nbytes = _shape_bytes(op.type_str)
+                # add operand bytes (resolve names, first 6 operands)
+                for mm in re.finditer(r"%([\w.\-]+)", op.line.split("metadata")[0]):
+                    if mm.group(1) == op.name:
+                        continue
+                    t = symbols.get(mm.group(1))
+                    if t:
+                        nbytes += _shape_bytes(t)
+                stats.mem_bytes += cm * nbytes
+    return stats
+
+
+@dataclass
+class Roofline:
+    name: str
+    chips: int
+    hlo_flops: float                 # whole-program FLOPs (all chips)
+    hbm_bytes: float                 # whole-program HBM bytes (all chips)
+    collective_bytes: float          # per-chip collective payload bytes
+    model_flops: float               # useful 6*N*D (or analog) FLOPs
+    bytes_per_device: float = 0.0    # peak allocation from memory_analysis
+    stats: HLOStats | None = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_dominant(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_frac(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """model-FLOPs ideal time / dominant-term time (MFU-like, derived)."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.t_dominant if self.t_dominant else 0.0
+
+    def row(self) -> dict:
+        return {
+            "name": self.name, "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "bytes_per_device": self.bytes_per_device,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flop_frac": self.useful_flop_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def analyze_compiled(name: str, compiled, *, chips: int,
+                     model_flops: float) -> Roofline:
+    """Build a Roofline from a jax Compiled object (SPMD per-device module)."""
+    stats = analyze_hlo_text(compiled.as_text())
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        stats.xla_flops = float(cost.get("flops", 0.0))
+        stats.xla_bytes = float(cost.get("bytes accessed", 0.0))
+    except Exception:
+        pass
+    peak = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(getattr(ma, "temp_size_in_bytes", 0) +
+                     getattr(ma, "argument_size_in_bytes", 0) +
+                     getattr(ma, "output_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(name=name, chips=chips, hlo_flops=stats.flops * chips,
+                    hbm_bytes=stats.mem_bytes * chips,
+                    collective_bytes=stats.collective_bytes,
+                    model_flops=model_flops, bytes_per_device=peak,
+                    stats=stats)
+
+
+def model_flops_train(n_params: int, tokens: int) -> float:
+    """6*N*D for a dense decoder train step (fwd 2ND + bwd 4ND)."""
+    return 6.0 * n_params * tokens
+
+
+def model_flops_decode(n_params_active: int, batch: int) -> float:
+    """2*N per generated token (matmul-dominated decode), times batch."""
+    return 2.0 * n_params_active * batch

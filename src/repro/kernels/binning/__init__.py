@@ -1,0 +1,3 @@
+from .ops import table_matvec_op
+from .kernel import bin_gather_pallas, bin_scatter_pallas
+from .ref import bin_gather_ref, bin_scatter_ref

@@ -1,0 +1,104 @@
+"""Pallas TPU kernels: CountSketch bucket scatter/gather as one-hot MXU matmuls.
+
+TPUs have no scatter atomics; the paper's bucket-load accumulation
+(B_j += beta_i * weight_i) is re-expressed as a systolic matmul:
+
+    table_tile (1, BT) += contrib_block (1, BN) @ onehot(slot - tile_lo) (BN, BT)
+
+and the readout gather (out_i = table[slot_i]) as the transposed product.
+The one-hot matrices never touch HBM — they are built in VMEM per grid step
+from an iota compare.  Grid iterates the reduction dimension (point blocks for
+scatter, table tiles for gather) in the trailing, sequential position so the
+output tile accumulates in place across steps (standard Pallas revisiting
+pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 1024       # points per block
+BLOCK_T = 512        # table slots per tile
+
+
+def _scatter_body(slot_ref, contrib_ref, table_ref):
+    nb = pl.program_id(2)
+
+    @pl.when(nb == 0)
+    def _init():
+        table_ref[...] = jnp.zeros_like(table_ref)
+
+    bt = table_ref.shape[1]
+    tile_lo = pl.program_id(1) * bt
+    slot = slot_ref[...][0]                                  # (bn,) int32
+    contrib = contrib_ref[...]                               # (1, bn) f32
+    col = jax.lax.broadcasted_iota(jnp.int32, (slot.shape[0], bt), 1)
+    onehot = (slot[:, None] - tile_lo == col).astype(jnp.float32)
+    table_ref[...] += jax.lax.dot_general(
+        contrib, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _gather_body(slot_ref, table_ref, out_ref):
+    tb = pl.program_id(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bt = table_ref.shape[1]
+    tile_lo = tb * bt
+    slot = slot_ref[...][0]                                  # (bn,)
+    col = jax.lax.broadcasted_iota(jnp.int32, (slot.shape[0], bt), 1)
+    onehot = (slot[:, None] - tile_lo == col).astype(jnp.float32)
+    # out (1, bn) += table (1, bt) @ onehot^T (bt, bn)
+    out_ref[...] += jax.lax.dot_general(
+        table_ref[...], onehot, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("table_size", "interpret",
+                                             "block_n", "block_t"))
+def bin_scatter_pallas(slot, contrib, *, table_size: int, interpret: bool = True,
+                       block_n: int = BLOCK_N, block_t: int = BLOCK_T):
+    """slot (m, n) int32 in [0, table_size); contrib (m, n) f32.
+    Returns tables (m, table_size) f32 with tables[s, j] = sum_{slot==j} contrib."""
+    m, n = slot.shape
+    bn, bt = min(block_n, n), min(block_t, table_size)
+    if n % bn or table_size % bt:
+        raise ValueError("n and table_size must divide their block sizes")
+    grid = (m, table_size // bt, n // bn)
+    return pl.pallas_call(
+        _scatter_body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bn), lambda i, t, j: (i, j)),
+                  pl.BlockSpec((1, bn), lambda i, t, j: (i, j))],
+        out_specs=pl.BlockSpec((1, bt), lambda i, t, j: (i, t)),
+        out_shape=jax.ShapeDtypeStruct((m, table_size), jnp.float32),
+        interpret=interpret,
+    )(slot, contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n", "block_t"))
+def bin_gather_pallas(slot, tables, *, interpret: bool = True,
+                      block_n: int = BLOCK_N, block_t: int = BLOCK_T):
+    """slot (m, n) int32; tables (m, B) f32.  Returns out (m, n) f32 with
+    out[s, i] = tables[s, slot[s, i]]."""
+    m, n = slot.shape
+    table_size = tables.shape[1]
+    bn, bt = min(block_n, n), min(block_t, table_size)
+    if n % bn or table_size % bt:
+        raise ValueError("n and table_size must divide their block sizes")
+    grid = (m, n // bn, table_size // bt)
+    return pl.pallas_call(
+        _gather_body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bn), lambda i, j, t: (i, j)),
+                  pl.BlockSpec((1, bt), lambda i, j, t: (i, t))],
+        out_specs=pl.BlockSpec((1, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(slot, tables)

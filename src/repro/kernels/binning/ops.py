@@ -1,0 +1,36 @@
+"""Public ops: WLSH table matvec built on the binning kernels.
+
+``table_matvec_op`` is the kernel-backed equivalent of
+repro.core.wlsh.table_matvec: scatter the signed, weighted beta into the
+CountSketch tables, then gather every point's bucket load back out.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.wlsh import TableIndex
+from .kernel import bin_gather_pallas, bin_scatter_pallas
+from .ref import bin_gather_ref, bin_scatter_ref
+
+
+def _pad_points(a, bn: int, value=0):
+    n = a.shape[1]
+    np_ = -(-n // bn) * bn
+    return jnp.pad(a, ((0, 0), (0, np_ - n)), constant_values=value), n
+
+
+def table_matvec_op(index: TableIndex, beta, *, use_kernel: bool = True,
+                    interpret: bool = True):
+    contrib = (beta[None, :] * index.weight * index.sign).astype(jnp.float32)
+    if not use_kernel:
+        tables = bin_scatter_ref(index.slot, contrib, table_size=index.table_size)
+        vals = bin_gather_ref(index.slot, tables)
+        return jnp.mean(vals * index.sign * index.weight, axis=0)
+    bn = min(1024, max(128, index.slot.shape[1]))
+    # pad points into an always-zero overflow slot so they cannot perturb loads
+    slot_p, n = _pad_points(index.slot, bn, value=0)
+    contrib_p, _ = _pad_points(contrib, bn, value=0.0)
+    tables = bin_scatter_pallas(slot_p, contrib_p, table_size=index.table_size,
+                                interpret=interpret, block_n=bn)
+    vals = bin_gather_pallas(slot_p, tables, interpret=interpret, block_n=bn)
+    return jnp.mean(vals[:, :n] * index.sign * index.weight, axis=0)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for the binning kernels (CountSketch table mode of
+repro.core.wlsh, restated on raw slot/contrib arrays)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bin_scatter_ref(slot, contrib, *, table_size: int):
+    m = slot.shape[0]
+    rows = jnp.arange(m, dtype=jnp.int32)[:, None]
+    tables = jnp.zeros((m, table_size), jnp.float32)
+    return tables.at[rows, slot].add(contrib.astype(jnp.float32))
+
+
+def bin_gather_ref(slot, tables):
+    rows = jnp.arange(slot.shape[0], dtype=jnp.int32)[:, None]
+    return tables[rows, slot]

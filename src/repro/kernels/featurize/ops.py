@@ -1,0 +1,28 @@
+"""Public op: WLSH featurization with automatic padding + kernel/ref dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.bucket_fns import BucketFn
+from ...core.lsh import Features, LSHParams
+from .kernel import BLOCK_N, featurize_pallas
+from .ref import featurize_ref
+
+
+def featurize_op(params: LSHParams, f: BucketFn, x, *, use_kernel: bool = True,
+                 interpret: bool = True) -> Features:
+    """Drop-in replacement for repro.core.lsh.featurize backed by the Pallas
+    kernel.  Points are padded to the kernel block size and trimmed after."""
+    if not use_kernel:
+        k1, k2, wt, sg = featurize_ref(x, params.w, params.z, params.r1,
+                                       params.r2, f=f)
+        return Features(key1=k1, key2=k2, weight=wt, sign=sg)
+    n = x.shape[0]
+    bn = min(BLOCK_N, max(128, -(-n // 128) * 128))
+    np_ = -(-n // bn) * bn
+    xp = jnp.pad(jnp.asarray(x, jnp.float32), ((0, np_ - n), (0, 0)))
+    k1, k2, wt, sg = featurize_pallas(xp, params.w, params.z, params.r1,
+                                      params.r2, f=f, interpret=interpret,
+                                      block_n=bn)
+    return Features(key1=k1[:, :n], key2=k2[:, :n], weight=wt[:, :n],
+                    sign=sg[:, :n])

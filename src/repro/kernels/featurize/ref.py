@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused featurize kernel — delegates to the reference
+implementation in repro.core.lsh (the paper's Def. 6 verbatim)."""
+from __future__ import annotations
+
+from ...core.bucket_fns import BucketFn
+from ...core.lsh import LSHParams, featurize
+
+
+def featurize_ref(x, w, z, r1, r2, *, f: BucketFn):
+    feats = featurize(LSHParams(w=w, z=z, r1=r1, r2=r2), f, x)
+    return feats.key1, feats.key2, feats.weight, feats.sign

@@ -1,0 +1,3 @@
+from .ops import decode_attend_op
+from .kernel import flash_decode_pallas
+from .ref import flash_decode_ref

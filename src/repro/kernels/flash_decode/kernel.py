@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: flash decode attention (one query token vs a long KV
+cache, online softmax over KV blocks).
+
+serve_step's bottleneck at decode_32k/long_500k is reading the KV cache; the
+jnp path materializes (B, H, 1, T) scores in HBM.  This kernel streams KV
+blocks through VMEM keeping only the (G, D) accumulator and (G, 1) running
+max/sum statistics per (batch, kv-head) — the classic flash-decoding scheme
+adapted to GQA: all G = H/KV query heads that share a kv head are processed
+together, so each cache block is read exactly once.
+
+Grid: (B, KV, T / BLOCK_T); the trailing grid axis is sequential, carrying the
+online-softmax state in VMEM scratch across KV blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_T = 512
+NEG_INF = -1e30
+
+
+def _decode_body(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref):
+    tb = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...][0, 0]                                    # (G, D) f32
+    k = k_ref[...][0, :, 0, :]                              # (BT, D)
+    v = v_ref[...][0, :, 0, :]                              # (BT, D)
+    valid = valid_ref[...][0]                               # (BT,) int32
+
+    d = q.shape[-1]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (1.0 / (d ** 0.5))                              # (G, BT)
+    s = jnp.where(valid[None, :] > 0, s, NEG_INF)
+
+    m_prev = m_ref[...]                                     # (G, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)                                  # (G, BT)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(tb == nt - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30))[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_t"))
+def flash_decode_pallas(q, k, v, valid, *, interpret: bool = True,
+                        block_t: int = BLOCK_T):
+    """q (B, KV, G, D) f32; k, v (B, T, KV, D); valid (B, T) int32 (1 = row
+    holds a real key).  Returns out (B, KV, G, D) f32."""
+    b, kv, g, d = q.shape
+    t = k.shape[1]
+    bt = min(block_t, t)
+    if t % bt:
+        raise ValueError(f"T={t} must be a multiple of block_t={bt}")
+    grid = (b, kv, t // bt)
+    return pl.pallas_call(
+        _decode_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, h, tb: (i, h, 0, 0)),
+            pl.BlockSpec((1, bt, 1, d), lambda i, h, tb: (i, tb, h, 0)),
+            pl.BlockSpec((1, bt, 1, d), lambda i, h, tb: (i, tb, h, 0)),
+            pl.BlockSpec((1, bt), lambda i, h, tb: (i, tb)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, h, tb: (i, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),    # running max
+            pltpu.VMEM((g, 1), jnp.float32),    # running sum
+            pltpu.VMEM((g, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q.astype(jnp.float32), k, v, valid.astype(jnp.int32))

@@ -1,0 +1,21 @@
+"""Public op: GQA flash decode with (B, H, D) <-> (B, KV, G, D) plumbing."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import flash_decode_pallas
+from .ref import flash_decode_ref
+
+
+def decode_attend_op(q, cache_k, cache_v, valid, *, use_kernel: bool = True,
+                     interpret: bool = True):
+    """q (B, H, D); cache_{k,v} (B, T, KV, D); valid (B, T) -> (B, H, D).
+    H must be a multiple of KV (GQA)."""
+    b, h, d = q.shape
+    kv = cache_k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d)
+    fn = flash_decode_pallas if use_kernel else flash_decode_ref
+    kwargs = {"interpret": interpret} if use_kernel else {}
+    out = fn(qg, cache_k, cache_v, valid, **kwargs)
+    return out.reshape(b, h, d)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for flash decode: masked softmax over the full cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_decode_ref(q, k, v, valid):
+    """q (B, KV, G, D); k, v (B, T, KV, D); valid (B, T).  -> (B, KV, G, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    s = jnp.where(valid[:, None, None, :] > 0, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))

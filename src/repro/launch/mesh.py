@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device state
+(the dry-run must set XLA_FLAGS before the first device query; smoke tests
+must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256-chip pod ('data', 'model'), or 2 pods = 512 chips with a
+    leading 'pod' axis.  Batch shards over ('pod', 'data'); tensor/expert
+    parallelism over 'model'; FSDP parameter sharding over 'data' (intra-pod
+    all-gathers stay on ICI, only gradient reductions cross the pod axis)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Tiny mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    data = n // model_parallel
+    return jax.make_mesh((data, model_parallel), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,83 @@
+"""Batched serving driver: prefill a prompt batch, then decode tokens
+autoregressively against the ring-buffer caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
+        --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import registry
+from ..models import model
+from .steps import make_decode_step, make_prefill_step
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = registry.smoke_config(args.arch) if args.smoke else \
+        registry.get_config(args.arch)
+    dtype = jnp.float32
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(cfg, key, dtype)
+    max_len = args.prompt_len + args.gen
+
+    prefill = jax.jit(make_prefill_step(cfg, max_cache_len=max_len,
+                                        dtype=dtype))
+    decode = jax.jit(make_decode_step(cfg, dtype=dtype))
+
+    batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len),
+                                          0, cfg.vocab_size)}
+    if cfg.encoder is not None:
+        batch["frames"] = 0.02 * jax.random.normal(
+            key, (args.batch, cfg.encoder.n_frames, cfg.d_model), dtype)
+    elif cfg.cross_attn_source_len:
+        batch["patches"] = 0.02 * jax.random.normal(
+            key, (args.batch, cfg.cross_attn_source_len, cfg.d_model), dtype)
+
+    t0 = time.time()
+    logits, cache, pos = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    def sample(lg, k):
+        if args.temperature <= 0:
+            return jnp.argmax(lg, -1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / args.temperature).astype(jnp.int32)
+
+    tok = sample(logits, key)[:, None]
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok, pos)
+        tok = sample(logits, jax.random.fold_in(key, i))[:, None]
+        pos = pos + 1
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"[serve] {cfg.name}: prefill {args.batch}x{args.prompt_len} "
+          f"in {t_prefill*1e3:.1f} ms; decode {args.gen-1} steps "
+          f"-> {tps:.1f} tok/s")
+    print(f"[serve] sample generations (token ids):")
+    for row in gen[: min(2, args.batch)]:
+        print("   ", " ".join(str(int(t)) for t in row[:16]), "...")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

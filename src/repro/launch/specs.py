@@ -1,0 +1,193 @@
+"""Input ShapeDtypeStructs, shardings, and useful-FLOP accounting for every
+(architecture x shape) dry-run cell."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from ..configs.base import ModelConfig, ShapeSpec, SHAPES
+from ..models import model
+from ..models.params import ParamSpec
+from ..sharding import spec_for, tree_shardings
+
+Array = jnp.ndarray
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStructs for a train/prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": SDS((b, s), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = SDS((b, s), jnp.int32)
+    if cfg.encoder is not None:
+        specs["frames"] = SDS((b, cfg.encoder.n_frames, cfg.d_model), dtype)
+    elif cfg.cross_attn_source_len:
+        specs["patches"] = SDS((b, cfg.cross_attn_source_len, cfg.d_model), dtype)
+    return specs
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    axes = {"tokens": ("batch", None)}
+    if shape.kind == "train":
+        axes["labels"] = ("batch", None)
+    if cfg.encoder is not None:
+        axes["frames"] = ("batch", None, None)
+    elif cfg.cross_attn_source_len:
+        axes["patches"] = ("batch", None, None)
+    return axes
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16):
+    """(cache, tokens, pos) ShapeDtypeStructs for a serve_step cell."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = model.abstract_cache(cfg, b, s, dtype)
+    return cache, SDS((b, 1), jnp.int32), SDS((b,), jnp.int32)
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    dtype=jnp.bfloat16):
+    return tree_shardings(batch_axes(cfg, shape), batch_specs(cfg, shape, dtype),
+                          mesh)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, dtype=jnp.float32):
+    return tree_shardings(model.param_axes(cfg), model.abstract_params(cfg, dtype),
+                          mesh)
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    dtype=jnp.bfloat16):
+    b, s = shape.global_batch, shape.seq_len
+    return tree_shardings(model.cache_axes(cfg, b, s),
+                          model.abstract_cache(cfg, b, s, dtype), mesh)
+
+
+def scalar_sharding(mesh: Mesh, axes=()):
+    return NamedSharding(mesh, spec_for(axes, (1,) * len(axes), mesh)
+                         if axes else spec_for((), (), mesh))
+
+
+def vec_sharding(mesh: Mesh, shape, axes):
+    return NamedSharding(mesh, spec_for(axes, shape, mesh))
+
+
+# ---------------------------------------------------------------------------
+# useful-FLOP accounting (MODEL_FLOPS for the roofline ratio)
+# ---------------------------------------------------------------------------
+
+def _count(specs: Any, pred) -> int:
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, ParamSpec))[0]:
+        if pred(jax.tree_util.keystr(path)):
+            total += math.prod(leaf.shape)
+    return total
+
+
+def matmul_params(cfg: ModelConfig) -> tuple[int, int]:
+    """(active, total) matmul parameters — embedding/unembedding tables and
+    norm scales excluded; MoE experts scaled by top_k/n_experts for 'active'."""
+    specs = param_specs_cached(cfg)
+    is_table = lambda k: ("embed" in k and "table" in k) or \
+        ("unembed" in k and "table" in k)
+    is_norm = lambda k: "norm" in k or "ln_x" in k or k.endswith("scale']")
+    total_all = _count(specs, lambda k: not (is_table(k) or is_norm(k)))
+    moe_w = _count(specs, lambda k: ("w_gate" in k or "w_up" in k or
+                                     "w_down" in k) and "ffn" in k)
+    if cfg.moe is not None and moe_w:
+        active = total_all - moe_w + moe_w * cfg.moe.top_k // cfg.moe.n_experts
+    else:
+        active = total_all
+    return active, total_all
+
+
+_SPEC_CACHE: dict[str, Any] = {}
+
+
+def param_specs_cached(cfg: ModelConfig):
+    key = cfg.name + str(cfg.n_layers) + str(cfg.d_model)
+    if key not in _SPEC_CACHE:
+        _SPEC_CACHE[key] = model.param_specs(cfg)
+    return _SPEC_CACHE[key]
+
+
+def _attn_flops_token(cfg: ModelConfig, t_ctx: float) -> float:
+    """Score+value FLOPs for ONE query token against t_ctx keys, all layers."""
+    per_layer = 4.0 * t_ctx * cfg.n_heads * cfg.head_dim   # 2 matmuls x 2 flop
+    n_attn = sum(1 for s in cfg.layer_pattern
+                 if s.kind == "attn") * cfg.n_groups
+    n_shared = sum(1 for s in cfg.layer_pattern if s.shared_attn) * cfg.n_groups
+    n_cross = sum(1 for s in cfg.layer_pattern if s.cross_attn) * cfg.n_groups
+    total = 0.0
+    for s in cfg.layer_pattern:
+        reps = cfg.n_groups
+        if s.kind == "attn":
+            eff = min(t_ctx, s.window) if s.window else t_ctx
+            total += per_layer / t_ctx * eff * reps
+        if s.shared_attn:
+            win = s.window or 4096
+            total += per_layer / t_ctx * min(t_ctx, win) * reps
+        if s.cross_attn:
+            total += 4.0 * cfg.cross_attn_source_len * cfg.n_heads * \
+                cfg.head_dim * reps
+    del n_attn, n_shared, n_cross
+    return total
+
+
+def _ssm_flops_token(cfg: ModelConfig) -> float:
+    if cfg.ssm is None:
+        return 0.0
+    total = 0.0
+    for s in cfg.layer_pattern:
+        if s.kind == "mamba2":
+            from ..models.mamba2 import mamba2_dims
+            dims = mamba2_dims(cfg.d_model, cfg.ssm)
+            total += 4.0 * dims.n_heads * dims.head_dim * dims.state * \
+                cfg.n_groups
+        elif s.kind == "rwkv6":
+            total += 4.0 * cfg.n_heads * cfg.head_dim ** 2 * cfg.n_groups
+    return total
+
+
+def useful_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS for the cell: 6*N_active*tokens for train (2 fwd + 4 bwd),
+    2*N_active per token for prefill/decode, plus attention / SSM / logits
+    terms.  This is the 'useful work' numerator of the roofline fraction."""
+    b, s = shape.global_batch, shape.seq_len
+    n_active, _ = matmul_params(cfg)
+    logits_flops_tok = 2.0 * cfg.vocab_size * cfg.d_model
+    if shape.kind == "train":
+        tokens = b * s
+        avg_ctx = s / 2.0   # causal average context
+        fwd_tok = 2.0 * n_active + _attn_flops_token(cfg, avg_ctx) + \
+            _ssm_flops_token(cfg) + logits_flops_tok
+        flops = 3.0 * fwd_tok * tokens          # bwd = 2x fwd
+        if cfg.encoder is not None:
+            enc_params = _count(param_specs_cached(cfg),
+                                lambda k: "encoder" in k and "norm" not in k)
+            flops += 3.0 * 2.0 * enc_params * b * cfg.encoder.n_frames
+        return flops
+    if shape.kind == "prefill":
+        tokens = b * s
+        avg_ctx = s / 2.0
+        fwd_tok = 2.0 * n_active + _attn_flops_token(cfg, avg_ctx) + \
+            _ssm_flops_token(cfg)
+        flops = fwd_tok * tokens + logits_flops_tok * b   # last-token logits
+        if cfg.encoder is not None:
+            enc_params = _count(param_specs_cached(cfg),
+                                lambda k: "encoder" in k and "norm" not in k)
+            flops += 2.0 * enc_params * b * cfg.encoder.n_frames
+        return flops
+    # decode: one token per sequence against a seq_len cache
+    fwd_tok = 2.0 * n_active + _attn_flops_token(cfg, float(s)) + \
+        _ssm_flops_token(cfg) + logits_flops_tok
+    return fwd_tok * b

@@ -1,0 +1,197 @@
+"""GQA attention: training/prefill (query-chunked, remat-friendly) and decode
+(single-token against a KV cache), with causal / sliding-window masks, optional
+qk-norm and logit softcap, and cross-attention.
+
+Layout: KV heads are expanded to full query heads with a static gather
+(``jnp.take``) *before* the score einsum, so scores are laid out
+(B, H, Sq, T) and shard over the 'heads' logical axis whenever n_heads divides
+the model axis — (kv, group) factorized layouts do not shard nearly as well
+under GSPMD.  The gathered K/V is cheap (it reads the small KV projection) and
+fuses into the dot in most cases.
+
+Decode caches are ring buffers: a layer with sliding window W keeps only
+min(T, W) cache rows; the new token is written at ``pos % Tc`` and validity is
+reconstructed from ``pos`` (all rows valid once the ring has wrapped).  This is
+what makes the long_500k decode cells sub-quadratic *and* sub-linear-memory for
+the windowed architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+from .layers import apply_rope, rmsnorm, rmsnorm_specs
+from .params import ParamSpec
+
+Array = jnp.ndarray
+NEG_INF = -1e30
+
+
+def attn_specs(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+               qk_norm: bool = False) -> dict:
+    s = {
+        "wq": ParamSpec((d_model, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((n_heads, head_dim, d_model), ("heads", "head_dim", "embed")),
+    }
+    if qk_norm:
+        s["q_norm"] = rmsnorm_specs(head_dim)
+        s["k_norm"] = rmsnorm_specs(head_dim)
+    return s
+
+
+def _softcap(scores: Array, cap: float) -> Array:
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def _expand_kv(k: Array, n_heads: int) -> Array:
+    """(B, T, KV, D) -> (B, T, H, D) by repeating each kv head g = H/KV times."""
+    n_kv = k.shape[2]
+    if n_kv == n_heads:
+        return k
+    idx = jnp.arange(n_heads, dtype=jnp.int32) // (n_heads // n_kv)
+    return jnp.take(k, idx, axis=2)
+
+
+def _sdpa(q: Array, k: Array, v: Array, *, q_pos: Array, k_pos: Array,
+          causal: bool, window: int, softcap: float,
+          k_valid: Array | None = None) -> Array:
+    """q (B,Sq,H,D); k,v (B,T,H,D) already head-expanded; q_pos (B,Sq);
+    k_pos (T,) absolute key positions; k_valid (B,T) optional validity mask."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    scores = _softcap(scores, softcap)
+    qp = q_pos[:, None, :, None]                       # (B,1,Sq,1)
+    kp = k_pos[None, None, None, :]                    # (1,1,1,T)
+    allow = jnp.ones(scores.shape[-2:], bool)[None, None]
+    if causal:
+        allow = allow & (kp <= qp)
+    if window > 0:
+        allow = allow & (kp > qp - window)
+    if k_valid is not None:
+        allow = allow & k_valid[:, None, None, :]
+    scores = jnp.where(allow, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+
+
+def multihead_attention(params: dict, x: Array, kv_src: Array, *,
+                        q_pos: Array, k_pos: Array, causal: bool, window: int = 0,
+                        softcap: float = 0.0, qk_norm: bool = False,
+                        rope_theta: float = 0.0, q_chunk: int = 512,
+                        norm_eps: float = 1e-5, return_kv: bool = False):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    x (B,S,Dm) queries source; kv_src (B,T,Dm) keys/values source.
+    rope_theta==0 disables RoPE (cross-attn, whisper).
+    """
+    dt = x.dtype
+    b, s, _ = x.shape
+    n_heads, head_dim = params["wq"].shape[1:]
+
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(dt))
+    k = jnp.einsum("btd,dke->btke", kv_src, params["wk"].astype(dt))
+    v = jnp.einsum("btd,dke->btke", kv_src, params["wv"].astype(dt))
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q, norm_eps)
+        k = rmsnorm(params["k_norm"], k, norm_eps)
+    if rope_theta:
+        q = apply_rope(q, q_pos, rope_theta)
+        k = apply_rope(k, k_pos[None, :].repeat(b, 0), rope_theta)
+    kv = (k, v)
+    q = constrain(q, ("batch", None, "heads", None))
+    kf = constrain(_expand_kv(k, n_heads), ("batch", None, "heads", None))
+    vf = constrain(_expand_kv(v, n_heads), ("batch", None, "heads", None))
+
+    n_chunks = max(1, -(-s // q_chunk))
+    if n_chunks <= 1:
+        out = _sdpa(q, kf, vf, q_pos=q_pos, k_pos=k_pos, causal=causal,
+                    window=window, softcap=softcap)
+    else:
+        pad = n_chunks * q_chunk - s
+        q_p = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qpos_p = jnp.pad(q_pos, ((0, 0), (0, pad)))
+        q_c = q_p.reshape(b, n_chunks, q_chunk, n_heads, head_dim).transpose(
+            1, 0, 2, 3, 4)
+        qpos_c = qpos_p.reshape(b, n_chunks, q_chunk).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def chunk_fn(q_blk, qp_blk):
+            return _sdpa(q_blk, kf, vf, q_pos=qp_blk, k_pos=k_pos, causal=causal,
+                         window=window, softcap=softcap)
+
+        out_c = jax.lax.map(lambda args: chunk_fn(*args), (q_c, qpos_c))
+        out = out_c.transpose(1, 0, 2, 3, 4).reshape(
+            b, n_chunks * q_chunk, n_heads, head_dim)[:, :s]
+
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(dt))
+    if return_kv:
+        return y, kv
+    return y
+
+
+def decode_attention(params: dict, x: Array, cache_k: Array, cache_v: Array, *,
+                     pos: Array, softcap: float = 0.0, qk_norm: bool = False,
+                     rope_theta: float = 0.0, norm_eps: float = 1e-5):
+    """One-token decode against a ring-buffer KV cache.
+
+    x (B,1,Dm); cache_{k,v} (B,Tc,KV,D); pos (B,) absolute position of the new
+    token.  Tc == window for sliding-window layers, == max seq for global ones.
+    Returns (y, new_cache_k, new_cache_v).
+    """
+    dt = x.dtype
+    b = x.shape[0]
+    n_heads, head_dim = params["wq"].shape[1:]
+    tc = cache_k.shape[1]
+
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(dt))
+    k_new = jnp.einsum("bsd,dke->bske", x, params["wk"].astype(dt))
+    v_new = jnp.einsum("bsd,dke->bske", x, params["wv"].astype(dt))
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q, norm_eps)
+        k_new = rmsnorm(params["k_norm"], k_new, norm_eps)
+    if rope_theta:
+        q = apply_rope(q, pos[:, None], rope_theta)
+        k_new = apply_rope(k_new, pos[:, None], rope_theta)
+
+    bidx = jnp.arange(b, dtype=jnp.int32)
+    widx = (pos % tc).astype(jnp.int32)
+    cache_k = cache_k.at[bidx, widx].set(k_new[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, widx].set(v_new[:, 0].astype(cache_v.dtype))
+
+    # ring validity: rows 0..pos valid until the ring wraps, then all rows.
+    slots = jnp.arange(tc, dtype=jnp.int32)
+    k_valid = (slots[None, :] <= pos[:, None]) | (pos[:, None] >= tc)
+
+    kf = _expand_kv(cache_k, n_heads).astype(dt)
+    vf = _expand_kv(cache_v, n_heads).astype(dt)
+    kf = constrain(kf, ("batch", "seq_shard", "heads", None))
+    vf = constrain(vf, ("batch", "seq_shard", "heads", None))
+    # positions are implicit in the rotated keys; ring rows are all in-window
+    # by construction, so the mask is pure validity (no positional terms).
+    out = _sdpa(q, kf, vf, q_pos=pos[:, None], k_pos=jnp.zeros((tc,), jnp.int32),
+                causal=False, window=0, softcap=softcap, k_valid=k_valid)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(dt))
+    return y, cache_k, cache_v
+
+
+def cross_decode_attention(params: dict, x: Array, cross_k: Array, cross_v: Array,
+                           *, softcap: float = 0.0, norm_eps: float = 1e-5):
+    """Decode-time cross-attention against precomputed (frozen) source KV.
+    x (B,1,Dm); cross_{k,v} (B,L,KV,D) filled at prefill."""
+    dt = x.dtype
+    n_heads = params["wq"].shape[1]
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(dt))
+    kf = _expand_kv(cross_k, n_heads).astype(dt)
+    vf = _expand_kv(cross_v, n_heads).astype(dt)
+    l = kf.shape[1]
+    out = _sdpa(q, kf, vf, q_pos=jnp.zeros((x.shape[0], 1), jnp.int32),
+                k_pos=jnp.zeros((l,), jnp.int32), causal=False, window=0,
+                softcap=softcap)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(dt))

@@ -1,0 +1,92 @@
+"""Common layers: RMSNorm, RoPE, SwiGLU MLP, embeddings, positional encodings.
+
+Pure-function style: every layer is ``apply(params, x, ...)`` plus a
+``*_specs(...)`` builder returning the ParamSpec tree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamSpec
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_specs(dim: int) -> dict:
+    return {"scale": ParamSpec((dim,), (None,), init="ones")}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, D); positions: (B, S) int32 absolute positions."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs       # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: Array, dim: int) -> Array:
+    """(..., ) int32 -> (..., dim) float32 transformer sinusoids."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_gate": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp(params: dict, x: Array) -> Array:
+    dt = x.dtype
+    g = x @ params["w_gate"].astype(dt)
+    u = x @ params["w_up"].astype(dt)
+    return (jax.nn.silu(g) * u) @ params["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embed_specs(vocab: int, d_model: int) -> dict:
+    return {"table": ParamSpec((vocab, d_model), ("vocab", "embed"), scale=1.0)}
+
+
+def embed(params: dict, tokens: Array, dtype) -> Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(table: Array, h: Array) -> Array:
+    """h (B, S, D) -> logits (B, S, V) in f32 (table may be tied embed)."""
+    return h.astype(jnp.float32) @ table.astype(jnp.float32).T

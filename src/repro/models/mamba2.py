@@ -1,0 +1,217 @@
+"""Mamba2 (SSD) block — chunked state-space duality algorithm.
+
+Train/prefill use the chunked SSD form: within a chunk of length Q everything
+is dense matmuls (MXU work); chunk states are carried by a short lax.scan of
+length S/Q.  All decays are exp of non-positive f32 logs, so nothing can
+overflow.  Decode is the O(1) recurrent update.
+
+Shapes: d_inner = expand * d_model, H = d_inner // head_dim ssm heads of head
+dim P, shared state dim N per head (ngroups = 1, as in zamba2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SSMSpec
+from ..sharding import constrain
+from .params import ParamSpec
+
+Array = jnp.ndarray
+
+_CHUNK = 256
+
+
+class Mamba2Dims(NamedTuple):
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    state: int
+    conv_width: int
+    conv_dim: int   # channels passing through the causal conv: d_inner + 2N
+
+
+def mamba2_dims(d_model: int, spec: SSMSpec) -> Mamba2Dims:
+    d_inner = spec.expand * d_model
+    n_heads = d_inner // spec.head_dim
+    return Mamba2Dims(d_inner=d_inner, n_heads=n_heads, head_dim=spec.head_dim,
+                      state=spec.state_dim, conv_width=spec.conv_width,
+                      conv_dim=d_inner + 2 * spec.state_dim)
+
+
+def mamba2_specs(d_model: int, spec: SSMSpec) -> dict:
+    dims = mamba2_dims(d_model, spec)
+    # in_proj -> [z (d_inner), xBC (conv_dim), dt (H)]
+    proj_out = dims.d_inner + dims.conv_dim + dims.n_heads
+    return {
+        "in_proj": ParamSpec((d_model, proj_out), ("embed", "mlp")),
+        "conv_w": ParamSpec((dims.conv_width, dims.conv_dim), (None, "mlp"), scale=0.5),
+        "conv_b": ParamSpec((dims.conv_dim,), ("mlp",), init="zeros"),
+        "a_log": ParamSpec((dims.n_heads,), ("ssm_heads",), init="zeros"),
+        "dt_bias": ParamSpec((dims.n_heads,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamSpec((dims.n_heads,), ("ssm_heads",), init="ones"),
+        "norm_scale": ParamSpec((dims.d_inner,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((dims.d_inner, d_model), ("mlp", "embed")),
+    }
+
+
+def _split_proj(proj: Array, dims: Mamba2Dims):
+    z, xbc, dt = jnp.split(proj, [dims.d_inner, dims.d_inner + dims.conv_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array, state: Array | None):
+    """Depthwise causal conv1d.  xbc (B,S,C), w (W,C).  state (B,W-1,C) holds
+    the trailing context from the previous segment (zeros at start)."""
+    bsz, s, c = xbc.shape
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, width - 1, c), xbc.dtype)
+    full = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)  # (B, S+W-1, C)
+    out = jnp.zeros((bsz, s, c), jnp.float32)
+    for i in range(width):  # width is 4: unrolled taps, no conv primitive needed
+        out = out + full[:, i:i + s, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+    new_state = full[:, s:, :]
+    return out, new_state
+
+
+def _gated_rmsnorm(y: Array, z: Array, scale: Array, eps: float = 1e-5) -> Array:
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_chunked(x: Array, b_mat: Array, c_mat: Array, dt: Array, a: Array,
+                h0: Array | None = None, chunk: int = _CHUNK):
+    """Chunked SSD scan.
+
+    x   (B, S, H, P)   inputs per head
+    b_mat, c_mat (B, S, N)  shared input/output projections (ngroups=1)
+    dt  (B, S, H)      positive step sizes (softplus already applied)
+    a   (H,)           negative per-head decay rates (-exp(a_log))
+    h0  (B, H, P, N)   initial state (decode/prefill continuation)
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    if s % q:
+        raise ValueError(f"seq {s} not divisible by chunk {q}")
+    nc = s // q
+
+    xd = (x * dt[..., None]).astype(jnp.float32)                  # dt-weighted input
+    la = a[None, None, :] * dt                                    # (B,S,H) log-decay <= 0
+    xc = xd.reshape(bsz, nc, q, h, p)
+    bc = b_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    lac = la.reshape(bsz, nc, q, h)
+    lcum = jnp.cumsum(lac, axis=2)                                # inclusive, <= 0
+
+    # intra-chunk: att[t, s] = (C_t . B_s) * exp(L_t - L_s) for s <= t
+    rel = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]         # (B,nc,q,q,H), <=0 on mask
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    dec = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bctn,bcsn->bcts", cc, bc)                    # (B,nc,q,q)
+    y_intra = jnp.einsum("bcts,bctsh,bcshp->bcthp", cb, dec, xc)
+
+    # chunk summaries: state_c = sum_s exp(L_end - L_s) B_s (x dt)_s
+    dec_end = jnp.exp(lcum[:, :, -1:, :] - lcum)                  # (B,nc,q,H)
+    state_c = jnp.einsum("bcsn,bcsh,bcshp->bchpn", bc, dec_end, xc)
+    gamma = jnp.exp(lcum[:, :, -1, :])                            # (B,nc,H) chunk decay
+
+    def step(hprev, inp):
+        st, g = inp                                               # (B,H,P,N), (B,H)
+        hnew = hprev * g[:, :, None, None] + st
+        return hnew, hprev                                        # emit state *before* chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    hT, hprevs = jax.lax.scan(step, h0.astype(jnp.float32),
+                              (state_c.transpose(1, 0, 2, 3, 4),
+                               gamma.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)                      # (B,nc,H,P,N)
+
+    # inter-chunk: y_t += C_t . (exp(L_t) * H_before_chunk)
+    y_inter = jnp.einsum("bctn,bcth,bchpn->bcthp", cc, jnp.exp(lcum), hprevs)
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, hT
+
+
+def ssd_decode_step(h: Array, x: Array, b_mat: Array, c_mat: Array, dt: Array,
+                    a: Array):
+    """One-token SSD update.  h (B,H,P,N); x (B,H,P); b,c (B,N); dt (B,H)."""
+    g = jnp.exp(a[None, :] * dt)                                  # (B,H)
+    xd = (x * dt[..., None]).astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn->bhpn", xd, b_mat.astype(jnp.float32))
+    hnew = h * g[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", hnew, c_mat.astype(jnp.float32))
+    return y, hnew
+
+
+def mamba2_block(params: dict, x: Array, spec: SSMSpec, *,
+                 conv_state: Array | None = None, ssm_state: Array | None = None,
+                 decode: bool = False):
+    """Apply one Mamba2 block.  x (B,S,Dm) (S==1 with decode=True).
+
+    Returns (y (B,S,Dm), (new_conv_state, new_ssm_state)).
+    """
+    dt_ = x.dtype
+    dims = mamba2_dims(x.shape[-1], spec)
+    bsz, s, _ = x.shape
+    proj = x @ params["in_proj"].astype(dt_)
+    z, xbc, dtr = _split_proj(proj, dims)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))             # (H,) < 0
+
+    if decode:
+        # roll the conv window by one token
+        if conv_state is None:
+            conv_state = jnp.zeros((bsz, dims.conv_width - 1, dims.conv_dim), dt_)
+        xbc_f, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                       conv_state)
+        xs, bm, cm = jnp.split(xbc_f[:, 0], [dims.d_inner, dims.d_inner + dims.state],
+                               axis=-1)
+        xh = xs.reshape(bsz, dims.n_heads, dims.head_dim).astype(jnp.float32)
+        if ssm_state is None:
+            ssm_state = jnp.zeros((bsz, dims.n_heads, dims.head_dim, dims.state),
+                                  jnp.float32)
+        y, hnew = ssd_decode_step(ssm_state, xh, bm, cm, dt[:, 0], a)
+        y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+        y = y.reshape(bsz, 1, dims.d_inner).astype(dt_)
+        y = _gated_rmsnorm(y, z, params["norm_scale"])
+        return y @ params["out_proj"].astype(dt_), (new_conv, hnew)
+
+    xbc_f, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xs, bm, cm = jnp.split(xbc_f, [dims.d_inner, dims.d_inner + dims.state], axis=-1)
+    xh = xs.reshape(bsz, s, dims.n_heads, dims.head_dim)
+    xh = constrain(xh, ("batch", None, "ssm_heads", None))
+    y, hT = ssd_chunked(xh, bm, cm, dt, a, h0=ssm_state)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * \
+        xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, dims.d_inner).astype(dt_)
+    y = _gated_rmsnorm(y, z, params["norm_scale"])
+    return y @ params["out_proj"].astype(dt_), (new_conv, hT)
+
+
+def mamba2_ref_scan(x: Array, b_mat: Array, c_mat: Array, dt: Array, a: Array,
+                    h0: Array | None = None):
+    """O(S) sequential oracle for ssd_chunked (tests)."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(hprev, inp):
+        xt, bt, ct, dtt = inp
+        y, hnew = ssd_decode_step(hprev, xt, bt, ct, dtt, a)
+        return hnew, y
+
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+                           b_mat.transpose(1, 0, 2), c_mat.transpose(1, 0, 2),
+                           dt.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3), hT

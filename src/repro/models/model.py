@@ -1,0 +1,540 @@
+"""Model assembly: config -> parameter specs -> train / prefill / decode fns.
+
+The layer stack is ``cfg.layer_pattern`` repeated ``cfg.n_groups`` times and
+lowers to ONE ``lax.scan`` over groups with per-slot parameters stacked on the
+leading axis; heterogeneous stacks (gemma3 local:global, zamba2 mamba+shared
+attention, VLM cross-attn every 5th layer, whisper enc-dec) are all patterns.
+The scan body is rematerialized (``jax.checkpoint``) in full-sequence modes.
+
+Caches: decode state is a pytree built from the same ParamSpec machinery as
+parameters (shape + logical sharding axes in one place), with ring-buffer KV
+for windowed layers (see models/attention.py) and recurrent states for
+mamba2 / rwkv6 slots.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LayerSpec, ModelConfig
+from ..sharding import constrain
+from . import mamba2 as m2
+from . import rwkv6 as rw
+from .attention import (attn_specs, cross_decode_attention, decode_attention,
+                        multihead_attention)
+from .layers import embed_specs, mlp, mlp_specs, rmsnorm, rmsnorm_specs, \
+    sinusoidal_positions, unembed
+from .moe import moe_ffn, moe_specs
+from .params import ParamSpec, abstract, axes_tree, init_params, stack_specs
+
+Array = jnp.ndarray
+
+AUX_LOSS_WEIGHT = 0.01
+XENT_CHUNK = 512
+
+
+def _use_rope(cfg: ModelConfig) -> bool:
+    return cfg.family != "audio"
+
+
+def cast_params(params: dict, dtype) -> dict:
+    """Cast floating params to the compute dtype ONCE, before the layer stack.
+
+    With FSDP ('embed' sharded over 'data'), every layer's weights are
+    all-gathered per use; casting the *sharded* master copy first makes those
+    gathers move bf16 instead of f32 — at 90B-param scale that halves ~12 TB
+    of per-step collective traffic and the gathered VMEM/HBM footprint.  The
+    cast's VJP re-accumulates gradients in f32 against the master params."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+
+def _shared_window(cfg: ModelConfig) -> int:
+    for s in cfg.layer_pattern:
+        if s.shared_attn and s.window:
+            return s.window
+    return 4096
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _slot_specs(cfg: ModelConfig, slot: LayerSpec) -> dict:
+    d = cfg.d_model
+    s: dict = {"norm1": rmsnorm_specs(d)}
+    if slot.kind == "attn":
+        s["attn"] = attn_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                               cfg.use_qk_norm)
+        s["norm2"] = rmsnorm_specs(d)
+        s["ffn"] = moe_specs(d, cfg.moe) if slot.moe else mlp_specs(d, cfg.d_ff)
+    elif slot.kind == "mamba2":
+        s["mixer"] = m2.mamba2_specs(d, cfg.ssm)
+    elif slot.kind == "rwkv6":
+        s["mixer"] = rw.rwkv6_specs(d, cfg.n_heads, cfg.head_dim, cfg.d_ff)
+        s["norm2"] = rmsnorm_specs(d)
+    else:
+        raise ValueError(f"unknown slot kind {slot.kind}")
+    if slot.cross_attn:
+        s["cross_norm"] = rmsnorm_specs(d)
+        s["cross_attn"] = attn_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    slots = {f"slot{i}": _slot_specs(cfg, s)
+             for i, s in enumerate(cfg.layer_pattern)}
+    specs: dict = {
+        "embed": embed_specs(cfg.vocab_size, d),
+        "groups": stack_specs(slots, cfg.n_groups),
+        "final_norm": rmsnorm_specs(d),
+    }
+    if cfg.has_shared_attn:
+        specs["shared"] = {
+            "norm": rmsnorm_specs(d),
+            "attn": attn_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim),
+        }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = {"table": ParamSpec((cfg.vocab_size, d),
+                                               ("vocab", "embed"), scale=0.02)}
+    if cfg.encoder is not None:
+        enc_slot = {
+            "norm1": rmsnorm_specs(d),
+            "attn": attn_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim),
+            "norm2": rmsnorm_specs(d),
+            "ffn": mlp_specs(d, cfg.d_ff),
+        }
+        specs["encoder"] = {
+            "groups": stack_specs({"slot0": enc_slot}, cfg.encoder.n_layers),
+            "final_norm": rmsnorm_specs(d),
+        }
+    return specs
+
+
+def init(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32):
+    return init_params(param_specs(cfg), key, dtype)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
+    return abstract(param_specs(cfg), dtype)
+
+
+def param_axes(cfg: ModelConfig):
+    return axes_tree(param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+
+def _cache_len(seq_len: int, window: int) -> int:
+    return seq_len if window == 0 else min(seq_len, window)
+
+
+def _slot_cache_specs(cfg: ModelConfig, slot: LayerSpec, batch: int,
+                      seq_len: int) -> dict:
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    c: dict = {}
+    if slot.kind == "attn":
+        tc = _cache_len(seq_len, slot.window)
+        kv_axes = (None, "batch", "seq_shard", "kv_heads", "head_dim")
+        c["k"] = ParamSpec((cfg.n_groups, batch, tc, kv, dh), kv_axes, init="zeros")
+        c["v"] = ParamSpec((cfg.n_groups, batch, tc, kv, dh), kv_axes, init="zeros")
+    elif slot.kind == "mamba2":
+        dims = m2.mamba2_dims(cfg.d_model, cfg.ssm)
+        c["conv"] = ParamSpec((cfg.n_groups, batch, dims.conv_width - 1, dims.conv_dim),
+                              (None, "batch", None, "mlp"), init="zeros")
+        c["ssm"] = ParamSpec((cfg.n_groups, batch, dims.n_heads, dims.head_dim,
+                              dims.state),
+                             (None, "batch", "ssm_heads", None, None), init="zeros")
+    elif slot.kind == "rwkv6":
+        c["wkv"] = ParamSpec((cfg.n_groups, batch, cfg.n_heads, cfg.head_dim,
+                              cfg.head_dim),
+                             (None, "batch", "heads", None, None), init="zeros")
+        c["tm_shift"] = ParamSpec((cfg.n_groups, batch, cfg.d_model),
+                                  (None, "batch", None), init="zeros")
+        c["cm_shift"] = ParamSpec((cfg.n_groups, batch, cfg.d_model),
+                                  (None, "batch", None), init="zeros")
+    if slot.shared_attn:
+        tc = _cache_len(seq_len, _shared_window(cfg))
+        kv_axes = (None, "batch", "seq_shard", "kv_heads", "head_dim")
+        c["shared_k"] = ParamSpec((cfg.n_groups, batch, tc, kv, dh), kv_axes,
+                                  init="zeros")
+        c["shared_v"] = ParamSpec((cfg.n_groups, batch, tc, kv, dh), kv_axes,
+                                  init="zeros")
+    if slot.cross_attn:
+        l = cfg.cross_attn_source_len
+        kv_axes = (None, "batch", None, "kv_heads", "head_dim")
+        c["cross_k"] = ParamSpec((cfg.n_groups, batch, l, kv, dh), kv_axes,
+                                 init="zeros")
+        c["cross_v"] = ParamSpec((cfg.n_groups, batch, l, kv, dh), kv_axes,
+                                 init="zeros")
+    return c
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    return {f"slot{i}": _slot_cache_specs(cfg, s, batch, seq_len)
+            for i, s in enumerate(cfg.layer_pattern)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.float32):
+    specs = cache_specs(cfg, batch, seq_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, dtype), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.float32):
+    return abstract(cache_specs(cfg, batch, seq_len), dtype)
+
+
+def cache_axes(cfg: ModelConfig, batch: int, seq_len: int):
+    return axes_tree(cache_specs(cfg, batch, seq_len))
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _ring_from_prefill(k: Array, tc: int) -> Array:
+    """Convert prefill keys (B,S,KV,D) to ring-cache layout (B,Tc,KV,D):
+    token at absolute position p lives at ring row p % Tc."""
+    b, s = k.shape[:2]
+    if s <= tc:
+        pad = [(0, 0)] * k.ndim
+        pad[1] = (0, tc - s)
+        return jnp.pad(k, pad)
+    return jnp.roll(k[:, s - tc:], shift=s % tc, axis=1)
+
+
+def _apply_slot_full(cfg: ModelConfig, slot: LayerSpec, sp: dict, x: Array, *,
+                     positions: Array, k_pos: Array, cross_src: Array | None,
+                     shared_params: dict | None, causal: bool, emit_cache: bool,
+                     cache_len: int):
+    """One pattern slot over a full sequence.  Returns (x, cache_dict, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache: dict = {}
+    rope = cfg.rope_theta if _use_rope(cfg) else 0.0
+    if slot.kind == "attn":
+        h = rmsnorm(sp["norm1"], x, cfg.norm_eps)
+        y, (k, v) = multihead_attention(
+            sp["attn"], h, h, q_pos=positions, k_pos=k_pos, causal=causal,
+            window=slot.window, softcap=cfg.attn_logit_softcap,
+            qk_norm=cfg.use_qk_norm, rope_theta=rope, norm_eps=cfg.norm_eps,
+            return_kv=True)
+        x = x + y
+        if emit_cache:
+            tc = _cache_len(cache_len, slot.window)
+            cache["k"] = _ring_from_prefill(k, tc)
+            cache["v"] = _ring_from_prefill(v, tc)
+    elif slot.kind == "mamba2":
+        h = rmsnorm(sp["norm1"], x, cfg.norm_eps)
+        y, (conv_st, ssm_st) = m2.mamba2_block(sp["mixer"], h, cfg.ssm)
+        x = x + y
+        if emit_cache:
+            cache["conv"], cache["ssm"] = conv_st, ssm_st
+    elif slot.kind == "rwkv6":
+        h = rmsnorm(sp["norm1"], x, cfg.norm_eps)
+        y, (tm_shift, wkv_st) = rw.time_mix(sp["mixer"], h)
+        x = x + y
+        h2 = rmsnorm(sp["norm2"], x, cfg.norm_eps)
+        y2, cm_shift = rw.channel_mix(sp["mixer"], h2)
+        x = x + y2
+        if emit_cache:
+            cache["wkv"], cache["tm_shift"], cache["cm_shift"] = \
+                wkv_st, tm_shift, cm_shift
+
+    if slot.shared_attn:
+        h = rmsnorm(shared_params["norm"], x, cfg.norm_eps)
+        win = _shared_window(cfg)
+        y, (k, v) = multihead_attention(
+            shared_params["attn"], h, h, q_pos=positions, k_pos=k_pos,
+            causal=causal, window=win, rope_theta=rope, norm_eps=cfg.norm_eps,
+            return_kv=True)
+        x = x + y
+        if emit_cache:
+            tc = _cache_len(cache_len, win)
+            cache["shared_k"] = _ring_from_prefill(k, tc)
+            cache["shared_v"] = _ring_from_prefill(v, tc)
+
+    if slot.cross_attn:
+        h = rmsnorm(sp["cross_norm"], x, cfg.norm_eps)
+        l = cross_src.shape[1]
+        y, (ck, cv) = multihead_attention(
+            sp["cross_attn"], h, cross_src, q_pos=positions,
+            k_pos=jnp.arange(l, dtype=jnp.int32), causal=False, rope_theta=0.0,
+            norm_eps=cfg.norm_eps, return_kv=True)
+        x = x + y
+        if emit_cache:
+            cache["cross_k"], cache["cross_v"] = ck, cv
+
+    if slot.kind == "attn":
+        h = rmsnorm(sp["norm2"], x, cfg.norm_eps)
+        if slot.moe:
+            y, a = moe_ffn(sp["ffn"], h, cfg.moe)
+            aux = aux + a
+        else:
+            y = mlp(sp["ffn"], h)
+        x = x + y
+    return x, cache, aux
+
+
+# When True, the layer-group stack is a Python loop instead of lax.scan.
+# Larger HLO / slower compiles, but GSPMD partitions per-layer gradients
+# directly instead of through scan-carry cotangents (see EXPERIMENTS.md §Perf:
+# the scan path materializes FULL f32 per-group gradients).
+UNROLL_GROUPS = False
+
+
+def _backbone_full(cfg: ModelConfig, params: dict, h: Array, positions: Array, *,
+                   cross_src: Array | None, causal: bool, emit_cache: bool,
+                   cache_len: int):
+    """Scan the pattern groups over a full sequence."""
+    k_pos = jnp.arange(h.shape[1], dtype=jnp.int32)
+    shared = params.get("shared")
+
+    # long patterns (gemma3's period 26 => n_groups == 1) get no remat from
+    # the group scan itself; rematerialize per slot instead
+    remat_slots = cfg.period > 4
+
+    def body(carry, gp):
+        x, aux = carry
+        caches = {}
+        for i, slot in enumerate(cfg.layer_pattern):
+            def apply_i(sp_, x_, slot_=slot):
+                return _apply_slot_full(
+                    cfg, slot_, sp_, x_, positions=positions, k_pos=k_pos,
+                    cross_src=cross_src, shared_params=shared, causal=causal,
+                    emit_cache=emit_cache, cache_len=cache_len)
+            fn = jax.checkpoint(apply_i) if remat_slots else apply_i
+            x, c, a = fn(gp[f"slot{i}"], x)
+            caches[f"slot{i}"] = c
+            aux = aux + a
+        # re-shard the carry seq-wise (SP): the remat-saved per-group stack
+        # then stores 1/model_parallel of every activation
+        x = constrain(x, ("batch", "act_seq", None))
+        return (x, aux), (caches if emit_cache else None)
+
+    body = jax.checkpoint(body)
+    if UNROLL_GROUPS:
+        carry = (h, jnp.zeros((), jnp.float32))
+        cache_list = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda p: p[g], params["groups"])
+            carry, caches_g = body(carry, gp)
+            cache_list.append(caches_g)
+        h, aux = carry
+        caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)
+                  if emit_cache else None)
+    else:
+        (h, aux), caches = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                        params["groups"])
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, aux, caches
+
+
+def _encode(cfg: ModelConfig, params: dict, frames: Array) -> Array:
+    """Whisper-style bidirectional encoder over precomputed frame embeddings."""
+    enc = params["encoder"]
+    b, l, _ = frames.shape
+    pos = jnp.arange(l, dtype=jnp.int32)
+    h = frames + sinusoidal_positions(pos, cfg.d_model)[None].astype(frames.dtype)
+
+    def body(x, gp):
+        sp = gp["slot0"]
+        y = multihead_attention(sp["attn"], rmsnorm(sp["norm1"], x, cfg.norm_eps),
+                                rmsnorm(sp["norm1"], x, cfg.norm_eps),
+                                q_pos=pos[None].repeat(b, 0), k_pos=pos,
+                                causal=False, rope_theta=0.0, norm_eps=cfg.norm_eps)
+        x = x + y
+        x = x + mlp(sp["ffn"], rmsnorm(sp["norm2"], x, cfg.norm_eps))
+        return x, None
+
+    h, _ = jax.lax.scan(jax.checkpoint(body), h, enc["groups"])
+    return rmsnorm(enc["final_norm"], h, cfg.norm_eps)
+
+
+def _embed_tokens(cfg: ModelConfig, params: dict, tokens: Array, positions: Array,
+                  dtype) -> Array:
+    h = params["embed"]["table"].astype(dtype)[tokens]
+    if not _use_rope(cfg):
+        h = h + sinusoidal_positions(positions, cfg.d_model).astype(dtype)
+    return h
+
+
+def _cross_source(cfg: ModelConfig, params: dict, batch: dict[str, Array],
+                  dtype) -> Array | None:
+    if cfg.encoder is not None:
+        return _encode(cfg, params, batch["frames"].astype(dtype))
+    if cfg.cross_attn_source_len:
+        return batch["patches"].astype(dtype)
+    return None
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict[str, Array], *,
+            emit_cache: bool = False, max_cache_len: int = 0,
+            dtype=jnp.bfloat16):
+    """Full-sequence forward.  Returns (hidden (B,S,D), aux, caches).
+
+    ``max_cache_len`` sizes the emitted decode caches (>= prompt length +
+    planned decode steps); defaults to the prompt length.
+    """
+    tokens = batch["tokens"]
+    params = cast_params(params, dtype)
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None].repeat(b, 0)
+    h = _embed_tokens(cfg, params, tokens, positions, dtype)
+    h = constrain(h, ("batch", None, None))
+    cross_src = _cross_source(cfg, params, batch, dtype)
+    return _backbone_full(cfg, params, h, positions, cross_src=cross_src,
+                          causal=True, emit_cache=emit_cache,
+                          cache_len=max(max_cache_len, s))
+
+
+def _logit_table(cfg: ModelConfig, params: dict) -> Array:
+    return (params["embed"]["table"] if cfg.tie_embeddings
+            else params["unembed"]["table"])
+
+
+def chunked_xent(h: Array, table: Array, labels: Array,
+                 chunk: int = XENT_CHUNK) -> Array:
+    """Mean cross-entropy without materializing (B,S,V) logits: scan over
+    sequence chunks, f32 accumulation on the MXU."""
+    b, s, d = h.shape
+    nc = max(1, -(-s // chunk))
+    pad = nc * chunk - s
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = hp.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = lp.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(tot, xs):
+        hb, lb = xs
+        logits = jnp.einsum("bcd,vd->bcv", hb, table.astype(hb.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, ("batch", None, "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(lb, 0)[..., None],
+                                   axis=-1)[..., 0]
+        valid = (lb >= 0).astype(jnp.float32)
+        return tot + jnp.sum((lse - gold) * valid), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / jnp.maximum(jnp.sum(labels >= 0).astype(jnp.float32), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict[str, Array], *,
+            dtype=jnp.bfloat16):
+    h, aux, _ = forward(cfg, params, batch, dtype=dtype)
+    loss = chunked_xent(h, _logit_table(cfg, params), batch["labels"])
+    total = loss + AUX_LOSS_WEIGHT * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict[str, Array], *,
+            max_cache_len: int = 0, dtype=jnp.bfloat16):
+    """Returns (last-token logits (B,V), caches, pos (B,))."""
+    h, _, caches = forward(cfg, params, batch, emit_cache=True,
+                           max_cache_len=max_cache_len, dtype=dtype)
+    last = h[:, -1]
+    logits = last.astype(jnp.float32) @ _logit_table(cfg, params).astype(
+        jnp.float32).T
+    b, s = batch["tokens"].shape
+    return logits, caches, jnp.full((b,), s, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _apply_slot_decode(cfg: ModelConfig, slot: LayerSpec, sp: dict, x: Array, *,
+                       pos: Array, cache: dict, shared_params: dict | None):
+    new_cache = dict(cache)
+    rope = cfg.rope_theta if _use_rope(cfg) else 0.0
+    if slot.kind == "attn":
+        h = rmsnorm(sp["norm1"], x, cfg.norm_eps)
+        y, nk, nv = decode_attention(sp["attn"], h, cache["k"], cache["v"],
+                                     pos=pos, softcap=cfg.attn_logit_softcap,
+                                     qk_norm=cfg.use_qk_norm, rope_theta=rope,
+                                     norm_eps=cfg.norm_eps)
+        x = x + y
+        new_cache["k"], new_cache["v"] = nk, nv
+    elif slot.kind == "mamba2":
+        h = rmsnorm(sp["norm1"], x, cfg.norm_eps)
+        y, (conv_st, ssm_st) = m2.mamba2_block(
+            sp["mixer"], h, cfg.ssm, conv_state=cache["conv"],
+            ssm_state=cache["ssm"], decode=True)
+        x = x + y
+        new_cache["conv"], new_cache["ssm"] = conv_st, ssm_st
+    elif slot.kind == "rwkv6":
+        h = rmsnorm(sp["norm1"], x, cfg.norm_eps)
+        y, (tm_shift, wkv_st) = rw.time_mix(
+            sp["mixer"], h, shift_state=cache["tm_shift"],
+            wkv_state=cache["wkv"], decode=True)
+        x = x + y
+        h2 = rmsnorm(sp["norm2"], x, cfg.norm_eps)
+        y2, cm_shift = rw.channel_mix(sp["mixer"], h2,
+                                      shift_state=cache["cm_shift"])
+        x = x + y2
+        new_cache["wkv"], new_cache["tm_shift"], new_cache["cm_shift"] = \
+            wkv_st, tm_shift, cm_shift
+
+    if slot.shared_attn:
+        h = rmsnorm(shared_params["norm"], x, cfg.norm_eps)
+        y, nk, nv = decode_attention(shared_params["attn"], h,
+                                     cache["shared_k"], cache["shared_v"],
+                                     pos=pos, rope_theta=rope,
+                                     norm_eps=cfg.norm_eps)
+        x = x + y
+        new_cache["shared_k"], new_cache["shared_v"] = nk, nv
+
+    if slot.cross_attn:
+        h = rmsnorm(sp["cross_norm"], x, cfg.norm_eps)
+        y = cross_decode_attention(sp["cross_attn"], h, cache["cross_k"],
+                                   cache["cross_v"], norm_eps=cfg.norm_eps)
+        x = x + y
+
+    if slot.kind == "attn":
+        h = rmsnorm(sp["norm2"], x, cfg.norm_eps)
+        if slot.moe:
+            y, _ = moe_ffn(sp["ffn"], h, cfg.moe)
+        else:
+            y = mlp(sp["ffn"], h)
+        x = x + y
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: Array,
+                pos: Array, *, dtype=jnp.bfloat16):
+    """One serving step: tokens (B,1) int32, pos (B,) absolute positions.
+    Returns (logits (B,V) f32, new_cache)."""
+    params = cast_params(params, dtype)
+    h = _embed_tokens(cfg, params, tokens, pos[:, None], dtype)
+    shared = params.get("shared")
+
+    def body(x, xs):
+        gp, gcache = xs
+        new_caches = {}
+        for i, slot in enumerate(cfg.layer_pattern):
+            x, nc = _apply_slot_decode(cfg, slot, gp[f"slot{i}"], x, pos=pos,
+                                       cache=gcache[f"slot{i}"],
+                                       shared_params=shared)
+            new_caches[f"slot{i}"] = nc
+        return x, new_caches
+
+    h, new_cache = jax.lax.scan(body, h, (params["groups"], cache))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = h[:, 0].astype(jnp.float32) @ _logit_table(cfg, params).astype(
+        jnp.float32).T
+    return logits, new_cache
+
+
+def count_params(cfg: ModelConfig) -> int:
+    specs = param_specs(cfg)
+    return sum(math.prod(s.shape) for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)))

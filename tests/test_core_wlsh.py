@@ -1,0 +1,169 @@
+"""Paper-core behaviour: bucket functions, WLSH estimator unbiasedness,
+matvec data structures, spectral properties (Claims 7/10, Def. 8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GammaPDF, WLSHKernelSpec, featurize, get_bucket_fn,
+                        laplace_kernel, make_wlsh_kernel, sample_lsh_params)
+from repro.core.bucket_fns import BUCKET_FNS
+from repro.core.wlsh import (build_exact_index, build_table_index,
+                             exact_kernel_matrix, exact_matvec,
+                             table_kernel_matrix, table_matvec)
+
+
+# ---------------------------------------------------------------------------
+# bucket-shaping functions f (Def. 6 preconditions)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(BUCKET_FNS))
+def test_bucket_fn_l2_normalized(name):
+    f = get_bucket_fn(name)
+    xs = np.linspace(-0.5, 0.5, 200001)
+    val = np.trapezoid(np.asarray(f(jnp.asarray(xs))) ** 2, xs)
+    assert abs(val - 1.0) < 1e-3, f"||{name}||_2^2 = {val}"
+
+
+@pytest.mark.parametrize("name", sorted(BUCKET_FNS))
+def test_bucket_fn_even_and_supported(name):
+    f = get_bucket_fn(name)
+    xs = jnp.linspace(-0.49, 0.49, 101)
+    np.testing.assert_allclose(f(xs), f(-xs), atol=1e-6)
+    assert float(jnp.max(jnp.abs(f(jnp.asarray([0.51, -0.7, 3.0]))))) == 0.0
+
+
+@given(st.floats(-2.0, 2.0))
+@settings(max_examples=30, deadline=None)
+def test_bucket_fn_bounded_by_f_inf(x):
+    for name, f in BUCKET_FNS.items():
+        assert float(f(jnp.asarray(x))) <= f.f_inf + 1e-6
+
+
+def test_smooth_fn_has_continuous_derivative():
+    f = get_bucket_fn("smooth")
+    xs = jnp.linspace(-0.5, 0.5, 20001)
+    g = jnp.gradient(f(xs), xs)
+    # derivative of (rect*rect_1/4*rect_1/4)(2x) is continuous -> no jumps
+    jumps = jnp.max(jnp.abs(jnp.diff(g)))
+    assert float(jumps) < 0.05 * float(jnp.max(jnp.abs(g)))
+
+
+# ---------------------------------------------------------------------------
+# analytic kernel (Def. 8): rect + Gamma(2,1) == Laplace exactly
+# ---------------------------------------------------------------------------
+
+def test_analytic_wlsh_kernel_matches_laplace(rng):
+    spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"), pdf=GammaPDF(2.0, 1.0))
+    kern = make_wlsh_kernel(spec)
+    x = jax.random.uniform(rng, (64, 3)) * 3.0
+    np.testing.assert_allclose(kern(x, x), laplace_kernel(x, x), atol=2e-4)
+
+
+@pytest.mark.parametrize("name", sorted(BUCKET_FNS))
+def test_analytic_kernel_is_valid(name, rng):
+    kern = make_wlsh_kernel(WLSHKernelSpec(bucket=get_bucket_fn(name),
+                                           pdf=GammaPDF(7.0, 1.0)))
+    x = jax.random.uniform(rng, (48, 2)) * 2.0
+    k = np.asarray(kern(x, x))
+    np.testing.assert_allclose(np.diag(k), 1.0, atol=1e-4)   # k(0) = 1
+    np.testing.assert_allclose(k, k.T, atol=1e-6)
+    evs = np.linalg.eigvalsh(k)
+    assert evs.min() > -1e-3, "analytic WLSH kernel must be PSD"
+
+
+# ---------------------------------------------------------------------------
+# estimator unbiasedness (Claim 22) — statistical, all bucket fns
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,pdf", [("rect", GammaPDF(2.0, 1.0)),
+                                      ("tent", GammaPDF(2.0, 1.0)),
+                                      ("smooth", GammaPDF(7.0, 1.0))])
+def test_wlsh_estimator_unbiased(name, pdf, rng):
+    f = get_bucket_fn(name)
+    n, d, m = 80, 2, 6000
+    x = jax.random.uniform(rng, (n, d)) * 2.0
+    params = sample_lsh_params(jax.random.fold_in(rng, 1), m, d, pdf)
+    k_est = exact_kernel_matrix(featurize(params, f, x))
+    kern = make_wlsh_kernel(WLSHKernelSpec(bucket=f, pdf=pdf))
+    err = float(jnp.max(jnp.abs(k_est - kern(x, x))))
+    # MC error ~ f_inf^(2d)/sqrt(m): generous 5-sigma-ish bound
+    assert err < 5.0 * (f.f_inf ** (2 * d)) / np.sqrt(m), err
+
+
+# ---------------------------------------------------------------------------
+# matvec data structures == explicit matrices (the O(n) structure of §4)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(16, 100), st.integers(1, 4), st.integers(1, 24))
+@settings(max_examples=12, deadline=None)
+def test_exact_matvec_matches_dense(n, d, m):
+    key = jax.random.PRNGKey(n * 100 + d * 10 + m)
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    params = sample_lsh_params(jax.random.fold_in(key, 1), m, d,
+                               GammaPDF(2.0, 1.0))
+    feats = featurize(params, get_bucket_fn("rect"), x)
+    beta = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    dense = exact_kernel_matrix(feats) @ beta
+    mv = exact_matvec(build_exact_index(feats), beta)
+    np.testing.assert_allclose(mv, dense, atol=1e-4)
+
+
+@given(st.integers(16, 80), st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_table_matvec_matches_table_matrix(n, d):
+    key = jax.random.PRNGKey(n * 7 + d)
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    params = sample_lsh_params(jax.random.fold_in(key, 1), 8, d,
+                               GammaPDF(2.0, 1.0))
+    feats = featurize(params, get_bucket_fn("tent"), x)
+    idx = build_table_index(feats, 256)
+    beta = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    dense = table_kernel_matrix(idx) @ beta
+    np.testing.assert_allclose(table_matvec(idx, beta), dense, atol=1e-4)
+
+
+def test_table_kernel_matrix_is_psd(rng):
+    """CountSketch mode stays PSD (K~ = (S Phi)(S Phi)^T) — the property the
+    OSE argument needs after the TPU adaptation (DESIGN.md §3)."""
+    x = jax.random.uniform(rng, (60, 2)) * 2.0
+    params = sample_lsh_params(jax.random.fold_in(rng, 3), 12, 2,
+                               GammaPDF(2.0, 1.0))
+    feats = featurize(params, get_bucket_fn("rect"), x)
+    k = np.asarray(table_kernel_matrix(build_table_index(feats, 128)))
+    assert np.linalg.eigvalsh(k).min() > -1e-4
+
+
+def test_claim10_operator_norm_bound(rng):
+    """Claim 10: 0 <= K~^s <= n ||f^{x}d||_inf^2 I, per instance."""
+    n, d = 40, 2
+    x = jax.random.uniform(rng, (n, d)) * 2.0
+    for name in BUCKET_FNS:
+        f = get_bucket_fn(name)
+        params = sample_lsh_params(jax.random.fold_in(rng, 5), 1, d,
+                                   GammaPDF(2.0, 1.0))
+        k = np.asarray(exact_kernel_matrix(featurize(params, f, x)))
+        evs = np.linalg.eigvalsh(k)
+        assert evs.min() > -1e-5
+        assert evs.max() <= n * f.f_inf ** (2 * d) + 1e-4
+
+
+def test_ose_concentration_improves_with_m(rng):
+    """Spectral error of (K~+lam I) vs (K+lam I) shrinks with m (Thm 11)."""
+    n, d, lam = 96, 2, 1.0
+    x = jax.random.uniform(rng, (n, d)) * 2.0
+    kern = make_wlsh_kernel(WLSHKernelSpec(bucket=get_bucket_fn("rect")))
+    k_true = np.asarray(kern(x, x))
+    errs = []
+    for m in (8, 64, 512):
+        params = sample_lsh_params(jax.random.fold_in(rng, m), m, d,
+                                   GammaPDF(2.0, 1.0))
+        k_est = np.asarray(exact_kernel_matrix(
+            featurize(params, get_bucket_fn("rect"), x)))
+        a = np.linalg.cholesky(k_true + lam * np.eye(n))
+        ainv = np.linalg.inv(a)
+        mat = ainv @ (k_est + lam * np.eye(n)) @ ainv.T - np.eye(n)
+        errs.append(np.linalg.norm(mat, 2))
+    assert errs[2] < errs[0], errs
+    assert errs[2] < 0.5, errs

@@ -1,0 +1,127 @@
+"""Distributed KRR vs single-device reference.  Runs in a SUBPROCESS with 8
+fake CPU devices (the flag must be set before jax initializes, which pytest's
+main process has already done)."""
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import jax, jax.numpy as jnp
+from repro.core import sample_lsh_params, GammaPDF, get_bucket_fn, featurize
+from repro.core.wlsh import build_table_index, table_matvec
+from repro.core.krr import cg_solve
+from repro.core.distributed import KRRStepConfig, make_krr_step, make_krr_predict
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+n, d, m, B = 256, 4, 8, 512
+key = jax.random.PRNGKey(0)
+x = jax.random.uniform(key, (n, d)) * 2.0
+y = jax.random.normal(jax.random.PRNGKey(1), (n,))
+lsh = sample_lsh_params(jax.random.PRNGKey(2), m, d, GammaPDF(2.0, 1.0))
+f = get_bucket_fn("rect")
+cfg = KRRStepConfig(m=m, table_size=B, lam=0.5, cg_iters=25,
+                    data_axes=("pod", "data"), model_axis="model")
+beta, resnorm, tables = jax.jit(make_krr_step(mesh, cfg, f))(x, y, lsh)
+
+feats = featurize(lsh, f, x)
+idx = build_table_index(feats, B)
+ref = cg_solve(lambda v: table_matvec(idx, v), y, 0.5, tol=0.0, maxiter=25)
+err = float(jnp.max(jnp.abs(jax.device_get(beta) - ref.x)))
+assert err < 1e-3, f"beta mismatch {err}"
+
+pred = jax.jit(make_krr_predict(mesh, cfg, f))(x, lsh, tables)
+err2 = float(jnp.max(jnp.abs(pred - table_matvec(idx, ref.x))))
+assert err2 < 1e-3, f"predict mismatch {err2}"
+print("DISTRIBUTED_OK", err, err2)
+"""
+
+
+@pytest.mark.slow
+def test_distributed_krr_matches_reference():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        env={"PYTHONPATH": "src",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, cwd=".", timeout=420)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "DISTRIBUTED_OK" in proc.stdout
+
+
+_DP_SCRIPT = r"""
+import jax, jax.numpy as jnp
+from functools import partial
+from jax.sharding import PartitionSpec as P
+from repro.optim import compressed_psum
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((8,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+x = jnp.arange(8 * 64, dtype=jnp.float32).reshape(8, 64) / 100.0
+
+@partial(jax.shard_map, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
+         check_vma=False)
+def summed(v):
+    local = v[0]
+    return compressed_psum(local, "pod", jax.random.PRNGKey(0))[None]
+
+out = summed(x)
+exact = jnp.sum(x, axis=0)
+err = float(jnp.max(jnp.abs(out[0] - exact)))
+scale = float(jnp.max(jnp.abs(x))) / 127.0
+assert err <= 8 * scale + 1e-6, (err, scale)
+print("COMPRESSED_PSUM_OK", err)
+"""
+
+
+@pytest.mark.slow
+def test_compressed_psum_across_8_devices():
+    proc = subprocess.run(
+        [sys.executable, "-c", _DP_SCRIPT],
+        env={"PYTHONPATH": "src",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, cwd=".", timeout=420)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "COMPRESSED_PSUM_OK" in proc.stdout
+
+
+_HJ_SCRIPT = r"""
+import jax, jax.numpy as jnp
+from repro.core import sample_lsh_params, GammaPDF, get_bucket_fn
+from repro.core.distributed import (KRRStepConfig, make_krr_step,
+                                    make_krr_step_hashjoin)
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+n, d, m, B = 512, 5, 8, 1024
+key = jax.random.PRNGKey(0)
+x = jax.random.uniform(key, (n, d)) * 2.0
+y = jax.random.normal(jax.random.PRNGKey(1), (n,))
+lsh = sample_lsh_params(jax.random.PRNGKey(2), m, d, GammaPDF(2.0, 1.0))
+f = get_bucket_fn("rect")
+cfg = KRRStepConfig(m=m, table_size=B, lam=0.5, cg_iters=25,
+                    data_axes=("pod", "data"), model_axis="model")
+b1, r1, _ = jax.jit(make_krr_step(mesh, cfg, f))(x, y, lsh)
+b2, r2, _ = jax.jit(make_krr_step_hashjoin(mesh, cfg, f, cap_factor=8.0))(
+    x, y, lsh)
+err = float(jnp.max(jnp.abs(jax.device_get(b1) - jax.device_get(b2))))
+assert err < 1e-4, f"hashjoin != psum: {err}"
+print("HASHJOIN_OK", err)
+"""
+
+
+@pytest.mark.slow
+def test_hashjoin_krr_matches_psum_mode():
+    """The beyond-paper hash-join table mode solves the same system as the
+    paper-faithful psum mode (generous routing capacity => no drops)."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _HJ_SCRIPT],
+        env={"PYTHONPATH": "src",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, cwd=".", timeout=420)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "HASHJOIN_OK" in proc.stdout

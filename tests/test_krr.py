@@ -1,0 +1,77 @@
+"""KRR solvers: CG, exact, WLSH-approximate, RFF baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (GammaPDF, WLSHKernelSpec, cg_solve, exact_krr_fit,
+                        exact_krr_predict, gaussian_kernel, get_bucket_fn,
+                        laplace_kernel, rff_krr_fit, rff_krr_predict,
+                        wlsh_krr_fit, wlsh_krr_predict)
+from repro.core.gp import gp_regression_dataset
+
+
+def test_cg_matches_direct_solve(rng):
+    n = 64
+    a = jax.random.normal(rng, (n, n))
+    psd = a @ a.T / n
+    b = jax.random.normal(jax.random.fold_in(rng, 1), (n,))
+    lam = 0.3
+    res = cg_solve(lambda v: psd @ v, b, lam, tol=1e-10, maxiter=500)
+    direct = jnp.linalg.solve(psd + lam * jnp.eye(n), b)
+    np.testing.assert_allclose(res.x, direct, atol=1e-4)
+
+
+def test_exact_krr_interpolates_smooth_function(rng):
+    x, y, f = gp_regression_dataset(rng, gaussian_kernel, n=300, d=2,
+                                    noise=0.02)
+    beta = exact_krr_fit(gaussian_kernel, x, y, lam=0.05)
+    pred = exact_krr_predict(gaussian_kernel, x, beta, x)
+    rmse = float(jnp.sqrt(jnp.mean((pred - f) ** 2)))
+    assert rmse < 0.1, rmse
+
+
+def test_wlsh_krr_beats_mean_predictor(rng):
+    x, y, f = gp_regression_dataset(rng, laplace_kernel, n=600, d=3,
+                                    noise=0.05)
+    xtr, ytr, xte, fte = x[:400], y[:400], x[400:], f[400:]
+    spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"))
+    model = wlsh_krr_fit(jax.random.fold_in(rng, 7), xtr, ytr, spec, m=400,
+                         lam=0.3)
+    pred = wlsh_krr_predict(model, xte)
+    rmse = float(jnp.sqrt(jnp.mean((pred - fte) ** 2)))
+    base = float(jnp.sqrt(jnp.mean((fte - jnp.mean(ytr)) ** 2)))
+    assert rmse < 0.6 * base, (rmse, base)
+
+
+def test_wlsh_krr_exact_mode_close_to_exact_laplace_krr(rng):
+    """With many instances the approximate solution approaches exact KRR on
+    the analytically-equal Laplace kernel."""
+    x, y, _ = gp_regression_dataset(rng, laplace_kernel, n=200, d=2,
+                                    noise=0.05)
+    lam = 1.0
+    beta_exact = exact_krr_fit(laplace_kernel, x, y, lam=lam)
+    pred_exact = exact_krr_predict(laplace_kernel, x, beta_exact, x)
+    spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"))
+    model = wlsh_krr_fit(jax.random.fold_in(rng, 3), x, y, spec, m=1500,
+                         lam=lam, mode="exact")
+    pred_appr = exact_krr_predict(laplace_kernel, x, model.beta, x)
+    err = float(jnp.max(jnp.abs(pred_appr - pred_exact)))
+    assert err < 0.25 * float(jnp.std(y)), err
+
+
+def test_rff_krr_fits_gaussian_gp(rng):
+    x, y, f = gp_regression_dataset(rng, gaussian_kernel, n=400, d=2,
+                                    noise=0.05)
+    model = rff_krr_fit(jax.random.fold_in(rng, 11), x, y, n_features=512,
+                        lam=0.05)
+    pred = rff_krr_predict(model, x)
+    rmse = float(jnp.sqrt(jnp.mean((pred - f) ** 2)))
+    assert rmse < 0.15, rmse
+
+
+def test_cg_iteration_count_reported(rng):
+    n = 32
+    b = jax.random.normal(rng, (n,))
+    res = cg_solve(lambda v: v, b, lam=1.0, tol=1e-8)  # A = I: converges fast
+    assert int(res.iters) <= 3
+    assert float(res.resnorm) < 1e-6

@@ -1,0 +1,92 @@
+"""Sharding rules engine: divisibility fallback, axis contention, and the
+invariant that a PartitionSpec never reuses a mesh axis (property test)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding import RULES, spec_for
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis_names + devices.shape is all spec_for reads."""
+
+    def __init__(self, sizes: dict):
+        self.axis_names = tuple(sizes)
+        self.devices = np.empty(tuple(sizes.values()), dtype=object)
+
+
+POD = FakeMesh({"data": 16, "model": 16})
+MULTIPOD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_batch_shards_over_pod_and_data():
+    assert spec_for(("batch", None), (256, 4096), MULTIPOD) == \
+        P(("pod", "data"), None)
+    assert spec_for(("batch", None), (256, 4096), POD) == P("data", None)
+
+
+def test_divisibility_fallback_heads():
+    # qwen3: 40 heads % 16 != 0 -> heads rule falls through, head_dim=128 takes
+    spec = spec_for(("embed", "heads", "head_dim"), (5120, 40, 128), POD)
+    assert spec == P("data", None, "model")
+
+
+def test_per_tensor_axis_contention():
+    # batch grabs ('pod','data'); seq_shard falls back to 'model'
+    spec = spec_for(("batch", "seq_shard", None, None),
+                    (128, 32768, 8, 128), MULTIPOD)
+    assert spec == P(("pod", "data"), "model", None, None)
+    # ...but kv_heads/head_dim outrank seq_shard on a full cache tensor, so
+    # ring-cache writes stay shard-local (decode scatter pathology)
+    spec = spec_for(("batch", "seq_shard", "kv_heads", "head_dim"),
+                    (128, 32768, 8, 128), MULTIPOD)
+    assert spec == P(("pod", "data"), None, None, "model")
+    # batch=1 not divisible -> seq_shard wins the data axes (long_500k cell)
+    spec = spec_for(("batch", "seq_shard", "kv_heads", None),
+                    (1, 524288, 1, 256), MULTIPOD)
+    assert spec == P(None, ("pod", "data"), None, None)
+
+
+def test_experts_rule():
+    # llama4: 16 experts == model axis -> expert parallelism
+    assert spec_for(("experts", "embed", "mlp"), (16, 5120, 8192), POD) == \
+        P("model", "data", None)
+    # mixtral: 8 experts % 16 != 0 -> falls through; mlp gets model
+    assert spec_for(("experts", "embed", "mlp"), (8, 6144, 16384), POD) == \
+        P(None, "data", "model")
+
+
+def test_decision_log():
+    decisions = []
+    spec_for(("heads",), (40,), POD, decisions)
+    assert any("40 % 16" in d for d in decisions)
+
+
+_LOGICAL = [name for name, _ in RULES if name is not None]
+
+
+@given(st.lists(st.sampled_from(_LOGICAL + [None]), min_size=1, max_size=5),
+       st.lists(st.sampled_from([1, 2, 8, 16, 40, 96, 128, 256, 4096]),
+                min_size=1, max_size=5))
+@settings(max_examples=100, deadline=None)
+def test_spec_never_reuses_mesh_axis(axes, shape):
+    n = min(len(axes), len(shape))
+    axes, shape = tuple(axes[:n]), tuple(shape[:n])
+    for mesh in (POD, MULTIPOD):
+        spec = spec_for(axes, shape, mesh)
+        used = []
+        for entry in spec:
+            if entry is None:
+                continue
+            used.extend(entry if isinstance(entry, tuple) else (entry,))
+        assert len(used) == len(set(used)), (axes, shape, spec)
+        # every assignment must divide its dim
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for dim, entry in zip(shape, spec):
+            if entry is None:
+                continue
+            prod = int(np.prod([sizes[a] for a in
+                                (entry if isinstance(entry, tuple)
+                                 else (entry,))]))
+            assert dim % prod == 0, (axes, shape, spec)

@@ -1,0 +1,209 @@
+"""Substrate tests: data determinism, optimizer, gradient compression,
+checkpointing (atomicity, async, elastic), fault-tolerant loop."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, restore_resharded,
+                              save_checkpoint)
+from repro.data import make_regression_dataset, synthetic_lm_batch
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_schedule, dequantize_int8, global_norm,
+                         quantize_int8)
+from repro.runtime import FailureInjector, RestartableLoop, StragglerWatchdog
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_synthetic_batches_deterministic_and_resumable():
+    a = synthetic_lm_batch(7, 42, batch=4, seq=32, vocab=101)
+    b = synthetic_lm_batch(7, 42, batch=4, seq=32, vocab=101)
+    assert bool(jnp.all(a["tokens"] == b["tokens"]))
+    c = synthetic_lm_batch(8, 42, batch=4, seq=32, vocab=101)
+    assert not bool(jnp.all(a["tokens"] == c["tokens"]))
+    # labels are next tokens with masked tail
+    assert bool(jnp.all(a["labels"][:, :-1] == a["tokens"][:, 1:]))
+    assert bool(jnp.all(a["labels"][:, -1] == -1))
+
+
+def test_synthetic_stream_is_learnable_structure():
+    """Most transitions follow the affine recurrence (noise=0.1)."""
+    b = synthetic_lm_batch(0, 0, batch=8, seq=256, vocab=997, noise=0.1)
+    t = b["tokens"]
+    pred = (t[:, :-1] * 4097 + 1231) % 997
+    frac = float(jnp.mean((pred == t[:, 1:]).astype(jnp.float32)))
+    assert 0.8 < frac < 0.95, frac
+
+
+def test_regression_datasets_standardized():
+    xtr, ytr, xte, yte = make_regression_dataset("insurance", scale=0.05)
+    assert xtr.shape[1] == 85
+    assert abs(float(jnp.mean(ytr))) < 1e-3
+    np.testing.assert_allclose(float(jnp.std(ytr)), 1.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.full((8,), 5.0)}
+    st = adamw_init(params)
+    cfg = AdamWConfig(lr=0.3, weight_decay=0.0, warmup_steps=0,
+                      total_steps=200, clip_norm=100.0)
+    for _ in range(150):
+        grads = jax.tree.map(lambda p: 2 * p, params)
+        params, st, _ = adamw_update(cfg, grads, st, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_cosine_schedule_endpoints():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                      min_lr_frac=0.1)
+    assert float(cosine_schedule(cfg, jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(cosine_schedule(cfg, jnp.asarray(10))),
+                               1.0, atol=0.01)
+    np.testing.assert_allclose(float(cosine_schedule(cfg, jnp.asarray(110))),
+                               0.1, atol=0.01)
+
+
+def test_grad_clipping_caps_update_norm():
+    params = {"w": jnp.zeros((4,))}
+    st = adamw_init(params)
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, warmup_steps=0, total_steps=10,
+                      weight_decay=0.0)
+    _, _, metrics = adamw_update(cfg, {"w": jnp.full((4,), 100.0)}, st, params)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_int8_quantization_unbiased_and_bounded(rng):
+    x = jax.random.normal(rng, (4096,)) * 3.0
+    q, scale = quantize_int8(x, rng)
+    err = dequantize_int8(q, scale) - x
+    assert float(jnp.max(jnp.abs(err))) <= float(scale) + 1e-6
+    reps = jnp.stack([dequantize_int8(*quantize_int8(
+        x, jax.random.fold_in(rng, i))) for i in range(128)])
+    bias = jnp.mean(reps, 0) - x
+    assert float(jnp.max(jnp.abs(bias))) < 4 * float(scale) / np.sqrt(128)
+
+
+def test_compressed_psum_matches_exact_within_quantization():
+    """compressed_psum == true sum up to bounded quantization error (runs on a
+    1-device mesh via shard_map over a size-1 axis)."""
+    import jax
+    from jax.sharding import Mesh
+    from functools import partial
+    from repro.optim import compressed_psum
+    mesh = jax.make_mesh((1,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.linspace(-2.0, 2.0, 256)
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+             out_specs=jax.sharding.PartitionSpec(), check_vma=False)
+    def run(v):
+        return compressed_psum(v, "pod", jax.random.PRNGKey(0))
+
+    out = run(x)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(out - x))) <= scale + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _state(v=0.0):
+    return {"a": jnp.full((4, 3), v), "nested": {"b": jnp.asarray(int(v))}}
+
+
+def test_checkpoint_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 7, _state(3.0), meta={"note": "x"})
+        state, step, meta = restore_checkpoint(d, _state())
+        assert step == 7 and meta["note"] == "x"
+        np.testing.assert_allclose(state["a"], 3.0)
+
+
+def test_latest_step_ignores_incomplete():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 5, _state())
+        os.makedirs(os.path.join(d, "step_9.tmp"))       # crashed write
+        os.makedirs(os.path.join(d, "step_11"))          # missing meta.json
+        assert latest_step(d) == 5
+
+
+def test_checkpoint_shape_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, _state())
+        bad_template = {"a": jnp.zeros((2, 2)), "nested": {"b": jnp.asarray(0)}}
+        with pytest.raises(ValueError):
+            restore_checkpoint(d, bad_template)
+
+
+def test_manager_async_save_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, _state(float(s)))
+        mgr.wait()
+        steps = sorted(int(n.split("_")[1]) for n in os.listdir(d)
+                       if n.startswith("step_") and not n.endswith(".tmp"))
+        assert steps == [3, 4]
+
+
+def test_elastic_restore_places_with_target_sharding():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, _state(2.0))
+        sh = {"a": NamedSharding(mesh, P("data", None)),
+              "nested": {"b": NamedSharding(mesh, P())}}
+        state, step, _ = restore_resharded(d, _state(), sh)
+        assert step == 3
+        assert state["a"].sharding == sh["a"]
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_restartable_loop_exactly_once_semantics():
+    with tempfile.TemporaryDirectory() as d:
+        def step_fn(state, step):
+            return {"x": state["x"] + 1.0,
+                    "acc": state["acc"] + step}, {"step": step}
+
+        loop = RestartableLoop(step_fn, d, checkpoint_every=4,
+                               injector=FailureInjector(at_steps=(5, 6, 11)))
+        res = loop.run({"x": jnp.zeros(()), "acc": jnp.zeros(())}, 16)
+        assert float(res.state["x"]) == 16.0
+        assert float(res.state["acc"]) == sum(range(16))
+        assert loop.restarts == 3
+
+
+def test_restartable_loop_gives_up_after_max_restarts():
+    with tempfile.TemporaryDirectory() as d:
+        def bad_step(state, step):
+            raise RuntimeError("always broken")
+
+        loop = RestartableLoop(bad_step, d, max_restarts=2)
+        with pytest.raises(RuntimeError):
+            loop.run({"x": jnp.zeros(())}, 4)
+
+
+def test_straggler_watchdog_flags_outliers():
+    wd = StragglerWatchdog(slow_factor=3.0)
+    for i in range(20):
+        wd.observe(i, 0.1)
+    wd.observe(20, 1.0)
+    assert len(wd.stragglers) == 1
+    with pytest.raises(TimeoutError):
+        StragglerWatchdog(hard_timeout_s=0.5).observe(0, 1.0)
