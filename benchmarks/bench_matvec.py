@@ -1,45 +1,58 @@
 """§4 data-structure claim: K~ beta in O(n) time / O(n) memory.
 
-Times the WLSH matvec (exact sort mode and CountSketch table mode, both the
-jnp path and the Pallas kernel path) across n, against the O(n^2) dense
-matvec; reports microseconds per call and the empirical scaling exponent."""
+Times the WLSH matvec through the unified operator stack — exact sort mode
+and the CountSketch table mode on each backend ('reference' jnp vs 'pallas'
+fused kernels) — across n, against the O(n^2) dense matvec; reports
+microseconds per call and the empirical scaling exponent.  ``run`` returns
+JSON-able per-(n, backend) rows so the perf trajectory can accumulate in
+BENCH_matvec.json (see benchmarks/run.py)."""
 from __future__ import annotations
+
+import json
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import GammaPDF, featurize, get_bucket_fn, sample_lsh_params
-from repro.core.wlsh import (build_exact_index, build_table_index,
-                             exact_kernel_matrix, exact_matvec, table_matvec)
-from repro.kernels.binning.ops import table_matvec_op
+from repro.core import (GammaPDF, get_bucket_fn, make_operator,
+                        sample_lsh_params)
+from repro.core.operator import default_table_size
+from repro.core.wlsh import build_exact_index, exact_kernel_matrix, exact_matvec
 
 from .common import emit, time_fn
 
 
 def run(ns=(1024, 4096, 16384), d: int = 8, m: int = 16, seed: int = 0):
     f = get_bucket_fn("rect")
+    on_tpu = jax.default_backend() == "tpu"
     rows = []
     for n in ns:
         key = jax.random.PRNGKey(seed)
         x = jax.random.uniform(key, (n, d)) * 2.0
-        params = sample_lsh_params(jax.random.fold_in(key, 1), m, d,
-                                   GammaPDF(2.0, 1.0))
-        feats = featurize(params, f, x)
+        lsh = sample_lsh_params(jax.random.fold_in(key, 1), m, d,
+                                GammaPDF(2.0, 1.0))
         beta = jax.random.normal(jax.random.fold_in(key, 2), (n,))
-        eidx = build_exact_index(feats)
-        tidx = build_table_index(feats, 1 << max(10, (2 * n - 1).bit_length()))
+        table_size = default_table_size(n, min_pow=10)
 
-        t_exact = time_fn(jax.jit(lambda b: exact_matvec(eidx, b)), beta)
-        t_table = time_fn(jax.jit(lambda b: table_matvec(tidx, b)), beta)
-        row = {"n": n, "exact_us": t_exact * 1e6, "table_us": t_table * 1e6}
-        if n <= 1024:
-            # interpret-mode Pallas runs the kernel body in Python — correct-
-            # ness validation only, meaningless as a wall-clock datapoint
-            row["pallas_us"] = time_fn(
-                jax.jit(lambda b: table_matvec_op(tidx, b, interpret=True)),
-                beta) * 1e6
+        op_ref = make_operator(lsh, f, table_size, backend="reference")
+        feats = op_ref.featurize(x)
+        tidx = op_ref.build_index(feats)
+        eidx = build_exact_index(feats)
+
+        row = {"n": n, "m": m, "d": d, "table_size": table_size,
+               "exact_us": time_fn(jax.jit(
+                   lambda b: exact_matvec(eidx, b)), beta) * 1e6,
+               "reference_us": time_fn(jax.jit(
+                   lambda b: op_ref.matvec(tidx, b)), beta) * 1e6}
+        if on_tpu or n <= 1024:
+            # off-TPU the Pallas kernels run in interpret mode (the kernel
+            # body executes in Python) — correctness validation only,
+            # meaningless as a wall-clock datapoint, so keep n tiny
+            op_pal = make_operator(lsh, f, table_size, backend="pallas")
+            row["pallas_us"] = time_fn(jax.jit(
+                lambda b: op_pal.matvec(tidx, b)), beta) * 1e6
+            row["pallas_interpret"] = op_pal.interpret
         if n <= 4096:  # dense comparison only where the matrix fits
             kmat = exact_kernel_matrix(feats)
             row["dense_us"] = time_fn(jax.jit(lambda b: kmat @ b), beta) * 1e6
@@ -47,18 +60,24 @@ def run(ns=(1024, 4096, 16384), d: int = 8, m: int = 16, seed: int = 0):
     return rows
 
 
-def main() -> None:
+def main(json_path: str | None = None) -> None:
     rows = run()
-    print("n,exact_us,table_us,pallas_interp_us,dense_us")
+    print("n,exact_us,reference_us,pallas_us,dense_us")
     for r in rows:
-        print(f"{r['n']},{r['exact_us']:.1f},{r['table_us']:.1f},"
+        print(f"{r['n']},{r['exact_us']:.1f},{r['reference_us']:.1f},"
               f"{r.get('pallas_us', float('nan')):.1f},"
               f"{r.get('dense_us', float('nan')):.1f}")
     # empirical exponent between the LAST two sizes (smaller ones are
     # dominated by dispatch overhead); dense matvec would show ~2.0
-    e = np.log(rows[-1]["table_us"] / rows[-2]["table_us"]) / \
+    e = np.log(rows[-1]["reference_us"] / rows[-2]["reference_us"]) / \
         np.log(rows[-1]["n"] / rows[-2]["n"])
-    emit("bench_matvec", rows[-1]["table_us"] * 1e-6,
+    if json_path:
+        payload = {"bench": "matvec", "platform": jax.default_backend(),
+                   "scaling_exponent": float(e), "rows": rows}
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"[bench_matvec] wrote {json_path}")
+    emit("bench_matvec", rows[-1]["reference_us"] * 1e-6,
          f"table_scaling_exponent={e:.2f} (1.0 = linear, dense = 2.0)")
 
 

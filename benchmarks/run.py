@@ -1,6 +1,8 @@
 """Run every benchmark at CPU-friendly scale.  One section per paper
 table/figure; each emits ``name,us_per_call,derived`` CSV lines plus its own
-detail table.
+detail table.  The matvec section also writes ``BENCH_matvec.json`` — the
+per-(n, backend) operator timings that accumulate the perf trajectory across
+PRs (reference jnp vs fused Pallas kernels).
 
     PYTHONPATH=src python -m benchmarks.run
 """
@@ -9,6 +11,8 @@ from __future__ import annotations
 import time
 import traceback
 
+MATVEC_JSON = "BENCH_matvec.json"
+
 
 def main() -> None:
     from . import bench_matvec, bench_ose, table1_gp, table2_krr
@@ -16,7 +20,8 @@ def main() -> None:
         ("Table 1 (GP regression RMSE)", lambda: table1_gp.main(scale=0.15,
                                                                 m=280)),
         ("Table 2 (large-scale KRR)", table2_krr.main),
-        ("Matvec O(n) scaling (paper §4)", bench_matvec.main),
+        ("Matvec O(n) scaling (paper §4)",
+         lambda: bench_matvec.main(json_path=MATVEC_JSON)),
         ("OSE eps vs m (Thm 11/12)", bench_ose.main),
     ]
     failures = 0

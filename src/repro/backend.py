@@ -1,0 +1,52 @@
+"""Backend selection for the WLSH operator stack.
+
+Three backends implement the same operator contract (see core/operator.py):
+
+* ``reference`` — pure jnp (core/lsh.py + core/wlsh.py).  Always available,
+  always correct; the oracle every other backend is tested against.
+* ``pallas``    — the fused TPU kernels (kernels/featurize + kernels/binning).
+  On a real TPU they run compiled; elsewhere they fall back to Pallas
+  interpret mode (Python emulation — correctness only, not speed).
+* ``auto``      — platform-based choice: ``pallas`` when the default JAX
+  backend is a TPU, ``reference`` otherwise.  This is the default everywhere
+  so that laptops/CI get the fast jnp path and pods get the fused kernels
+  without any config change.
+
+The environment variable ``REPRO_WLSH_BACKEND`` overrides ``auto`` (useful for
+forcing the kernel path through CI parity runs).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+BACKENDS = ("reference", "pallas", "auto")
+
+_ENV_VAR = "REPRO_WLSH_BACKEND"
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: only compile for real on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_backend(name: str | None = None) -> str:
+    """Resolve a backend name to a concrete one ('reference' or 'pallas').
+
+    ``None`` and ``'auto'`` pick per platform (TPU -> pallas, else reference),
+    unless ``REPRO_WLSH_BACKEND`` forces a concrete choice.
+    """
+    if name is None:
+        name = "auto"
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
+    if name == "auto":
+        env = os.environ.get(_ENV_VAR, "").strip().lower()
+        if env:
+            if env not in BACKENDS or env == "auto":
+                raise ValueError(
+                    f"{_ENV_VAR}={env!r} must be 'reference' or 'pallas'")
+            return env
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+    return name

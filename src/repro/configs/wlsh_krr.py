@@ -19,6 +19,9 @@ class WLSHKRRConfig:
     pdf_shape: float = 2.0        # p(w) = w e^{-w}
     lam: float = 1.0
     cg_iters: int = 32            # iterations fused into one lowered step
+    backend: str = "auto"         # WLSH operator backend (core/operator.py):
+                                  # auto = fused Pallas kernels on TPU,
+                                  # jnp reference elsewhere
     notes: str = "paper's technique; data-sharded CG step over the mesh"
 
 

@@ -15,8 +15,12 @@ Parallelization (DESIGN.md §3/§6):
 * **CG** runs on sharded vectors; the two dot products per iteration are
   scalar psums.
 
-Everything is expressed with ``jax.shard_map`` + ``jax.lax`` collectives; no
-host-side communication.
+All scatter/readout goes through ``core.operator.WLSHOperator`` — this module
+adds only the collectives.  Each shard builds an operator from its *local*
+LSH shard inside shard_map; ``loads`` produces the psum-able partial tables
+and ``readout(average=False)`` the local instance-sum that the model-axis
+psum completes.  Everything is expressed with ``jax.shard_map`` + ``jax.lax``
+collectives; no host-side communication.
 """
 from __future__ import annotations
 
@@ -27,9 +31,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..backend import default_interpret, resolve_backend
+from ..compat import shard_map
 from .bucket_fns import BucketFn
-from .lsh import GammaPDF, LSHParams, featurize, sample_lsh_params, \
-    slots_from_features
+from .lsh import GammaPDF, LSHParams, sample_lsh_params
+from .operator import WLSHOperator
 
 Array = jnp.ndarray
 
@@ -41,29 +47,28 @@ class KRRStepConfig(NamedTuple):
     cg_iters: int          # fixed CG iteration count fused into the step
     data_axes: tuple[str, ...] = ("data",)
     model_axis: str = "model"
+    backend: str = "auto"  # operator backend inside each shard
 
 
-def _local_tables(slot: Array, contrib: Array, table_size: int) -> Array:
-    """(m_loc, n_loc) scatter-add -> (m_loc, B) local partial tables."""
-    m_loc = slot.shape[0]
-    rows = jnp.arange(m_loc, dtype=jnp.int32)[:, None]
-    tables = jnp.zeros((m_loc, table_size), jnp.float32)
-    return tables.at[rows, slot].add(contrib)
+def _shard_operator(cfg: KRRStepConfig, f: BucketFn,
+                    lsh_local: LSHParams) -> WLSHOperator:
+    """Per-shard operator over the local LSH slice (backend resolved at
+    trace time — shard_map bodies must see a concrete choice)."""
+    return WLSHOperator(lsh=lsh_local, bucket=f, table_size=cfg.table_size,
+                        backend=resolve_backend(cfg.backend),
+                        interpret=default_interpret())
 
 
-def make_distributed_matvec(cfg: KRRStepConfig):
-    """Returns matvec(slot, sign, weight, beta_local) -> (K~ beta)_local.
+def make_distributed_matvec(cfg: KRRStepConfig, op: WLSHOperator):
+    """Returns matvec(index, beta_local) -> (K~ beta)_local.
 
-    Must be called inside shard_map: slot/sign/weight are the local
-    featurization (m_loc, n_loc); beta_local is (n_loc,).
+    A thin psum wrapper around the operator's local scatter/readout — must be
+    called inside shard_map with an index built from the local featurization
+    (m_loc, n_loc) and a (n_loc,) beta shard.
     """
-    def matvec(slot, sign, weight, beta_local):
-        contrib = beta_local[None, :] * weight * sign          # (m_loc, n_loc)
-        tables = _local_tables(slot, contrib, cfg.table_size)
-        tables = jax.lax.psum(tables, cfg.data_axes)           # merge data shards
-        rows = jnp.arange(slot.shape[0], dtype=jnp.int32)[:, None]
-        vals = tables[rows, slot] * sign * weight              # (m_loc, n_loc)
-        out = jnp.sum(vals, axis=0)                            # partial over m_loc
+    def matvec(index, beta_local):
+        tables = jax.lax.psum(op.loads(index, beta_local), cfg.data_axes)
+        out = op.readout(index, tables, average=False)   # sum over m_loc
         return jax.lax.psum(out, cfg.model_axis) / cfg.m
     return matvec
 
@@ -114,19 +119,15 @@ def make_krr_step(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
                           r1=P(cfg.model_axis, None), r2=P(cfg.model_axis, None)))
     out_specs = (data_spec, P(), P(cfg.model_axis, None))
 
-    matvec_builder = make_distributed_matvec(cfg)
-
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs)
     def step(x_local, y_local, lsh_local):
-        feats = featurize(lsh_local, f, x_local)
-        slot = slots_from_features(feats, cfg.table_size)
-        mv = lambda v: matvec_builder(slot, feats.sign, feats.weight, v)
-        beta_local, resnorm = cg_iterations(mv, y_local, cfg)
+        op = _shard_operator(cfg, f, lsh_local)
+        idx = op.build_index(op.featurize(x_local))
+        mv = make_distributed_matvec(cfg, op)
+        beta_local, resnorm = cg_iterations(lambda v: mv(idx, v), y_local, cfg)
         # final prediction tables for the solved beta
-        contrib = beta_local[None, :] * feats.weight * feats.sign
-        tables = _local_tables(slot, contrib, cfg.table_size)
-        tables = jax.lax.psum(tables, cfg.data_axes)
+        tables = jax.lax.psum(op.loads(idx, beta_local), cfg.data_axes)
         return beta_local, resnorm, tables
 
     return step
@@ -140,14 +141,12 @@ def make_krr_predict(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
                 P(cfg.model_axis, None))
     out_specs = P(cfg.data_axes)
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs)
     def predict(x_local, lsh_local, tables_local):
-        feats = featurize(lsh_local, f, x_local)
-        slot = slots_from_features(feats, cfg.table_size)
-        rows = jnp.arange(slot.shape[0], dtype=jnp.int32)[:, None]
-        vals = tables_local[rows, slot] * feats.sign * feats.weight
-        out = jnp.sum(vals, axis=0)
+        op = _shard_operator(cfg, f, lsh_local)
+        idx = op.build_index(op.featurize(x_local))
+        out = op.readout(idx, tables_local, average=False)
         return jax.lax.psum(out, cfg.model_axis) / cfg.m
 
     return predict
@@ -177,6 +176,10 @@ def sample_sharded_lsh(key: jax.Array, m: int, d: int, pdf: GammaPDF,
 # beyond the per-destination capacity are dropped (probability ~0 for
 # capacity_factor >= 2 with uniform hashing; the estimator stays unbiased in
 # sign expectation, and tests compare against the exact table mode).
+#
+# This path's scatter/readout is NOT the operator's dense-table primitive —
+# it is a different algorithm (table sharded over data, all_to_all routing),
+# so only featurization/indexing is shared with the operator.
 
 class _Routing(NamedTuple):
     bpos: Array        # (E,) destination bucket cell per entry (sentinel = NB)
@@ -265,20 +268,20 @@ def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
                           r1=P(cfg.model_axis, None), r2=P(cfg.model_axis, None)))
     out_specs = (data_spec, P(), P(cfg.model_axis, cfg.data_axes))
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs)
     def step(x_local, y_local, lsh_local):
-        feats = featurize(lsh_local, f, x_local)
-        slot = slots_from_features(feats, cfg.table_size)
-        m_loc = slot.shape[0]
-        rt = _build_routing(slot, n_shards, cfg.table_size, cfg.data_axes,
+        op = _shard_operator(cfg, f, lsh_local)
+        idx = op.build_index(op.featurize(x_local))
+        m_loc = idx.slot.shape[0]
+        rt = _build_routing(idx.slot, n_shards, cfg.table_size, cfg.data_axes,
                             cap_factor)
-        mv = lambda v: _hashjoin_matvec(rt, feats.sign, feats.weight, cfg.m,
+        mv = lambda v: _hashjoin_matvec(rt, idx.sign, idx.weight, cfg.m,
                                         m_loc, cfg.data_axes, cfg.model_axis,
                                         v, payload_dtype)
         beta_local, resnorm = cg_iterations(mv, y_local, cfg)
         # final sharded prediction table for the solved beta
-        contrib = (beta_local[None, :] * feats.weight * feats.sign).reshape(-1)
+        contrib = (beta_local[None, :] * idx.weight * idx.sign).reshape(-1)
         send_c = jnp.zeros((n_shards * rt.cap,), jnp.float32).at[rt.bpos].set(
             contrib, mode="drop")
         recv_c = jax.lax.all_to_all(send_c.reshape(n_shards, rt.cap),

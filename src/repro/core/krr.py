@@ -6,6 +6,10 @@
 * ``exact_krr_fit`` / ``exact_krr_predict`` — Cholesky baseline.
 * ``wlsh_krr_fit`` / ``wlsh_krr_predict`` — the paper's §4.2 algorithm: solve
   (K̃ + lam I) beta = y with CG, predict via bucket loads.
+
+The WLSH path runs entirely through ``core.operator.WLSHOperator``, so the
+same solver drives the jnp reference backend, the fused Pallas kernels
+(``backend='pallas'``), or platform auto-selection (``backend='auto'``).
 """
 from __future__ import annotations
 
@@ -14,11 +18,10 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .bucket_fns import BucketFn, get_bucket_fn
+from .bucket_fns import get_bucket_fn
 from .kernels import WLSHKernelSpec
-from .lsh import Features, LSHParams, featurize, sample_lsh_params, slots_from_features
-from .wlsh import (TableIndex, build_exact_index, build_table_index, exact_matvec,
-                   table_loads, table_readout)
+from .lsh import LSHParams, sample_lsh_params
+from .operator import WLSHOperator, default_table_size, make_operator
 
 Array = jnp.ndarray
 MatVec = Callable[[Array], Array]
@@ -90,41 +93,58 @@ class WLSHKRRModel(NamedTuple):
     table_size: int
     cg_iters: Array
     cg_resnorm: Array
+    backend: str = "reference"   # concrete backend the model was fit with
+
+
+def model_operator(model: WLSHKRRModel, *,
+                   backend: str | None = None) -> WLSHOperator:
+    """Rebuild the operator a fitted model was trained with (optionally
+    overriding the backend — all backends read the same tables)."""
+    return make_operator(model.lsh, get_bucket_fn(model.bucket_name),
+                         model.table_size,
+                         backend=backend if backend is not None
+                         else model.backend)
 
 
 def wlsh_krr_fit(key: jax.Array, x: Array, y: Array, spec: WLSHKernelSpec, *,
                  m: int, lam: float, mode: str = "table", table_size: int = 0,
-                 tol: float = 1e-5, maxiter: int = 400) -> WLSHKRRModel:
+                 tol: float = 1e-5, maxiter: int = 400,
+                 backend: str | None = "auto") -> WLSHKRRModel:
     n, d = x.shape
     if table_size <= 0:
         # heuristic: ~4x points per instance keeps same-slot collisions rare
-        table_size = 1 << max(8, int(jnp.ceil(jnp.log2(4 * n))))
-    f = get_bucket_fn(spec.bucket.name)
+        table_size = default_table_size(n)
     lsh = sample_lsh_params(key, m, d, spec.pdf, spec.lengthscale)
-    feats = featurize(lsh, f, x)
+    op = make_operator(lsh, get_bucket_fn(spec.bucket.name), table_size,
+                       backend=backend)
+    feats = op.featurize(x)
 
-    if mode == "exact":
-        idx = build_exact_index(feats)
-        mv = lambda v: exact_matvec(idx, v)
-    else:
-        idx = build_table_index(feats, table_size)
-        mv = lambda v: table_readout(idx, table_loads(idx, v))
-
-    res = cg_solve(mv, y, lam, tol=tol, maxiter=maxiter)
     # Prediction tables are always CountSketch (exact-mode key lookup for
     # out-of-sample points would need a hash join; the signed table is unbiased
-    # and O(1) per query — see DESIGN.md §3).
-    tidx = build_table_index(feats, table_size)
-    tables = table_loads(tidx, res.x)
+    # and O(1) per query — see DESIGN.md §3).  In table mode the same index
+    # drives CG, so it is built exactly once.
+    tidx = op.build_index(feats, mode="table")
+    if mode == "exact":
+        eidx = op.build_index(feats, mode="exact")
+        mv = lambda v: op.matvec(eidx, v)
+    elif mode == "table":
+        mv = lambda v: op.matvec(tidx, v)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    res = cg_solve(mv, y, lam, tol=tol, maxiter=maxiter)
+    tables = op.loads(tidx, res.x)
     return WLSHKRRModel(lsh=lsh, bucket_name=spec.bucket.name, beta=res.x,
                         tables=tables, table_size=table_size,
-                        cg_iters=res.iters, cg_resnorm=res.resnorm)
+                        cg_iters=res.iters, cg_resnorm=res.resnorm,
+                        backend=op.backend)
 
 
-def wlsh_krr_predict(model: WLSHKRRModel, x_test: Array) -> Array:
-    f = get_bucket_fn(model.bucket_name)
-    feats = featurize(model.lsh, f, x_test)
-    idx = TableIndex(slot=slots_from_features(feats, model.table_size),
-                     sign=feats.sign, weight=feats.weight,
-                     table_size=model.table_size)
-    return table_readout(idx, model.tables)
+def wlsh_krr_predict(model: WLSHKRRModel, x_test: Array, *,
+                     batch_size: int | None = None,
+                     backend: str | None = None) -> Array:
+    """Predict at x_test from the model's bucket-load tables.  ``batch_size``
+    streams the test set in fixed-memory blocks (multi-million-point
+    inference never materializes an (m, n_test) featurization)."""
+    op = model_operator(model, backend=backend)
+    return op.predict_batched(model.tables, x_test, batch_size=batch_size)

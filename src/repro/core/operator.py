@@ -1,0 +1,149 @@
+"""The WLSH operator — one spine for every execution path (DESIGN.md §3).
+
+``WLSHOperator`` bundles the m LSH instances, the bucket-shaping function and
+the CountSketch table geometry behind a small primitive set:
+
+    featurize       points -> Features            (hash + weight + sign)
+    build_index     Features -> Table/Exact index (per-point-set structure)
+    loads           index, beta -> (m, B) tables  (CountSketch scatter)
+    readout         index, tables -> per-point    (CountSketch gather)
+    matvec          index, beta -> K~ beta        (loads ∘ readout)
+    predict_batched tables, x_test -> yhat        (streaming, fixed memory)
+
+Every primitive dispatches on ``backend``:
+
+* ``reference`` — the pure-jnp path (core/lsh.py + core/wlsh.py).
+* ``pallas``    — the fused kernels (kernels/featurize + kernels/binning),
+  with interpret mode auto-selected from the platform and all shape padding
+  handled internally.
+* ``auto``      — resolved per platform at construction (see repro.backend).
+
+The solver (core/krr.py), the distributed step (core/distributed.py) and the
+benchmarks all talk to this interface only, so swapping kernels or meshes is
+a one-file change.  The distributed path constructs an operator *inside*
+shard_map from its local LSH shard: ``loads`` then produces local partial
+tables (psum-able across data shards) and ``readout(average=False)`` the
+local instance-sum (psum-able across the model axis).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..backend import default_interpret, resolve_backend
+from .bucket_fns import BucketFn
+from .lsh import Features, LSHParams, featurize as featurize_reference
+from .wlsh import (ExactIndex, TableIndex, build_exact_index, build_table_index,
+                   exact_matvec, table_loads, table_readout)
+
+Array = jnp.ndarray
+Index = Union[TableIndex, ExactIndex]
+
+
+def default_table_size(n: int, *, min_pow: int = 8) -> int:
+    """CountSketch table-size heuristic: the smallest power of two >= 4n
+    (>= 2^min_pow) keeps same-slot collisions rare."""
+    return 1 << max(min_pow, int(4 * max(n, 1) - 1).bit_length())
+
+
+class WLSHOperator(NamedTuple):
+    """Backend-dispatched WLSH primitive set bound to m LSH instances.
+
+    A NamedTuple so it can be built inside jit/shard_map from traced local
+    LSH shards and closed over freely; ``backend`` must already be concrete
+    ('reference' or 'pallas') — use ``make_operator`` to resolve 'auto'.
+    """
+
+    lsh: LSHParams
+    bucket: BucketFn
+    table_size: int
+    backend: str = "reference"
+    interpret: bool = True       # Pallas interpret mode (ignored by reference)
+
+    # -- featurization ------------------------------------------------------
+
+    def featurize(self, x: Array) -> Features:
+        if self.backend == "pallas":
+            from ..kernels.featurize import featurize_op
+            return featurize_op(self.lsh, self.bucket, x,
+                                interpret=self.interpret)
+        return featurize_reference(self.lsh, self.bucket, x)
+
+    # -- index construction -------------------------------------------------
+
+    def build_index(self, feats: Features, mode: str = "table") -> Index:
+        """'table' -> CountSketch TableIndex (both backends); 'exact' ->
+        sorted-bucket ExactIndex (reference-only validation path)."""
+        if mode == "table":
+            return build_table_index(feats, self.table_size)
+        if mode == "exact":
+            return build_exact_index(feats)
+        raise ValueError(f"unknown mode {mode!r}")
+
+    # -- CountSketch scatter / gather ---------------------------------------
+
+    def loads(self, index: TableIndex, beta: Array) -> Array:
+        """Bucket-load tables (m, B) for beta — the psum-able object."""
+        if self.backend == "pallas":
+            from ..kernels.binning import bin_loads_op
+            return bin_loads_op(index, beta, interpret=self.interpret)
+        return table_loads(index, beta)
+
+    def readout(self, index: TableIndex, tables: Array, *,
+                average: bool = True) -> Array:
+        """Per-point readout of (possibly psum-merged) tables.  ``average``
+        gives (1/m) sum_s; ``average=False`` gives the plain instance sum
+        (the distributed path divides by the global m after its psum)."""
+        if self.backend == "pallas":
+            from ..kernels.binning import bin_readout_op
+            return bin_readout_op(index, tables, average=average,
+                                  interpret=self.interpret)
+        return table_readout(index, tables, average=average)
+
+    # -- matvec -------------------------------------------------------------
+
+    def matvec(self, index: Index, beta: Array) -> Array:
+        """K~ beta in O(n m): table mode = scatter + gather; exact mode =
+        segment-sum over sorted buckets (reference implementation)."""
+        if isinstance(index, ExactIndex):
+            return exact_matvec(index, beta)
+        return self.readout(index, self.loads(index, beta))
+
+    # -- streaming prediction -----------------------------------------------
+
+    def predict_batched(self, tables: Array, x_test: Array, *,
+                        batch_size: int | None = None) -> Array:
+        """Read test-point predictions out of prebuilt bucket-load tables.
+
+        With ``batch_size`` the test set is processed in fixed-size blocks via
+        ``lax.map`` — peak memory is O(batch_size * m) regardless of n_test,
+        which is what lets multi-million-point inference stream."""
+        n = x_test.shape[0]
+        if batch_size is None or batch_size >= n:
+            feats = self.featurize(x_test)
+            return self.readout(self.build_index(feats), tables)
+        n_blocks = -(-n // batch_size)
+        xp = jnp.pad(jnp.asarray(x_test, jnp.float32),
+                     ((0, n_blocks * batch_size - n), (0, 0)))
+        blocks = xp.reshape(n_blocks, batch_size, x_test.shape[1])
+
+        def one_block(xb):
+            feats = self.featurize(xb)
+            return self.readout(self.build_index(feats), tables)
+
+        out = jax.lax.map(one_block, blocks)
+        return out.reshape(-1)[:n]
+
+
+def make_operator(lsh: LSHParams, bucket: BucketFn, table_size: int, *,
+                  backend: str | None = "auto",
+                  interpret: bool | None = None) -> WLSHOperator:
+    """Construct an operator with 'auto' backend/interpret resolved for this
+    platform (the only place resolution happens — everything downstream sees
+    a concrete backend)."""
+    return WLSHOperator(lsh=lsh, bucket=bucket, table_size=int(table_size),
+                        backend=resolve_backend(backend),
+                        interpret=default_interpret() if interpret is None
+                        else interpret)

@@ -104,11 +104,14 @@ def table_loads(index: TableIndex, beta: Array) -> Array:
     return tables.at[rows, index.slot].add(contrib)
 
 
-def table_readout(index: TableIndex, tables: Array) -> Array:
-    """Per-point readout of the (possibly psum-merged) tables: (1/m) sum_s ..."""
+def table_readout(index: TableIndex, tables: Array, *,
+                  average: bool = True) -> Array:
+    """Per-point readout of the (possibly psum-merged) tables: (1/m) sum_s
+    when ``average``, else the plain instance sum (distributed shards sum
+    locally and divide by the global m after their model-axis psum)."""
     rows = jnp.arange(index.slot.shape[0], dtype=jnp.int32)[:, None]
     vals = tables[rows, index.slot] * index.sign * index.weight
-    return jnp.mean(vals, axis=0)
+    return jnp.mean(vals, axis=0) if average else jnp.sum(vals, axis=0)
 
 
 def table_matvec(index: TableIndex, beta: Array) -> Array:

@@ -151,12 +151,15 @@ def _dot_flops(op: _Op, symbols: dict[str, str]) -> float:
     out_elems = 1
     for d in outs[0][1]:
         out_elems *= d
-    m = re.search(r"dot\(%?([\w.\-]+)", op.line)
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
     contraction = 1
-    if m and mc and mc.group(1):
-        lhs_type = symbols.get(m.group(1), "")
-        dims = _shape_dims(lhs_type)
+    # lhs operand: either "dot(%name, ..." or, in older HLO text,
+    # "dot(f32[128,256]{1,0} %name, ..." with the type printed inline.
+    md = re.search(r"\bdot\(\s*(?:(\w+\[[\d,]*\])\S*\s+)?%?([\w.\-]+)",
+                   op.line)
+    if md and mc and mc.group(1):
+        lhs_text = md.group(1) or symbols.get(md.group(2), "")
+        dims = _shape_dims(lhs_text)
         if dims:
             shape = dims[0][1]
             for idx in mc.group(1).split(","):

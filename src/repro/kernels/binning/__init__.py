@@ -1,3 +1,3 @@
-from .ops import table_matvec_op
 from .kernel import bin_gather_pallas, bin_scatter_pallas
+from .ops import bin_loads_op, bin_readout_op, table_matvec_op
 from .ref import bin_gather_ref, bin_scatter_ref

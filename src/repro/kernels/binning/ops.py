@@ -1,36 +1,94 @@
-"""Public ops: WLSH table matvec built on the binning kernels.
+"""Public ops: CountSketch scatter/readout built on the binning kernels.
 
-``table_matvec_op`` is the kernel-backed equivalent of
-repro.core.wlsh.table_matvec: scatter the signed, weighted beta into the
-CountSketch tables, then gather every point's bucket load back out.
+These are the kernel-backed equivalents of the reference table primitives in
+``repro.core.wlsh``:
+
+* ``bin_loads_op``   ~ ``table_loads``   — scatter signed, weighted beta into
+  the (m, B) CountSketch tables.
+* ``bin_readout_op`` ~ ``table_readout`` — gather every point's bucket load
+  back out and combine over instances.
+* ``table_matvec_op`` ~ ``table_matvec`` — the composition of the two.
+
+Shapes are padded internally: ``n`` (points) is padded to the block size with
+an always-zero contribution in slot 0, and ``table_size`` is padded up to a
+multiple of the table tile (padded slots are never addressed, so results are
+exact).  Callers never see padding — outputs are trimmed to logical shapes.
+``interpret=None`` auto-selects Pallas interpret mode from the platform
+(compiled on TPU, interpreted elsewhere).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from ...backend import default_interpret
 from ...core.wlsh import TableIndex
-from .kernel import bin_gather_pallas, bin_scatter_pallas
+from .kernel import BLOCK_N, BLOCK_T, bin_gather_pallas, bin_scatter_pallas
 from .ref import bin_gather_ref, bin_scatter_ref
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
 
 
 def _pad_points(a, bn: int, value=0):
     n = a.shape[1]
-    np_ = -(-n // bn) * bn
-    return jnp.pad(a, ((0, 0), (0, np_ - n)), constant_values=value), n
+    return jnp.pad(a, ((0, 0), (0, _round_up(n, bn) - n)),
+                   constant_values=value), n
+
+
+def _block_sizes(n: int, table_size: int, block_n: int, block_t: int):
+    bn = min(block_n, max(128, _round_up(n, 128)))
+    bt = min(block_t, table_size)
+    return bn, bt
+
+
+def bin_loads_op(index: TableIndex, beta, *, use_kernel: bool = True,
+                 interpret: bool | None = None, block_n: int = BLOCK_N,
+                 block_t: int = BLOCK_T):
+    """Kernel-backed ``table_loads``: (m, B) bucket-load tables for beta."""
+    contrib = (beta[None, :] * index.weight * index.sign).astype(jnp.float32)
+    if not use_kernel:
+        return bin_scatter_ref(index.slot, contrib, table_size=index.table_size)
+    if interpret is None:
+        interpret = default_interpret()
+    bn, bt = _block_sizes(index.slot.shape[1], index.table_size, block_n,
+                          block_t)
+    # pad points into slot 0 with zero contribution (cannot perturb loads)
+    slot_p, _ = _pad_points(index.slot, bn, value=0)
+    contrib_p, _ = _pad_points(contrib, bn, value=0.0)
+    bp = _round_up(index.table_size, bt)
+    tables = bin_scatter_pallas(slot_p, contrib_p, table_size=bp,
+                                interpret=interpret, block_n=bn, block_t=bt)
+    return tables[:, :index.table_size]
+
+
+def bin_readout_op(index: TableIndex, tables, *, average: bool = True,
+                   use_kernel: bool = True, interpret: bool | None = None,
+                   block_n: int = BLOCK_N, block_t: int = BLOCK_T):
+    """Kernel-backed ``table_readout``: per-point loads combined over the m
+    instances (mean when ``average``, else sum — the distributed path sums
+    locally and divides by the global m after its psum)."""
+    if not use_kernel:
+        vals = bin_gather_ref(index.slot, tables)
+    else:
+        if interpret is None:
+            interpret = default_interpret()
+        n = index.slot.shape[1]
+        bn, bt = _block_sizes(n, index.table_size, block_n, block_t)
+        slot_p, _ = _pad_points(index.slot, bn, value=0)
+        bp = _round_up(index.table_size, bt)
+        tables_p = jnp.pad(tables.astype(jnp.float32),
+                           ((0, 0), (0, bp - index.table_size)))
+        vals = bin_gather_pallas(slot_p, tables_p, interpret=interpret,
+                                 block_n=bn, block_t=bt)[:, :n]
+    signed = vals * index.sign * index.weight
+    return jnp.mean(signed, axis=0) if average else jnp.sum(signed, axis=0)
 
 
 def table_matvec_op(index: TableIndex, beta, *, use_kernel: bool = True,
-                    interpret: bool = True):
-    contrib = (beta[None, :] * index.weight * index.sign).astype(jnp.float32)
-    if not use_kernel:
-        tables = bin_scatter_ref(index.slot, contrib, table_size=index.table_size)
-        vals = bin_gather_ref(index.slot, tables)
-        return jnp.mean(vals * index.sign * index.weight, axis=0)
-    bn = min(1024, max(128, index.slot.shape[1]))
-    # pad points into an always-zero overflow slot so they cannot perturb loads
-    slot_p, n = _pad_points(index.slot, bn, value=0)
-    contrib_p, _ = _pad_points(contrib, bn, value=0.0)
-    tables = bin_scatter_pallas(slot_p, contrib_p, table_size=index.table_size,
-                                interpret=interpret, block_n=bn)
-    vals = bin_gather_pallas(slot_p, tables, interpret=interpret, block_n=bn)
-    return jnp.mean(vals[:, :n] * index.sign * index.weight, axis=0)
+                    interpret: bool | None = None):
+    """Scatter then gather: the kernel-backed WLSH table matvec."""
+    tables = bin_loads_op(index, beta, use_kernel=use_kernel,
+                          interpret=interpret)
+    return bin_readout_op(index, tables, use_kernel=use_kernel,
+                          interpret=interpret)

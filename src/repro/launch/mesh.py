@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
+from ..compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 = 256-chip pod ('data', 'model'), or 2 pods = 512 chips with a
@@ -17,13 +19,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     all-gathers stay on ICI, only gradient reductions cross the pod axis)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1) -> Mesh:
     """Tiny mesh over whatever devices exist (tests / examples on CPU)."""
     n = len(jax.devices())
     data = n // model_parallel
-    return jax.make_mesh((data, model_parallel), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model_parallel), ("data", "model"))

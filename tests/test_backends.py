@@ -1,0 +1,128 @@
+"""Backend parity: the 'reference' (jnp) and 'pallas' (fused kernel)
+implementations of the WLSH operator must agree bit-for-bit on hashes/signs
+and to float tolerance on weights/tables/matvecs — including the internal
+padding paths (n not a multiple of the point block, table_size not a
+multiple of the table tile)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backend import resolve_backend
+from repro.core import (GammaPDF, WLSHKernelSpec, get_bucket_fn, make_operator,
+                        sample_lsh_params, wlsh_krr_fit, wlsh_krr_predict)
+from repro.core.operator import default_table_size
+
+
+def _ops(key, n, d, m, table_size, bucket="rect"):
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    lsh = sample_lsh_params(jax.random.fold_in(key, 1), m, d,
+                            GammaPDF(2.0, 1.0))
+    f = get_bucket_fn(bucket)
+    beta = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    ref = make_operator(lsh, f, table_size, backend="reference")
+    pal = make_operator(lsh, f, table_size, backend="pallas")
+    return x, beta, ref, pal
+
+
+# n=300 exercises point padding (300 -> 384); n=128 is block-aligned
+@pytest.mark.parametrize("n,d,m,table_size", [(128, 2, 3, 256),
+                                              (300, 5, 4, 512),
+                                              (97, 3, 2, 1024)])
+def test_featurize_parity(n, d, m, table_size):
+    x, _, ref, pal = _ops(jax.random.PRNGKey(n + d), n, d, m, table_size)
+    fr, fp = ref.featurize(x), pal.featurize(x)
+    assert fr.key1.shape == fp.key1.shape == (m, n)
+    assert bool(jnp.all(fr.key1 == fp.key1))
+    assert bool(jnp.all(fr.key2 == fp.key2))
+    assert bool(jnp.all(fr.sign == fp.sign))
+    np.testing.assert_allclose(fr.weight, fp.weight, atol=2e-6)
+
+
+@pytest.mark.parametrize("n,table_size", [(300, 512), (128, 256)])
+def test_tables_and_matvec_parity(n, table_size):
+    x, beta, ref, pal = _ops(jax.random.PRNGKey(7 * n), n, 3, 4, table_size)
+    fr = ref.featurize(x)
+    idx = ref.build_index(fr)
+    tr, tp = ref.loads(idx, beta), pal.loads(idx, beta)
+    assert tr.shape == tp.shape == (4, table_size)
+    np.testing.assert_allclose(tr, tp, atol=1e-4)
+    np.testing.assert_allclose(ref.matvec(idx, beta), pal.matvec(idx, beta),
+                               atol=1e-4)
+    # sum-mode readout (the distributed path) must agree too
+    np.testing.assert_allclose(ref.readout(idx, tr, average=False),
+                               pal.readout(idx, tp, average=False), atol=1e-4)
+
+
+def test_table_tile_padding_path():
+    """table_size not a multiple of the table tile: the kernel pads the table
+    internally and trims — results must match the reference exactly."""
+    from repro.core.wlsh import table_loads, table_readout
+    from repro.kernels.binning.ops import bin_loads_op, bin_readout_op
+    key = jax.random.PRNGKey(11)
+    x, beta, ref, _ = _ops(key, 200, 3, 3, 1024)
+    idx = ref.build_index(ref.featurize(x))
+    # block_t=384 does not divide 1024 -> internal pad to 1152, trim to 1024
+    tk = bin_loads_op(idx, beta, interpret=True, block_t=384)
+    tr = table_loads(idx, beta)
+    assert tk.shape == tr.shape
+    np.testing.assert_allclose(tk, tr, atol=1e-4)
+    np.testing.assert_allclose(
+        bin_readout_op(idx, tr, interpret=True, block_t=384),
+        table_readout(idx, tr), atol=1e-5)
+
+
+def test_predict_batched_streams_fixed_blocks():
+    """Blocked prediction == whole-set prediction, both backends, including a
+    final partial block (n_test % batch_size != 0)."""
+    key = jax.random.PRNGKey(3)
+    x, beta, ref, pal = _ops(key, 260, 4, 5, 512)
+    idx = ref.build_index(ref.featurize(x))
+    tables = ref.loads(idx, beta)
+    whole = ref.predict_batched(tables, x)
+    for op in (ref, pal):
+        blocked = op.predict_batched(tables, x, batch_size=64)
+        np.testing.assert_allclose(blocked, whole, atol=1e-5)
+
+
+def test_krr_fit_backend_parity():
+    """Acceptance criterion: wlsh_krr_fit(..., backend='pallas') and
+    backend='reference' agree to <= 1e-5 on predictions."""
+    key = jax.random.PRNGKey(0)
+    n, d = 300, 3
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    y = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"))
+    fit = lambda backend: wlsh_krr_fit(jax.random.fold_in(key, 2), x, y, spec,
+                                       m=24, lam=0.5, maxiter=50,
+                                       backend=backend)
+    m_ref, m_pal = fit("reference"), fit("pallas")
+    assert m_ref.backend == "reference" and m_pal.backend == "pallas"
+    xq = jax.random.uniform(jax.random.fold_in(key, 3), (77, d)) * 2.0
+    p_ref = wlsh_krr_predict(m_ref, xq)
+    p_pal = wlsh_krr_predict(m_pal, xq)
+    np.testing.assert_allclose(p_ref, p_pal, atol=1e-5)
+    # cross-backend serving: pallas-fit model served by the reference backend
+    np.testing.assert_allclose(wlsh_krr_predict(m_pal, xq, backend="reference"),
+                               p_ref, atol=1e-5)
+
+
+def test_auto_backend_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_WLSH_BACKEND", raising=False)
+    assert resolve_backend("reference") == "reference"
+    assert resolve_backend("pallas") == "pallas"
+    expected = "pallas" if jax.default_backend() == "tpu" else "reference"
+    assert resolve_backend("auto") == expected
+    assert resolve_backend(None) == expected
+    monkeypatch.setenv("REPRO_WLSH_BACKEND", "pallas")
+    assert resolve_backend("auto") == "pallas"      # env overrides auto...
+    assert resolve_backend("reference") == "reference"  # ...but not explicit
+    with pytest.raises(ValueError):
+        resolve_backend("mps")
+
+
+def test_default_table_size_heuristic():
+    assert default_table_size(1000) == 4096
+    assert default_table_size(1024) == 4096
+    assert default_table_size(1025) == 8192
+    assert default_table_size(1) == 256   # floor at 2^8

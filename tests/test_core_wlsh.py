@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# property tests skip individually when hypothesis is absent; the rest of the
+# module (bucket fns, analytic kernels, PSD/spectral checks) always runs
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (GammaPDF, WLSHKernelSpec, featurize, get_bucket_fn,
                         laplace_kernel, make_wlsh_kernel, sample_lsh_params)
@@ -77,6 +80,7 @@ def test_analytic_kernel_is_valid(name, rng):
 # estimator unbiasedness (Claim 22) — statistical, all bucket fns
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name,pdf", [("rect", GammaPDF(2.0, 1.0)),
                                       ("tent", GammaPDF(2.0, 1.0)),
                                       ("smooth", GammaPDF(7.0, 1.0))])
@@ -96,9 +100,7 @@ def test_wlsh_estimator_unbiased(name, pdf, rng):
 # matvec data structures == explicit matrices (the O(n) structure of §4)
 # ---------------------------------------------------------------------------
 
-@given(st.integers(16, 100), st.integers(1, 4), st.integers(1, 24))
-@settings(max_examples=12, deadline=None)
-def test_exact_matvec_matches_dense(n, d, m):
+def _check_exact_matvec(n, d, m):
     key = jax.random.PRNGKey(n * 100 + d * 10 + m)
     x = jax.random.uniform(key, (n, d)) * 2.0
     params = sample_lsh_params(jax.random.fold_in(key, 1), m, d,
@@ -110,9 +112,19 @@ def test_exact_matvec_matches_dense(n, d, m):
     np.testing.assert_allclose(mv, dense, atol=1e-4)
 
 
-@given(st.integers(16, 80), st.integers(1, 3))
-@settings(max_examples=10, deadline=None)
-def test_table_matvec_matches_table_matrix(n, d):
+@given(st.integers(16, 100), st.integers(1, 4), st.integers(1, 24))
+@settings(max_examples=12, deadline=None)
+def test_exact_matvec_matches_dense(n, d, m):
+    _check_exact_matvec(n, d, m)
+
+
+@pytest.mark.parametrize("n,d,m", [(16, 1, 1), (33, 2, 5), (100, 4, 24)])
+def test_exact_matvec_matches_dense_examples(n, d, m):
+    """Fixed examples of the property above — run even without hypothesis."""
+    _check_exact_matvec(n, d, m)
+
+
+def _check_table_matvec(n, d):
     key = jax.random.PRNGKey(n * 7 + d)
     x = jax.random.uniform(key, (n, d)) * 2.0
     params = sample_lsh_params(jax.random.fold_in(key, 1), 8, d,
@@ -122,6 +134,18 @@ def test_table_matvec_matches_table_matrix(n, d):
     beta = jax.random.normal(jax.random.fold_in(key, 2), (n,))
     dense = table_kernel_matrix(idx) @ beta
     np.testing.assert_allclose(table_matvec(idx, beta), dense, atol=1e-4)
+
+
+@given(st.integers(16, 80), st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_table_matvec_matches_table_matrix(n, d):
+    _check_table_matvec(n, d)
+
+
+@pytest.mark.parametrize("n,d", [(16, 1), (45, 2), (80, 3)])
+def test_table_matvec_matches_table_matrix_examples(n, d):
+    """Fixed examples of the property above — run even without hypothesis."""
+    _check_table_matvec(n, d)
 
 
 def test_table_kernel_matrix_is_psd(rng):

@@ -8,14 +8,14 @@ import pytest
 
 _SCRIPT = r"""
 import jax, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.core import sample_lsh_params, GammaPDF, get_bucket_fn, featurize
 from repro.core.wlsh import build_table_index, table_matvec
 from repro.core.krr import cg_solve
 from repro.core.distributed import KRRStepConfig, make_krr_step, make_krr_predict
 
 assert len(jax.devices()) == 8
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 n, d, m, B = 256, 4, 8, 512
 key = jax.random.PRNGKey(0)
 x = jax.random.uniform(key, (n, d)) * 2.0
@@ -43,7 +43,7 @@ print("DISTRIBUTED_OK", err, err2)
 def test_distributed_krr_matches_reference():
     proc = subprocess.run(
         [sys.executable, "-c", _SCRIPT],
-        env={"PYTHONPATH": "src",
+        env={"PYTHONPATH": "src", "JAX_PLATFORMS": "cpu",
              "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
              "PATH": "/usr/bin:/bin"},
         capture_output=True, text=True, cwd=".", timeout=420)
@@ -55,14 +55,14 @@ _DP_SCRIPT = r"""
 import jax, jax.numpy as jnp
 from functools import partial
 from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, shard_map
 from repro.optim import compressed_psum
 
 assert len(jax.devices()) == 8
-mesh = jax.make_mesh((8,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("pod",))
 x = jnp.arange(8 * 64, dtype=jnp.float32).reshape(8, 64) / 100.0
 
-@partial(jax.shard_map, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
-         check_vma=False)
+@partial(shard_map, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"))
 def summed(v):
     local = v[0]
     return compressed_psum(local, "pod", jax.random.PRNGKey(0))[None]
@@ -80,7 +80,7 @@ print("COMPRESSED_PSUM_OK", err)
 def test_compressed_psum_across_8_devices():
     proc = subprocess.run(
         [sys.executable, "-c", _DP_SCRIPT],
-        env={"PYTHONPATH": "src",
+        env={"PYTHONPATH": "src", "JAX_PLATFORMS": "cpu",
              "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
              "PATH": "/usr/bin:/bin"},
         capture_output=True, text=True, cwd=".", timeout=420)
@@ -90,12 +90,12 @@ def test_compressed_psum_across_8_devices():
 
 _HJ_SCRIPT = r"""
 import jax, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.core import sample_lsh_params, GammaPDF, get_bucket_fn
 from repro.core.distributed import (KRRStepConfig, make_krr_step,
                                     make_krr_step_hashjoin)
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 n, d, m, B = 512, 5, 8, 1024
 key = jax.random.PRNGKey(0)
 x = jax.random.uniform(key, (n, d)) * 2.0
@@ -119,7 +119,7 @@ def test_hashjoin_krr_matches_psum_mode():
     paper-faithful psum mode (generous routing capacity => no drops)."""
     proc = subprocess.run(
         [sys.executable, "-c", _HJ_SCRIPT],
-        env={"PYTHONPATH": "src",
+        env={"PYTHONPATH": "src", "JAX_PLATFORMS": "cpu",
              "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
              "PATH": "/usr/bin:/bin"},
         capture_output=True, text=True, cwd=".", timeout=420)

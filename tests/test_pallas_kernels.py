@@ -18,8 +18,8 @@ from repro.kernels.flash_decode import flash_decode_pallas, flash_decode_ref
 # featurize
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("n,d,m", [(128, 1, 1), (300, 5, 7), (1024, 11, 3),
-                                   (257, 64, 2), (96, 384, 1)])
+@pytest.mark.parametrize("n,d,m", [(128, 1, 1), (300, 5, 3), (512, 11, 2),
+                                   (257, 64, 1), (96, 200, 1)])
 @pytest.mark.parametrize("fname", ["rect", "tent", "smooth"])
 def test_featurize_kernel_matches_ref(n, d, m, fname):
     key = jax.random.PRNGKey(n + d + m)
@@ -49,8 +49,8 @@ def test_featurize_kernel_f32_input_dtypes():
 # binning (scatter / gather as one-hot MXU matmuls)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("m,n,b", [(1, 128, 512), (3, 2048, 1024),
-                                   (5, 512, 4096), (2, 1024, 512)])
+@pytest.mark.parametrize("m,n,b", [(1, 128, 512), (3, 1024, 1024),
+                                   (2, 256, 2048), (2, 1024, 512)])
 def test_bin_scatter_gather_match_ref(m, n, b):
     key = jax.random.PRNGKey(m * n)
     slot = jax.random.randint(key, (m, n), 0, b, dtype=jnp.int32)
@@ -81,8 +81,8 @@ def test_table_matvec_op_matches_core(rng):
 # flash decode
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("b,kv,g,d,t", [(1, 1, 1, 64, 256), (2, 2, 3, 64, 1024),
-                                        (4, 8, 1, 128, 512), (2, 1, 8, 128, 768)])
+@pytest.mark.parametrize("b,kv,g,d,t", [(1, 1, 1, 64, 256), (2, 2, 3, 64, 512),
+                                        (2, 4, 1, 128, 256), (2, 1, 4, 128, 512)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_decode_matches_ref(b, kv, g, d, t, dtype):
     key = jax.random.PRNGKey(b * t + d)

@@ -2,7 +2,10 @@
 invariant that a PartitionSpec never reuses a mesh axis (property test)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# the property test skips individually when hypothesis is absent; the
+# example-based rule tests always run
+from _hypothesis_compat import given, settings, st
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.sharding import RULES, spec_for

@@ -97,16 +97,14 @@ def test_int8_quantization_unbiased_and_bounded(rng):
 def test_compressed_psum_matches_exact_within_quantization():
     """compressed_psum == true sum up to bounded quantization error (runs on a
     1-device mesh via shard_map over a size-1 axis)."""
-    import jax
-    from jax.sharding import Mesh
     from functools import partial
+    from repro.compat import make_mesh, shard_map
     from repro.optim import compressed_psum
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",))
     x = jnp.linspace(-2.0, 2.0, 256)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
-             out_specs=jax.sharding.PartitionSpec(), check_vma=False)
+    @partial(shard_map, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+             out_specs=jax.sharding.PartitionSpec())
     def run(v):
         return compressed_psum(v, "pod", jax.random.PRNGKey(0))
 
@@ -160,8 +158,8 @@ def test_manager_async_save_and_gc():
 
 def test_elastic_restore_places_with_target_sharding():
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((1,), ("data",))
     with tempfile.TemporaryDirectory() as d:
         save_checkpoint(d, 3, _state(2.0))
         sh = {"a": NamedSharding(mesh, P("data", None)),
