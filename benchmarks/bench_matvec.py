@@ -1,11 +1,14 @@
 """§4 data-structure claim: K~ beta in O(n) time / O(n) memory.
 
-Times the WLSH matvec through the unified operator stack — exact sort mode
-and the CountSketch table mode on each backend ('reference' jnp vs 'pallas'
-fused kernels) — across n, against the O(n^2) dense matvec; reports
-microseconds per call and the empirical scaling exponent.  ``run`` returns
-JSON-able per-(n, backend) rows so the perf trajectory can accumulate in
-BENCH_matvec.json (see benchmarks/run.py)."""
+Times the WLSH matvec through the unified operator stack — exact sort mode,
+the split CountSketch scatter→gather, and the fused one-pass slot-blocked
+matvec, on each backend ('reference' jnp vs 'pallas' kernels) — across n,
+against the O(n^2) dense matvec.  ``run`` returns JSON-able per-n rows with a
+**stable schema** (every row carries every key; skipped measurements are
+explicit ``None`` + a marker, never silently absent) so the perf trajectory
+can accumulate in BENCH_matvec.json (see benchmarks/run.py) and
+``benchmarks/check_regression.py`` can diff runs.
+"""
 from __future__ import annotations
 
 import json
@@ -22,8 +25,21 @@ from repro.core.wlsh import build_exact_index, exact_kernel_matrix, exact_matvec
 
 from .common import emit, time_fn
 
+# dense comparison: build the true kernel matrix where the O(m n^2) featurized
+# build fits in memory; above that use a random (n, n) proxy — the matvec cost
+# only depends on the shape, and the timing is what the row records
+DENSE_EXACT_MAX_N = 4096
 
-def run(ns=(1024, 4096, 16384), d: int = 8, m: int = 16, seed: int = 0):
+
+def run(ns=(1024, 4096, 16384), d: int = 8, m: int = 16, seed: int = 0, *,
+        timing_iters: int = 3, timing_stat: str = "median",
+        with_dense: bool = True, with_pallas: bool = True):
+    """``timing_iters``/``timing_stat`` select the wall-clock protocol
+    (median-of-3 for the committed trajectory; the regression gate uses
+    min-of-many — see benchmarks/check_regression.py).  ``with_dense``/
+    ``with_pallas`` drop the ungated sections for a fast gate rerun; dropped
+    measurements stay in the row as explicit None + marker."""
+    time_args = {"iters": timing_iters, "stat": timing_stat}
     f = get_bucket_fn("rect")
     on_tpu = jax.default_backend() == "tpu"
     rows = []
@@ -35,50 +51,115 @@ def run(ns=(1024, 4096, 16384), d: int = 8, m: int = 16, seed: int = 0):
         beta = jax.random.normal(jax.random.fold_in(key, 2), (n,))
         table_size = default_table_size(n, min_pow=10)
 
-        op_ref = make_operator(lsh, f, table_size, backend="reference")
+        op_ref = make_operator(lsh, f, table_size, backend="reference",
+                               fused=False)
+        op_fused = make_operator(lsh, f, table_size, backend="reference",
+                                 fused=True)
         feats = op_ref.featurize(x)
-        tidx = op_ref.build_index(feats)
+        tidx = op_ref.build_index(feats)            # split (no layout)
+        fidx = op_fused.build_index(feats)          # slot-blocked
         eidx = build_exact_index(feats)
 
         row = {"n": n, "m": m, "d": d, "table_size": table_size,
                "exact_us": time_fn(jax.jit(
-                   lambda b: exact_matvec(eidx, b)), beta) * 1e6,
+                   lambda b: exact_matvec(eidx, b)), beta, **time_args) * 1e6,
                "reference_us": time_fn(jax.jit(
-                   lambda b: op_ref.matvec(tidx, b)), beta) * 1e6}
-        if on_tpu or n <= 1024:
+                   lambda b: op_ref.matvec(tidx, b)), beta, **time_args) * 1e6,
+               "fused_us": time_fn(jax.jit(
+                   lambda b: op_fused.matvec(fidx, b)), beta,
+                   **time_args) * 1e6}
+        row["fused_speedup"] = row["reference_us"] / row["fused_us"]
+
+        if with_dense:
+            if n <= DENSE_EXACT_MAX_N:
+                kmat = exact_kernel_matrix(feats)
+                row["dense_proxy"] = False
+            else:
+                kmat = jax.random.normal(jax.random.fold_in(key, 3), (n, n))
+                row["dense_proxy"] = True
+            row["dense_us"] = time_fn(jax.jit(lambda b: kmat @ b), beta,
+                                      **time_args) * 1e6
+            del kmat
+        else:
+            row["dense_us"] = None
+            row["dense_proxy"] = None
+
+        if not with_pallas:
+            row["pallas_us"] = None
+            row["pallas_fused_us"] = None
+            row["pallas_fused_speedup"] = None
+            row["pallas_interpret"] = None
+            row["pallas_skipped"] = "disabled"
+        elif on_tpu or n <= 1024:
             # off-TPU the Pallas kernels run in interpret mode (the kernel
             # body executes in Python) — correctness validation only,
             # meaningless as a wall-clock datapoint, so keep n tiny
-            op_pal = make_operator(lsh, f, table_size, backend="pallas")
+            op_pal = make_operator(lsh, f, table_size, backend="pallas",
+                                   fused=False)
+            op_pal_fused = make_operator(lsh, f, table_size, backend="pallas",
+                                         fused=True)
+            fidx_pal = op_pal_fused.build_index(feats)  # pallas layout group
             row["pallas_us"] = time_fn(jax.jit(
-                lambda b: op_pal.matvec(tidx, b)), beta) * 1e6
+                lambda b: op_pal.matvec(tidx, b)), beta, **time_args) * 1e6
+            row["pallas_fused_us"] = time_fn(jax.jit(
+                lambda b: op_pal_fused.matvec(fidx_pal, b)), beta,
+                **time_args) * 1e6
+            row["pallas_fused_speedup"] = \
+                row["pallas_us"] / row["pallas_fused_us"]
             row["pallas_interpret"] = op_pal.interpret
-        if n <= 4096:  # dense comparison only where the matrix fits
-            kmat = exact_kernel_matrix(feats)
-            row["dense_us"] = time_fn(jax.jit(lambda b: kmat @ b), beta) * 1e6
+            row["pallas_skipped"] = None
+        else:
+            row["pallas_us"] = None
+            row["pallas_fused_us"] = None
+            row["pallas_fused_speedup"] = None
+            row["pallas_interpret"] = None
+            row["pallas_skipped"] = "interpret"
         rows.append(row)
     return rows
 
 
+def _exponent(rows, key):
+    """Empirical scaling exponent between the LAST two sizes (smaller ones
+    are dominated by dispatch overhead); dense matvec would show ~2.0."""
+    return float(np.log(rows[-1][key] / rows[-2][key]) /
+                 np.log(rows[-1]["n"] / rows[-2]["n"]))
+
+
+def calibration_us(iters: int = 10) -> float:
+    """Fixed-shape dense matvec timed with the noise-robust min — a
+    machine-speed yardstick stored next to the baseline rows so the
+    regression gate can normalize away hardware differences between the
+    committing machine and the checking one."""
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (2048, 2048))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (2048,))
+    return time_fn(jax.jit(lambda u: a @ u), v, iters=iters,
+                   stat="min") * 1e6
+
+
 def main(json_path: str | None = None) -> None:
     rows = run()
-    print("n,exact_us,reference_us,pallas_us,dense_us")
+    print("n,exact_us,reference_us,fused_us,pallas_us,pallas_fused_us,dense_us")
     for r in rows:
+        pal = ("skip" if r["pallas_us"] is None else f"{r['pallas_us']:.1f}")
+        palf = ("skip" if r["pallas_fused_us"] is None
+                else f"{r['pallas_fused_us']:.1f}")
         print(f"{r['n']},{r['exact_us']:.1f},{r['reference_us']:.1f},"
-              f"{r.get('pallas_us', float('nan')):.1f},"
-              f"{r.get('dense_us', float('nan')):.1f}")
-    # empirical exponent between the LAST two sizes (smaller ones are
-    # dominated by dispatch overhead); dense matvec would show ~2.0
-    e = np.log(rows[-1]["reference_us"] / rows[-2]["reference_us"]) / \
-        np.log(rows[-1]["n"] / rows[-2]["n"])
+              f"{r['fused_us']:.1f},{pal},{palf},{r['dense_us']:.1f}")
+    e_split = _exponent(rows, "reference_us")
+    e_fused = _exponent(rows, "fused_us")
     if json_path:
         payload = {"bench": "matvec", "platform": jax.default_backend(),
-                   "scaling_exponent": float(e), "rows": rows}
+                   "calib_us": calibration_us(),
+                   "scaling_exponent": e_split,
+                   "fused_scaling_exponent": e_fused, "rows": rows}
         with open(json_path, "w") as fh:
             json.dump(payload, fh, indent=2)
         print(f"[bench_matvec] wrote {json_path}")
-    emit("bench_matvec", rows[-1]["reference_us"] * 1e-6,
-         f"table_scaling_exponent={e:.2f} (1.0 = linear, dense = 2.0)")
+    emit("bench_matvec", rows[-1]["fused_us"] * 1e-6,
+         f"scaling_exponent split={e_split:.2f} fused={e_fused:.2f} "
+         f"(1.0 = linear, dense = 2.0); "
+         f"fused_speedup@n={rows[-1]['n']}: {rows[-1]['fused_speedup']:.2f}x")
 
 
 if __name__ == "__main__":

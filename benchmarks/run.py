@@ -1,8 +1,9 @@
 """Run every benchmark at CPU-friendly scale.  One section per paper
 table/figure; each emits ``name,us_per_call,derived`` CSV lines plus its own
 detail table.  The matvec section also writes ``BENCH_matvec.json`` — the
-per-(n, backend) operator timings that accumulate the perf trajectory across
-PRs (reference jnp vs fused Pallas kernels).
+per-(n, backend) split/fused operator timings that accumulate the perf
+trajectory across PRs; ``benchmarks/check_regression.py`` (also a --runslow
+pytest) gates reference_us/fused_us against the committed file.
 
     PYTHONPATH=src python -m benchmarks.run
 """

@@ -25,6 +25,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "reference", "pallas"])
+    ap.add_argument("--fused", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="one-pass slot-blocked CG matvec (--no-fused keeps "
+                         "the split scatter->gather path reachable for A/B)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -45,7 +49,8 @@ def main():
     spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"))
     t0 = time.time()
     model = wlsh_krr_fit(jax.random.fold_in(key, 1), xtr, ytr, spec,
-                         m=400, lam=lam, backend=args.backend)
+                         m=400, lam=lam, backend=args.backend,
+                         fused=args.fused)
     # batch_size streams the test set in fixed memory (O(batch * m) peak)
     pred_wlsh = wlsh_krr_predict(model, xte, batch_size=128)
     t_wlsh = time.time() - t0

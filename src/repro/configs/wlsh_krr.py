@@ -20,8 +20,10 @@ class WLSHKRRConfig:
     lam: float = 1.0
     cg_iters: int = 32            # iterations fused into one lowered step
     backend: str = "auto"         # WLSH operator backend (core/operator.py):
-                                  # auto = fused Pallas kernels on TPU,
+                                  # auto = Pallas kernels on TPU,
                                   # jnp reference elsewhere
+    fused: bool = True            # one-pass slot-blocked matvec where legal
+                                  # (unsharded data axes); split otherwise
     notes: str = "paper's technique; data-sharded CG step over the mesh"
 
 

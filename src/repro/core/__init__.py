@@ -7,5 +7,7 @@ from .krr import (WLSHKRRModel, cg_solve, exact_krr_fit, exact_krr_predict,
 from .lsh import Features, GammaPDF, LSHParams, featurize, sample_lsh_params
 from .operator import WLSHOperator, default_table_size, make_operator
 from .rff import rff_krr_fit, rff_krr_predict
-from .wlsh import (build_exact_index, build_table_index, exact_kernel_matrix,
-                   exact_matvec, make_matvec, table_kernel_matrix, table_matvec)
+from .wlsh import (BlockedLayout, build_blocked_layout, build_exact_index,
+                   build_table_index, exact_kernel_matrix, exact_matvec,
+                   make_matvec, table_kernel_matrix, table_matvec,
+                   table_matvec_fused)

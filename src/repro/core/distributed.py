@@ -48,6 +48,7 @@ class KRRStepConfig(NamedTuple):
     data_axes: tuple[str, ...] = ("data",)
     model_axis: str = "model"
     backend: str = "auto"  # operator backend inside each shard
+    fused: bool = True     # one-pass local matvec when the data axes are size 1
 
 
 def _shard_operator(cfg: KRRStepConfig, f: BucketFn,
@@ -56,19 +57,42 @@ def _shard_operator(cfg: KRRStepConfig, f: BucketFn,
     trace time — shard_map bodies must see a concrete choice)."""
     return WLSHOperator(lsh=lsh_local, bucket=f, table_size=cfg.table_size,
                         backend=resolve_backend(cfg.backend),
-                        interpret=default_interpret())
+                        interpret=default_interpret(), fused=cfg.fused)
 
 
-def make_distributed_matvec(cfg: KRRStepConfig, op: WLSHOperator):
+def _data_shard_count(mesh: Mesh, cfg: KRRStepConfig) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in cfg.data_axes:
+        n *= sizes[a]
+    return n
+
+
+def make_distributed_matvec(cfg: KRRStepConfig, op: WLSHOperator, *,
+                            n_data_shards: int):
     """Returns matvec(index, beta_local) -> (K~ beta)_local.
 
     A thin psum wrapper around the operator's local scatter/readout — must be
     called inside shard_map with an index built from the local featurization
-    (m_loc, n_loc) and a (n_loc,) beta shard.
+    (m_loc, n_loc) and a (n_loc,) beta shard.  ``n_data_shards`` is the
+    product of the mesh's data-axis sizes (``_data_shard_count``) — required
+    so a forgotten kwarg cannot silently disable the fused path.
+
+    The split loads → psum → readout sandwich is required whenever the data
+    axes are sharded: the table psum is the scatter→gather barrier, so the
+    (m_loc, B) tables must exist between the two.  With a single data shard
+    (model-parallel-only meshes) there is nothing to merge, and the fused
+    one-pass matvec (slot-blocked index) runs locally with only the final
+    model-axis psum.
     """
+    local_fused = cfg.fused and n_data_shards == 1
+
     def matvec(index, beta_local):
-        tables = jax.lax.psum(op.loads(index, beta_local), cfg.data_axes)
-        out = op.readout(index, tables, average=False)   # sum over m_loc
+        if local_fused and getattr(index, "blocked", None) is not None:
+            out = op.matvec(index, beta_local, average=False)
+        else:
+            tables = jax.lax.psum(op.loads(index, beta_local), cfg.data_axes)
+            out = op.readout(index, tables, average=False)  # sum over m_loc
         return jax.lax.psum(out, cfg.model_axis) / cfg.m
     return matvec
 
@@ -118,13 +142,17 @@ def make_krr_step(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
                 LSHParams(w=P(cfg.model_axis, None), z=P(cfg.model_axis, None),
                           r1=P(cfg.model_axis, None), r2=P(cfg.model_axis, None)))
     out_specs = (data_spec, P(), P(cfg.model_axis, None))
+    n_data = _data_shard_count(mesh, cfg)
+    local_fused = cfg.fused and n_data == 1
 
     @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs)
     def step(x_local, y_local, lsh_local):
         op = _shard_operator(cfg, f, lsh_local)
-        idx = op.build_index(op.featurize(x_local))
-        mv = make_distributed_matvec(cfg, op)
+        # the slot-blocked layout is only consumed by the fused local matvec;
+        # sharded data axes stay on the split (psum-able) index
+        idx = op.build_index(op.featurize(x_local), blocked=local_fused)
+        mv = make_distributed_matvec(cfg, op, n_data_shards=n_data)
         beta_local, resnorm = cg_iterations(lambda v: mv(idx, v), y_local, cfg)
         # final prediction tables for the solved beta
         tables = jax.lax.psum(op.loads(idx, beta_local), cfg.data_axes)
@@ -145,7 +173,7 @@ def make_krr_predict(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
                        out_specs=out_specs)
     def predict(x_local, lsh_local, tables_local):
         op = _shard_operator(cfg, f, lsh_local)
-        idx = op.build_index(op.featurize(x_local))
+        idx = op.build_index(op.featurize(x_local), blocked=False)
         out = op.readout(idx, tables_local, average=False)
         return jax.lax.psum(out, cfg.model_axis) / cfg.m
 
@@ -224,15 +252,16 @@ def _build_routing(slot: Array, n_shards: int, table_size: int,
                     cap=cap)
 
 
-def _hashjoin_matvec(rt: _Routing, sign: Array, weight: Array, m_total: int,
+def _hashjoin_matvec(rt: _Routing, coeff: Array, m_total: int,
                      m_loc: int, data_axes, model_axis, beta_local: Array,
                      payload_dtype=jnp.float32):
     """payload_dtype=bfloat16 halves bucket/wire bytes; the table scatter-add
     still accumulates in f32, so only individual contributions are rounded
-    (CG tolerates the ~0.4% relative matvec noise; tests pin the accuracy)."""
+    (CG tolerates the ~0.4% relative matvec noise; tests pin the accuracy).
+    ``coeff`` is the index's precomputed weight·sign (m_loc, n_loc)."""
     n_shards = rt.recv_packed.shape[0] // rt.cap
     nb = n_shards * rt.cap
-    contrib = (beta_local[None, :] * weight * sign).reshape(-1)   # (E,)
+    contrib = (beta_local[None, :] * coeff).reshape(-1)           # (E,)
     # route contributions to slot owners
     send_c = jnp.zeros((nb,), payload_dtype).at[rt.bpos].set(
         contrib.astype(payload_dtype), mode="drop")
@@ -248,9 +277,9 @@ def _hashjoin_matvec(rt: _Routing, sign: Array, weight: Array, m_total: int,
                            0.0).astype(payload_dtype)
     back = jax.lax.all_to_all(vals_serve.reshape(n_shards, rt.cap), data_axes,
                               0, 0, tiled=True).reshape(-1)
-    vals = jnp.zeros((sign.size,), jnp.float32).at[rt.sidx].set(
+    vals = jnp.zeros((coeff.size,), jnp.float32).at[rt.sidx].set(
         back.astype(jnp.float32), mode="drop")
-    out = jnp.sum((vals.reshape(sign.shape)) * sign * weight, axis=0)
+    out = jnp.sum(vals.reshape(coeff.shape) * coeff, axis=0)
     return jax.lax.psum(out, model_axis) / m_total
 
 
@@ -272,16 +301,16 @@ def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
                        out_specs=out_specs)
     def step(x_local, y_local, lsh_local):
         op = _shard_operator(cfg, f, lsh_local)
-        idx = op.build_index(op.featurize(x_local))
+        idx = op.build_index(op.featurize(x_local), blocked=False)
         m_loc = idx.slot.shape[0]
         rt = _build_routing(idx.slot, n_shards, cfg.table_size, cfg.data_axes,
                             cap_factor)
-        mv = lambda v: _hashjoin_matvec(rt, idx.sign, idx.weight, cfg.m,
+        mv = lambda v: _hashjoin_matvec(rt, idx.coeff, cfg.m,
                                         m_loc, cfg.data_axes, cfg.model_axis,
                                         v, payload_dtype)
         beta_local, resnorm = cg_iterations(mv, y_local, cfg)
         # final sharded prediction table for the solved beta
-        contrib = (beta_local[None, :] * idx.weight * idx.sign).reshape(-1)
+        contrib = (beta_local[None, :] * idx.coeff).reshape(-1)
         send_c = jnp.zeros((n_shards * rt.cap,), jnp.float32).at[rt.bpos].set(
             contrib, mode="drop")
         recv_c = jax.lax.all_to_all(send_c.reshape(n_shards, rt.cap),

@@ -34,9 +34,19 @@ class CGResult(NamedTuple):
 
 
 def cg_solve(matvec: MatVec, b: Array, lam: float, *, tol: float = 1e-6,
-             maxiter: int = 200, x0: Array | None = None) -> CGResult:
-    """Solve (A + lam I) x = b with conjugate gradients (A PSD via matvec)."""
+             atol: float = 1e-12, maxiter: int = 200,
+             x0: Array | None = None) -> CGResult:
+    """Solve (A + lam I) x = b with conjugate gradients (A PSD via matvec).
+
+    Convergence when ``||r|| <= max(tol * ||b||, atol)`` — the absolute floor
+    makes ``b = 0`` (and any exactly-solved system) terminate immediately
+    instead of looping ``maxiter`` times on a zero threshold.  All loop
+    invariants (lam broadcast, threshold, breakdown guard) are hoisted out of
+    the iteration; each step costs exactly one matvec and two dot products.
+    """
     lam = jnp.asarray(lam, b.dtype)
+    eps = jnp.asarray(1e-30, b.dtype)            # breakdown guard, hoisted
+    maxiter = jnp.asarray(maxiter, jnp.int32)
 
     def amv(v):
         return matvec(v) + lam * v
@@ -46,7 +56,7 @@ def cg_solve(matvec: MatVec, b: Array, lam: float, *, tol: float = 1e-6,
     p = r
     rs = jnp.vdot(r, r)
     bnorm = jnp.sqrt(jnp.vdot(b, b))
-    thresh = (tol * bnorm) ** 2
+    thresh = jnp.maximum(tol * bnorm, jnp.asarray(atol, b.dtype)) ** 2
 
     def cond(state):
         _, _, _, rs, it = state
@@ -55,14 +65,15 @@ def cg_solve(matvec: MatVec, b: Array, lam: float, *, tol: float = 1e-6,
     def body(state):
         x, r, p, rs, it = state
         ap = amv(p)
-        alpha = rs / jnp.maximum(jnp.vdot(p, ap), 1e-30)
+        alpha = rs / jnp.maximum(jnp.vdot(p, ap), eps)
         x = x + alpha * p
         r = r - alpha * ap
         rs_new = jnp.vdot(r, r)
-        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
+        p = r + (rs_new / jnp.maximum(rs, eps)) * p
         return x, r, p, rs_new, it + 1
 
-    x, r, p, rs, it = jax.lax.while_loop(cond, body, (x, r, p, rs, jnp.asarray(0)))
+    x, r, p, rs, it = jax.lax.while_loop(
+        cond, body, (x, r, p, rs, jnp.asarray(0, jnp.int32)))
     return CGResult(x=x, iters=it, resnorm=jnp.sqrt(rs))
 
 
@@ -108,22 +119,30 @@ def model_operator(model: WLSHKRRModel, *,
 
 def wlsh_krr_fit(key: jax.Array, x: Array, y: Array, spec: WLSHKernelSpec, *,
                  m: int, lam: float, mode: str = "table", table_size: int = 0,
-                 tol: float = 1e-5, maxiter: int = 400,
-                 backend: str | None = "auto") -> WLSHKRRModel:
+                 tol: float = 1e-5, atol: float = 1e-12, maxiter: int = 400,
+                 backend: str | None = "auto",
+                 fused: bool = True) -> WLSHKRRModel:
+    """``fused`` selects the one-pass slot-blocked matvec for the CG solve
+    (default); ``fused=False`` keeps the split scatter→gather path reachable
+    for A/B runs.  The fitted model (beta, tables) is identical either way —
+    bitwise on the reference backend.  ``tol``/``atol`` are the CG relative /
+    absolute residual thresholds (see ``cg_solve``)."""
     n, d = x.shape
     if table_size <= 0:
         # heuristic: ~4x points per instance keeps same-slot collisions rare
         table_size = default_table_size(n)
     lsh = sample_lsh_params(key, m, d, spec.pdf, spec.lengthscale)
     op = make_operator(lsh, get_bucket_fn(spec.bucket.name), table_size,
-                       backend=backend)
+                       backend=backend, fused=fused)
     feats = op.featurize(x)
 
     # Prediction tables are always CountSketch (exact-mode key lookup for
     # out-of-sample points would need a hash join; the signed table is unbiased
     # and O(1) per query — see DESIGN.md §3).  In table mode the same index
-    # drives CG, so it is built exactly once.
-    tidx = op.build_index(feats, mode="table")
+    # drives CG, so it is built exactly once (the CG closure closes over the
+    # slot-blocked layout when fused — the sort runs once, not per iteration).
+    tidx = op.build_index(feats, mode="table",
+                          blocked=fused and mode == "table")
     if mode == "exact":
         eidx = op.build_index(feats, mode="exact")
         mv = lambda v: op.matvec(eidx, v)
@@ -132,7 +151,7 @@ def wlsh_krr_fit(key: jax.Array, x: Array, y: Array, spec: WLSHKernelSpec, *,
     else:
         raise ValueError(f"unknown mode {mode!r}")
 
-    res = cg_solve(mv, y, lam, tol=tol, maxiter=maxiter)
+    res = cg_solve(mv, y, lam, tol=tol, atol=atol, maxiter=maxiter)
     tables = op.loads(tidx, res.x)
     return WLSHKRRModel(lsh=lsh, bucket_name=spec.bucket.name, beta=res.x,
                         tables=tables, table_size=table_size,

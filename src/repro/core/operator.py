@@ -7,7 +7,8 @@ the CountSketch table geometry behind a small primitive set:
     build_index     Features -> Table/Exact index (per-point-set structure)
     loads           index, beta -> (m, B) tables  (CountSketch scatter)
     readout         index, tables -> per-point    (CountSketch gather)
-    matvec          index, beta -> K~ beta        (loads ∘ readout)
+    matvec          index, beta -> K~ beta        (fused one-pass off the
+                    slot-blocked layout, or loads ∘ readout when split)
     predict_batched tables, x_test -> yhat        (streaming, fixed memory)
 
 Every primitive dispatches on ``backend``:
@@ -35,8 +36,9 @@ import jax.numpy as jnp
 from ..backend import default_interpret, resolve_backend
 from .bucket_fns import BucketFn
 from .lsh import Features, LSHParams, featurize as featurize_reference
-from .wlsh import (ExactIndex, TableIndex, build_exact_index, build_table_index,
-                   exact_matvec, table_loads, table_readout)
+from .wlsh import (ExactIndex, TableIndex, build_blocked_layout,
+                   build_exact_index, build_table_index, exact_matvec,
+                   table_loads, table_matvec_fused, table_readout)
 
 Array = jnp.ndarray
 Index = Union[TableIndex, ExactIndex]
@@ -61,6 +63,7 @@ class WLSHOperator(NamedTuple):
     table_size: int
     backend: str = "reference"
     interpret: bool = True       # Pallas interpret mode (ignored by reference)
+    fused: bool = True           # one-pass matvec off the slot-blocked layout
 
     # -- featurization ------------------------------------------------------
 
@@ -73,11 +76,26 @@ class WLSHOperator(NamedTuple):
 
     # -- index construction -------------------------------------------------
 
-    def build_index(self, feats: Features, mode: str = "table") -> Index:
+    def build_index(self, feats: Features, mode: str = "table", *,
+                    blocked: bool | None = None) -> Index:
         """'table' -> CountSketch TableIndex (both backends); 'exact' ->
-        sorted-bucket ExactIndex (reference-only validation path)."""
+        sorted-bucket ExactIndex (reference-only validation path).
+
+        ``blocked`` attaches the slot-blocked layout (one-off per-instance
+        sort + per-tile offsets) that the fused matvec consumes; ``None``
+        follows the operator's ``fused`` flag.  Readout-only consumers
+        (prediction) pass ``blocked=False`` to skip the sort.
+        """
         if mode == "table":
-            return build_table_index(feats, self.table_size)
+            idx = build_table_index(feats, self.table_size)
+            want_blocked = self.fused if blocked is None else blocked
+            if want_blocked:
+                # only materialize the array group this backend's fused
+                # matvec consumes (the groups are disjoint and O(mn)-sized)
+                idx = idx._replace(blocked=build_blocked_layout(
+                    idx.slot, idx.coeff, self.table_size,
+                    parts=self.backend))
+            return idx
         if mode == "exact":
             return build_exact_index(feats)
         raise ValueError(f"unknown mode {mode!r}")
@@ -104,12 +122,33 @@ class WLSHOperator(NamedTuple):
 
     # -- matvec -------------------------------------------------------------
 
-    def matvec(self, index: Index, beta: Array) -> Array:
-        """K~ beta in O(n m): table mode = scatter + gather; exact mode =
-        segment-sum over sorted buckets (reference implementation)."""
+    def matvec(self, index: Index, beta: Array, *,
+               average: bool = True) -> Array:
+        """K~ beta in O(n m).
+
+        Table mode dispatches on the index: with a slot-blocked layout (and
+        ``fused`` set) the scatter and gather run in one pass — a single
+        Pallas kernel whose table tile stays in VMEM, or the reference
+        sorted segment-sum — so the (m, B) table is never materialized
+        between them.  Without a layout it falls back to the split
+        loads → readout composition (the psum-able path).  Exact mode is the
+        reference sorted-bucket estimator (``average`` only).
+        """
         if isinstance(index, ExactIndex):
+            if not average:
+                raise ValueError("exact-mode matvec only supports average=True")
             return exact_matvec(index, beta)
-        return self.readout(index, self.loads(index, beta))
+        lay = index.blocked
+        if self.fused and lay is not None:
+            # each backend consumes its own layout group; an index built by
+            # the other backend degrades to the split path below
+            if self.backend == "pallas" and lay.src is not None:
+                from ..kernels.binning import bin_fused_matvec_op
+                return bin_fused_matvec_op(index, beta, average=average,
+                                           interpret=self.interpret)
+            if self.backend != "pallas" and lay.perm is not None:
+                return table_matvec_fused(index, beta, average=average)
+        return self.readout(index, self.loads(index, beta), average=average)
 
     # -- streaming prediction -----------------------------------------------
 
@@ -123,7 +162,7 @@ class WLSHOperator(NamedTuple):
         n = x_test.shape[0]
         if batch_size is None or batch_size >= n:
             feats = self.featurize(x_test)
-            return self.readout(self.build_index(feats), tables)
+            return self.readout(self.build_index(feats, blocked=False), tables)
         n_blocks = -(-n // batch_size)
         xp = jnp.pad(jnp.asarray(x_test, jnp.float32),
                      ((0, n_blocks * batch_size - n), (0, 0)))
@@ -131,7 +170,7 @@ class WLSHOperator(NamedTuple):
 
         def one_block(xb):
             feats = self.featurize(xb)
-            return self.readout(self.build_index(feats), tables)
+            return self.readout(self.build_index(feats, blocked=False), tables)
 
         out = jax.lax.map(one_block, blocks)
         return out.reshape(-1)[:n]
@@ -139,11 +178,14 @@ class WLSHOperator(NamedTuple):
 
 def make_operator(lsh: LSHParams, bucket: BucketFn, table_size: int, *,
                   backend: str | None = "auto",
-                  interpret: bool | None = None) -> WLSHOperator:
+                  interpret: bool | None = None,
+                  fused: bool = True) -> WLSHOperator:
     """Construct an operator with 'auto' backend/interpret resolved for this
     platform (the only place resolution happens — everything downstream sees
-    a concrete backend)."""
+    a concrete backend).  ``fused=False`` keeps the split scatter→gather
+    matvec reachable for A/B runs."""
     return WLSHOperator(lsh=lsh, bucket=bucket, table_size=int(table_size),
                         backend=resolve_backend(backend),
                         interpret=default_interpret() if interpret is None
-                        else interpret)
+                        else interpret,
+                        fused=fused)

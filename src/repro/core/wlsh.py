@@ -83,21 +83,179 @@ def exact_kernel_matrix(feats: Features) -> Array:
 # table (CountSketch) mode
 # ---------------------------------------------------------------------------
 
+# Default fused-kernel geometry: one point block of the sorted layout and one
+# table tile.  bn = 128 keeps tile-capacity padding small (a nonempty tile
+# wastes at most bn-1 layout slots); bt = 512 matches the split kernels.
+BLOCKED_N = 128
+BLOCKED_T = 512
+
+
+class BlockedLayout(NamedTuple):
+    """Slot-blocked point layout for a fixed (point set, table geometry).
+
+    Points of every instance are stably sorted by CountSketch slot and packed
+    into ``block_n``-point blocks such that each block addresses exactly ONE
+    ``block_t``-slot table tile.  A Pallas grid over the resulting visit list
+    therefore only touches (point-block, table-tile) pairs that actually
+    collide — O(n/bn + B/bt) tiles per instance instead of the (n/bn)·(B/bt)
+    cross product.  ``L = NB·bn`` with ``NB = n//bn + ceil(B/bt)`` is the
+    static layout length (tile-capacity rounding); padding slots carry
+    ``coeff = 0`` so they can never perturb loads or readouts.
+
+    Visit v of instance s processes layout block ``v_block[s, v]`` against
+    tile ``v_tile[s, v]``; ``v_phase`` is 0 for the scatter pass and 1 for
+    the gather pass.  Per tile, all scatter visits precede all gather visits,
+    and tiles appear in ascending order, so one VMEM-resident tile serves
+    both passes.  Visits past ``n_visits[s]`` re-gather the last real block
+    (idempotent no-ops that keep the grid static).
+
+    Each backend consumes a disjoint array group, so ``build_blocked_layout``
+    gates construction on ``parts`` ('reference' | 'pallas' | 'both'); the
+    unbuilt group's fields are None.
+    """
+
+    # reference (sorted segment-sum) group:
+    perm: Array          # (m, n) int32 — stable argsort of slot per instance
+    seg_id: Array        # (m, n) int32 — dense rank of each sorted slot
+    seg_pt: Array        # (m, n) int32 — segment of original point i
+    coeff_sorted: Array  # (m, n) float32 — coeff in sorted order
+    # pallas (fused kernel) group:
+    inv_pos: Array    # (m, n) int32 — layout position of original point i
+    src: Array        # (m, L) int32 — original point per layout slot (n = pad)
+    slot_lay: Array   # (m, L) int32 — CountSketch slot per layout position
+    coeff_lay: Array  # (m, L) float32 — weight·sign per position (0 = pad)
+    v_block: Array    # (m, V) int32 — visit -> layout block
+    v_tile: Array     # (m, V) int32 — visit -> table tile
+    v_phase: Array    # (m, V) int32 — 0 scatter, 1 gather
+    # always present:
+    n_visits: Array   # (m,) int32 — real visits (<= V = 2·(n//bn + B/bt))
+    block_n: int
+    block_t: int
+    num_tiles: int
+
+
 class TableIndex(NamedTuple):
     slot: Array    # (m, n) int32 in [0, B)
     sign: Array    # (m, n) float32
     weight: Array  # (m, n) float32
+    coeff: Array   # (m, n) float32 — weight·sign, hoisted out of CG iterations
     table_size: int
+    blocked: BlockedLayout | None = None
 
 
 def build_table_index(feats: Features, table_size: int) -> TableIndex:
     return TableIndex(slot=slots_from_features(feats, table_size),
-                      sign=feats.sign, weight=feats.weight, table_size=table_size)
+                      sign=feats.sign, weight=feats.weight,
+                      coeff=feats.weight * feats.sign, table_size=table_size)
+
+
+def build_blocked_layout(slot: Array, coeff: Array, table_size: int, *,
+                         block_n: int = BLOCKED_N,
+                         block_t: int = BLOCKED_T,
+                         parts: str = "both") -> BlockedLayout:
+    """One-off O(mn log n) construction of the slot-blocked layout.
+
+    Pure jnp (jit/shard_map safe).  ``table_size`` need not divide
+    ``block_t`` — the tile grid covers ceil(table_size / block_t) tiles and
+    trailing tiles are simply never populated.  ``parts`` selects which
+    backend's array group to materialize ('reference' | 'pallas' | 'both'):
+    the groups are disjoint and sized O(mn)–O(mL), so a reference solve
+    should not carry the kernel's visit lists through CG (and vice versa).
+    """
+    if parts not in ("reference", "pallas", "both"):
+        raise ValueError(f"unknown parts {parts!r}")
+    want_ref = parts in ("reference", "both")
+    want_pal = parts in ("pallas", "both")
+    m, n = slot.shape
+    bn, bt = int(block_n), int(block_t)
+    num_tiles = -(-int(table_size) // bt)
+    # Static block budget: sum_t ceil(c_t/bn) <= n//bn + num_tiles because
+    # sum floor(c_t/bn) <= n//bn and at most one partial block per tile.
+    nb = n // bn + num_tiles
+    layout_len = nb * bn
+    n_vis = 2 * nb
+
+    def one(slot_row, coeff_row):
+        order = jnp.argsort(slot_row).astype(jnp.int32)        # stable sort
+        ss = slot_row[order]
+        tile = ss // bt                                        # (n,) in [0, T)
+
+        ref_group = None
+        if want_ref:
+            new_seg = jnp.concatenate([
+                jnp.zeros((1,), jnp.int32),
+                (ss[1:] != ss[:-1]).astype(jnp.int32)])
+            seg_id = jnp.cumsum(new_seg).astype(jnp.int32)
+            seg_pt = jnp.zeros((n,), jnp.int32).at[order].set(seg_id)
+            ref_group = (order, seg_id, seg_pt, coeff_row[order])
+
+        counts = jnp.zeros((num_tiles,), jnp.int32).at[tile].add(1)
+        kblocks = -(-counts // bn)                             # blocks per tile
+        blk_start = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                     jnp.cumsum(kblocks).astype(jnp.int32)])
+        total_blocks = blk_start[-1]
+
+        pal_group = None
+        if want_pal:
+            # layout position of sorted point r: tile start + within-tile rank
+            first_idx = jnp.searchsorted(tile, jnp.arange(num_tiles,
+                                                          dtype=tile.dtype))
+            rank = jnp.arange(n, dtype=jnp.int32) - \
+                first_idx[tile].astype(jnp.int32)
+            pos = blk_start[tile] * bn + rank
+            src = jnp.full((layout_len,), n, jnp.int32).at[pos].set(order)
+            slot_lay = jnp.zeros((layout_len,), jnp.int32).at[pos].set(ss)
+            coeff_lay = jnp.zeros((layout_len,), jnp.float32).at[pos].set(
+                coeff_row[order])
+            inv_pos = jnp.zeros((n,), jnp.int32).at[order].set(pos)
+
+            # visit list: per tile t, scatter its blocks then gather them;
+            # tile t's visits fill [2·blk_start[t], 2·blk_start[t+1])
+            barange = jnp.arange(nb, dtype=jnp.int32)
+            block_tile = jnp.minimum(
+                jnp.searchsorted(blk_start[1:], barange, side="right"),
+                num_tiles - 1).astype(jnp.int32)
+            q = barange - blk_start[block_tile]
+            v_s = 2 * blk_start[block_tile] + q
+            v_g = v_s + kblocks[block_tile]
+            real = barange < total_blocks
+            vs_idx = jnp.where(real, v_s, n_vis)               # OOB -> dropped
+            vg_idx = jnp.where(real, v_g, n_vis)
+            v_block = jnp.zeros((n_vis,), jnp.int32) \
+                .at[vs_idx].set(barange, mode="drop") \
+                .at[vg_idx].set(barange, mode="drop")
+            v_tile = jnp.zeros((n_vis,), jnp.int32) \
+                .at[vs_idx].set(block_tile, mode="drop") \
+                .at[vg_idx].set(block_tile, mode="drop")
+            v_phase = jnp.zeros((n_vis,), jnp.int32) \
+                .at[vg_idx].set(1, mode="drop")
+            # padding visits: re-gather the last real block against the
+            # (still loaded) last tile — rewrites the same values, never
+            # zeroes the tile
+            last_b = jnp.maximum(total_blocks - 1, 0)
+            pad = jnp.arange(n_vis, dtype=jnp.int32) >= 2 * total_blocks
+            v_block = jnp.where(pad, last_b, v_block)
+            v_tile = jnp.where(pad, block_tile[last_b], v_tile)
+            v_phase = jnp.where(pad, 1, v_phase)
+            pal_group = (inv_pos, src, slot_lay, coeff_lay,
+                         v_block, v_tile, v_phase)
+        return ref_group, pal_group, 2 * total_blocks
+
+    ref_group, pal_group, n_visits = jax.vmap(one)(slot, coeff)
+    perm, seg_id, seg_pt, coeff_sorted = ref_group or (None,) * 4
+    (inv_pos, src, slot_lay, coeff_lay,
+     v_block, v_tile, v_phase) = pal_group or (None,) * 7
+    return BlockedLayout(perm=perm, seg_id=seg_id, seg_pt=seg_pt,
+                         coeff_sorted=coeff_sorted, inv_pos=inv_pos, src=src,
+                         slot_lay=slot_lay, coeff_lay=coeff_lay,
+                         v_block=v_block, v_tile=v_tile, v_phase=v_phase,
+                         n_visits=n_visits.astype(jnp.int32),
+                         block_n=bn, block_t=bt, num_tiles=num_tiles)
 
 
 def table_loads(index: TableIndex, beta: Array) -> Array:
     """Bucket-load tables for all m instances: (m, B)."""
-    contrib = beta[None, :] * index.weight * index.sign  # (m, n)
+    contrib = beta[None, :] * index.coeff  # (m, n)
     m = index.slot.shape[0]
     tables = jnp.zeros((m, index.table_size), contrib.dtype)
     rows = jnp.arange(m, dtype=jnp.int32)[:, None]
@@ -110,7 +268,7 @@ def table_readout(index: TableIndex, tables: Array, *,
     when ``average``, else the plain instance sum (distributed shards sum
     locally and divide by the global m after their model-axis psum)."""
     rows = jnp.arange(index.slot.shape[0], dtype=jnp.int32)[:, None]
-    vals = tables[rows, index.slot] * index.sign * index.weight
+    vals = tables[rows, index.slot] * index.coeff
     return jnp.mean(vals, axis=0) if average else jnp.sum(vals, axis=0)
 
 
@@ -118,12 +276,43 @@ def table_matvec(index: TableIndex, beta: Array) -> Array:
     return table_readout(index, table_loads(index, beta))
 
 
+def table_matvec_fused(index: TableIndex, beta: Array, *,
+                       average: bool = True) -> Array:
+    """Fused table matvec via sorted segment-sum — the reference fast path.
+
+    Reuses the blocked layout's permutation: bucket loads are segment sums
+    over the slot-sorted contributions (num_segments = n, not B), so the
+    (m, B) table is never materialized and the work is O(nm) independent of
+    the table size.  Per iteration this is one permuted gather, one segment
+    sum and one gather back through the precomputed per-point segment ids —
+    every permutation-derived array (``coeff_sorted``, ``seg_pt``) is hoisted
+    into the layout.  The stable sort keeps every slot's contributions in
+    original point order, which makes this bitwise-identical to
+    ``table_readout(table_loads(beta))`` (both lower to sequential
+    scatter-adds over the same per-slot operand order).
+    """
+    lay = index.blocked
+    if lay is None or lay.perm is None:
+        raise ValueError("fused matvec needs a slot-blocked index with the "
+                         "reference group; build it with build_blocked_layout"
+                         "(parts='reference'|'both') / build_index(blocked=True)")
+    n = beta.shape[0]
+
+    def one(perm, seg_id, coeff_sorted, seg_pt, coeff):
+        loads = jax.ops.segment_sum(beta[perm] * coeff_sorted, seg_id,
+                                    num_segments=n)
+        return loads[seg_pt] * coeff
+
+    outs = jax.vmap(one)(lay.perm, lay.seg_id, lay.coeff_sorted, lay.seg_pt,
+                         index.coeff)
+    return jnp.mean(outs, axis=0) if average else jnp.sum(outs, axis=0)
+
+
 def table_kernel_matrix(index: TableIndex) -> Array:
     """Explicit CountSketch kernel matrix (tests only): PSD by construction."""
     eq = index.slot[:, :, None] == index.slot[:, None, :]
-    ss = index.sign[:, :, None] * index.sign[:, None, :]
-    ww = index.weight[:, :, None] * index.weight[:, None, :]
-    return jnp.mean(eq * ss * ww, axis=0)
+    cc = index.coeff[:, :, None] * index.coeff[:, None, :]
+    return jnp.mean(eq * cc, axis=0)
 
 
 # ---------------------------------------------------------------------------

@@ -185,6 +185,30 @@ def _collective_bytes(op: _Op, symbols: dict[str, str], kind: str) -> int:
     return _shape_bytes(op.type_str)
 
 
+def tensor_shapes(hlo_text: str) -> set:
+    """Every (dtype, dims) tensor shape appearing in the module text.
+
+    Set-membership proxy for "does the compiled program materialize a buffer
+    of this shape anywhere" — used by the fused-matvec tests to assert the
+    (m, B) CountSketch table exists in the split scatter→gather program but
+    never in the fused one-pass kernel (where the table lives only as a
+    VMEM scratch tile).
+    """
+    out = set()
+    for m in _SHAPE_RE.finditer(hlo_text):
+        dtype, dims = m.groups()
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.add((dtype,
+                 tuple(int(d) for d in dims.split(",")) if dims else ()))
+    return out
+
+
+def materializes_shape(hlo_text: str, dims, dtype: str = "f32") -> bool:
+    """True when a tensor of exactly this (dtype, dims) appears in the HLO."""
+    return (dtype, tuple(int(d) for d in dims)) in tensor_shapes(hlo_text)
+
+
 @dataclass
 class HLOStats:
     flops: float = 0.0                # per-device dot FLOPs, trip-weighted

@@ -1,3 +1,5 @@
-from .kernel import bin_gather_pallas, bin_scatter_pallas
-from .ops import bin_loads_op, bin_readout_op, table_matvec_op
+from .kernel import (bin_fused_matvec_pallas, bin_gather_pallas,
+                     bin_scatter_pallas)
+from .ops import (bin_fused_matvec_op, bin_loads_op, bin_readout_op,
+                  table_matvec_op)
 from .ref import bin_gather_ref, bin_scatter_ref

@@ -11,6 +11,21 @@ from an iota compare.  Grid iterates the reduction dimension (point blocks for
 scatter, table tiles for gather) in the trailing, sequential position so the
 output tile accumulates in place across steps (standard Pallas revisiting
 pattern).
+
+Two kernel families:
+
+* **split** (``bin_scatter_pallas`` / ``bin_gather_pallas``) — iterate the
+  full (point-block × table-tile) cross product and materialize the (m, B)
+  table in HBM between the two calls.  O(n·B) MXU work, but the table is a
+  psum-able array — this is what the distributed data-shard merge needs.
+* **fused** (``bin_fused_matvec_pallas``) — one ``pallas_call`` drives both
+  products off a slot-blocked layout (``core.wlsh.BlockedLayout``): points
+  are pre-sorted so each grid visit pairs one point block with the ONE table
+  tile it collides with, the visit list is scalar-prefetched into SMEM so
+  the BlockSpec index maps can follow the data-dependent schedule, and the
+  table tile lives in a VMEM scratch for both the scatter and the gather
+  pass — the (m, B) table never exists in HBM.  O(n/bn + B/bt) visits per
+  instance: genuinely linear when B = Θ(n).
 """
 from __future__ import annotations
 
@@ -19,6 +34,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK_N = 1024       # points per block
 BLOCK_T = 512        # table slots per tile
@@ -80,6 +96,79 @@ def bin_scatter_pallas(slot, contrib, *, table_size: int, interpret: bool = True
         out_shape=jax.ShapeDtypeStruct((m, table_size), jnp.float32),
         interpret=interpret,
     )(slot, contrib)
+
+
+def _fused_body(v_block_ref, v_tile_ref, v_phase_ref, slot_ref, coeff_ref,
+                beta_ref, out_ref, table_ref):
+    """One visit: (point block, table tile, phase) from the prefetched lists.
+
+    Tiles arrive in ascending order with all scatter visits before any gather
+    visit, so ``table_ref`` (VMEM scratch) is zeroed exactly once per tile,
+    accumulated over the tile's scatter visits, and then read by its gather
+    visits — it never round-trips through HBM.  Padding visits re-gather the
+    last real block against the unchanged tile (idempotent full overwrite).
+    """
+    i, j = pl.program_id(0), pl.program_id(1)
+    tile = v_tile_ref[i, j]
+    phase = v_phase_ref[i, j]
+    prev_tile = v_tile_ref[i, jnp.maximum(j - 1, 0)]
+    new_tile = (j == 0) | (tile != prev_tile)
+
+    @pl.when(new_tile)
+    def _zero():
+        table_ref[...] = jnp.zeros_like(table_ref)
+
+    bt = table_ref.shape[1]
+    slot = slot_ref[...][0]                                  # (bn,) int32
+    col = jax.lax.broadcasted_iota(jnp.int32, (slot.shape[0], bt), 1)
+    onehot = (slot[:, None] - tile * bt == col).astype(jnp.float32)
+
+    @pl.when(phase == 0)
+    def _scatter():
+        contrib = coeff_ref[...] * beta_ref[...]             # (1, bn)
+        table_ref[...] += jax.lax.dot_general(
+            contrib, onehot, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(phase == 1)
+    def _gather():
+        out_ref[...] = coeff_ref[...] * jax.lax.dot_general(
+            table_ref[...], onehot, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_t", "interpret"))
+def bin_fused_matvec_pallas(v_block, v_tile, v_phase, slot_lay, coeff_lay,
+                            beta_lay, *, block_n: int, block_t: int,
+                            interpret: bool = True):
+    """Fused scatter→gather over a slot-blocked layout (one kernel call).
+
+    v_block/v_tile/v_phase (m, V) int32 — the per-instance visit schedule
+    (scalar-prefetched; the index maps select layout block ``v_block[i, j]``
+    at visit j).  slot_lay/coeff_lay/beta_lay (m, L) — the blocked layout
+    arrays with L a multiple of ``block_n``.  Returns out_lay (m, L) f32 with
+    ``out_lay[p] = coeff_lay[p] * table[slot_lay[p]]`` at every real layout
+    position (padding positions have coeff 0).  The (m, B) table exists only
+    as a (1, block_t) VMEM scratch tile.
+    """
+    m, layout_len = slot_lay.shape
+    if layout_len % block_n:
+        raise ValueError("layout length must be a multiple of block_n")
+    n_vis = v_block.shape[1]
+    lay_spec = pl.BlockSpec((1, block_n), lambda i, j, vb, vt, vp: (i, vb[i, j]))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(m, n_vis),
+        in_specs=[lay_spec, lay_spec, lay_spec],
+        out_specs=lay_spec,
+        scratch_shapes=[pltpu.VMEM((1, block_t), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _fused_body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, layout_len), jnp.float32),
+        interpret=interpret,
+    )(v_block, v_tile, v_phase, slot_lay, coeff_lay, beta_lay)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_n", "block_t"))

@@ -7,7 +7,13 @@ These are the kernel-backed equivalents of the reference table primitives in
   the (m, B) CountSketch tables.
 * ``bin_readout_op`` ~ ``table_readout`` — gather every point's bucket load
   back out and combine over instances.
-* ``table_matvec_op`` ~ ``table_matvec`` — the composition of the two.
+* ``table_matvec_op`` ~ ``table_matvec`` — the composition of the two (the
+  *split* path: the (m, B) table round-trips through HBM between the calls,
+  which is what makes it psum-able in the distributed step).
+* ``bin_fused_matvec_op`` ~ ``table_matvec_fused`` — one kernel invocation
+  driven by the slot-blocked layout (``TableIndex.blocked``): scatter and
+  gather share a VMEM-resident table tile, and only O(n/bn + B/bt) visits
+  are scheduled per instance instead of the (n/bn)·(B/bt) cross product.
 
 Shapes are padded internally: ``n`` (points) is padded to the block size with
 an always-zero contribution in slot 0, and ``table_size`` is padded up to a
@@ -21,8 +27,10 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from ...backend import default_interpret
-from ...core.wlsh import TableIndex
-from .kernel import BLOCK_N, BLOCK_T, bin_gather_pallas, bin_scatter_pallas
+from ...core.wlsh import (TableIndex, table_loads, table_matvec_fused,
+                          table_readout)
+from .kernel import (BLOCK_N, BLOCK_T, bin_fused_matvec_pallas,
+                     bin_gather_pallas, bin_scatter_pallas)
 from .ref import bin_gather_ref, bin_scatter_ref
 
 
@@ -46,7 +54,7 @@ def bin_loads_op(index: TableIndex, beta, *, use_kernel: bool = True,
                  interpret: bool | None = None, block_n: int = BLOCK_N,
                  block_t: int = BLOCK_T):
     """Kernel-backed ``table_loads``: (m, B) bucket-load tables for beta."""
-    contrib = (beta[None, :] * index.weight * index.sign).astype(jnp.float32)
+    contrib = (beta[None, :] * index.coeff).astype(jnp.float32)
     if not use_kernel:
         return bin_scatter_ref(index.slot, contrib, table_size=index.table_size)
     if interpret is None:
@@ -81,14 +89,51 @@ def bin_readout_op(index: TableIndex, tables, *, average: bool = True,
                            ((0, 0), (0, bp - index.table_size)))
         vals = bin_gather_pallas(slot_p, tables_p, interpret=interpret,
                                  block_n=bn, block_t=bt)[:, :n]
-    signed = vals * index.sign * index.weight
+    signed = vals * index.coeff
     return jnp.mean(signed, axis=0) if average else jnp.sum(signed, axis=0)
 
 
 def table_matvec_op(index: TableIndex, beta, *, use_kernel: bool = True,
                     interpret: bool | None = None):
-    """Scatter then gather: the kernel-backed WLSH table matvec."""
+    """Scatter then gather: the kernel-backed split WLSH table matvec."""
     tables = bin_loads_op(index, beta, use_kernel=use_kernel,
                           interpret=interpret)
     return bin_readout_op(index, tables, use_kernel=use_kernel,
                           interpret=interpret)
+
+
+def bin_fused_matvec_op(index: TableIndex, beta, *, average: bool = True,
+                        use_kernel: bool = True,
+                        interpret: bool | None = None):
+    """Fused one-pass WLSH table matvec off the slot-blocked layout.
+
+    Requires ``index.blocked`` (see ``core.wlsh.build_blocked_layout``).  The
+    per-iteration jnp work is one gather (``beta`` into the sorted layout)
+    and one gather back (``inv_pos``) — everything between runs inside a
+    single Pallas kernel whose table tile never leaves VMEM.
+    """
+    lay = index.blocked
+    if lay is None or lay.src is None:
+        raise ValueError("fused matvec needs a slot-blocked index with the "
+                         "pallas group; build it with build_blocked_layout"
+                         "(parts='pallas'|'both') / a pallas-backend "
+                         "build_index(blocked=True)")
+    if not use_kernel:
+        # pallas-built indexes don't carry the reference segment group;
+        # degrade to the split composition rather than refuse
+        if lay.perm is not None:
+            return table_matvec_fused(index, beta, average=average)
+        return table_readout(index, table_loads(index, beta), average=average)
+    if interpret is None:
+        interpret = default_interpret()
+    m = index.slot.shape[0]
+    beta_pad = jnp.concatenate([jnp.asarray(beta, jnp.float32),
+                                jnp.zeros((1,), jnp.float32)])
+    beta_lay = beta_pad[lay.src]                              # (m, L)
+    out_lay = bin_fused_matvec_pallas(
+        lay.v_block, lay.v_tile, lay.v_phase, lay.slot_lay, lay.coeff_lay,
+        beta_lay, block_n=lay.block_n, block_t=lay.block_t,
+        interpret=interpret)
+    rows = jnp.arange(m, dtype=jnp.int32)[:, None]
+    vals = out_lay[rows, lay.inv_pos]          # (m, n), coeff already applied
+    return jnp.mean(vals, axis=0) if average else jnp.sum(vals, axis=0)

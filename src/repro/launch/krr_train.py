@@ -49,6 +49,11 @@ def main() -> int:
                     choices=["auto", "reference", "pallas"],
                     help="WLSH operator backend inside each shard "
                          "(auto = pallas on TPU, reference elsewhere)")
+    ap.add_argument("--fused", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="one-pass slot-blocked matvec for the CG solve "
+                         "(used when the data axes are unsharded; --no-fused "
+                         "forces the split scatter->gather path for A/B runs)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -64,7 +69,8 @@ def main() -> int:
 
     cfg = KRRStepConfig(m=args.m, table_size=table, lam=args.lam,
                         cg_iters=args.cg_iters, data_axes=("data",),
-                        model_axis="model", backend=args.backend)
+                        model_axis="model", backend=args.backend,
+                        fused=args.fused)
     f = get_bucket_fn(args.bucket)
     lsh = sample_sharded_lsh(jax.random.PRNGKey(args.seed + 1), args.m, d,
                              GammaPDF(2.0, 1.0), args.lengthscale)
@@ -79,7 +85,7 @@ def main() -> int:
     yhat = predict(xte_p, lsh, tables)[:n_te]
     rmse = float(jnp.sqrt(jnp.mean((yhat - yte) ** 2)))
     print(f"[krr] {args.dataset} scale={args.scale}: n={n_tr} d={d} "
-          f"m={args.m} B={table} backend={args.backend}")
+          f"m={args.m} B={table} backend={args.backend} fused={args.fused}")
     print(f"[krr] fit {t_fit:.2f}s on {n_shards} shard(s); "
           f"CG residual {float(resnorm):.2e}; test RMSE {rmse:.4f} "
           f"(label std = 1.0)")

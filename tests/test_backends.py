@@ -93,8 +93,11 @@ def test_krr_fit_backend_parity():
     x = jax.random.uniform(key, (n, d)) * 2.0
     y = jax.random.normal(jax.random.fold_in(key, 1), (n,))
     spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"))
+    # tight CG tol: compare converged solutions, not mid-trajectory iterates —
+    # the fused kernels' accumulation grouping differs by ~1e-7 per matvec,
+    # which a loose solve amplifies past the 1e-5 acceptance bar
     fit = lambda backend: wlsh_krr_fit(jax.random.fold_in(key, 2), x, y, spec,
-                                       m=24, lam=0.5, maxiter=50,
+                                       m=24, lam=0.5, maxiter=200, tol=1e-7,
                                        backend=backend)
     m_ref, m_pal = fit("reference"), fit("pallas")
     assert m_ref.backend == "reference" and m_pal.backend == "pallas"

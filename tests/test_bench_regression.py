@@ -1,0 +1,23 @@
+"""Perf regression gate over the committed BENCH_matvec.json (--runslow).
+
+Reruns the matvec benchmark section at the committed sizes and fails when
+``reference_us`` or ``fused_us`` regresses more than 1.3x — see
+``benchmarks/check_regression.py`` for the standalone CLI form.
+"""
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+pytestmark = pytest.mark.slow
+
+
+def test_matvec_perf_no_regression():
+    from benchmarks.check_regression import DEFAULT_BASELINE, check
+    assert DEFAULT_BASELINE.exists(), "committed BENCH_matvec.json missing"
+    failures, rows = check()
+    if not rows:
+        pytest.skip("baseline recorded on a different platform")
+    assert not failures, "\n".join(failures)
