@@ -8,18 +8,26 @@ against the O(n^2) dense matvec.  ``run`` returns JSON-able per-n rows with a
 explicit ``None`` + a marker, never silently absent) so the perf trajectory
 can accumulate in BENCH_matvec.json (see benchmarks/run.py) and
 ``benchmarks/check_regression.py`` can diff runs.
+
+The solver section (``pcg_*`` keys) puts preconditioned CG on the same
+regression rail: per n it solves an ill-conditioned synthetic KRR system
+(long lengthscale, lam = 1e-3) unpreconditioned and with the rank-128
+Nyström preconditioner, recording iteration counts and solve wall-clock.
+``pcg_us`` includes the preconditioner build — the honest end-to-end cost.
 """
 from __future__ import annotations
 
 import json
+import time
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import (GammaPDF, get_bucket_fn, make_operator,
-                        sample_lsh_params)
+                        make_preconditioner, pcg_solve, sample_lsh_params,
+                        table_diag)
+from repro.core.precond import DEFAULT_NYSTROM_RANK
 from repro.core.operator import default_table_size
 from repro.core.wlsh import build_exact_index, exact_kernel_matrix, exact_matvec
 
@@ -30,15 +38,60 @@ from .common import emit, time_fn
 # only depends on the shape, and the timing is what the row records
 DENSE_EXACT_MAX_N = 4096
 
+# solver section: unpreconditioned CG on the ill-conditioned system needs
+# O(1000) iterations — capped at this n so the benchmark stays minutes-scale
+# (larger rows carry the explicit "large_n" skip marker instead)
+PCG_MAX_N = 4096
+PCG_LAM = 1e-3
+PCG_LENGTHSCALE = 4.0
+PCG_RANK = DEFAULT_NYSTROM_RANK
+PCG_TOL = 1e-6
+PCG_MAXITER = 2000
+
+PCG_KEYS = ("cg_iters", "cg_us", "pcg_iters", "pcg_us", "pcg_iter_ratio")
+
+
+def _pcg_section(key, x, m: int, table_size: int, row: dict) -> None:
+    """Fill the row's solver keys (in place, always every key)."""
+    d = x.shape[1]
+    lsh = sample_lsh_params(jax.random.fold_in(key, 11), m, d,
+                            GammaPDF(2.0, 1.0), lengthscale=PCG_LENGTHSCALE)
+    op = make_operator(lsh, get_bucket_fn("rect"), table_size,
+                       backend="reference")
+    idx = op.build_index(op.featurize(x))
+    mv = lambda v: op.matvec(idx, v)
+    y = jax.random.normal(jax.random.fold_in(key, 12), (x.shape[0],))
+    diag = table_diag(idx.coeff)
+
+    def plain():
+        return pcg_solve(mv, y, PCG_LAM, tol=PCG_TOL, maxiter=PCG_MAXITER)
+
+    def nystrom():
+        pre = make_preconditioner("nystrom", matvec=mv, diag=diag,
+                                  lam=PCG_LAM, rank=PCG_RANK)
+        return pcg_solve(mv, y, PCG_LAM, precond=pre, tol=PCG_TOL,
+                         maxiter=PCG_MAXITER)
+
+    def timed_solve(solve):
+        solve()                        # warmup: populate compile caches
+        t0 = time.perf_counter()
+        res = jax.block_until_ready(solve())
+        return int(res.iters), (time.perf_counter() - t0) * 1e6
+
+    row["cg_iters"], row["cg_us"] = timed_solve(plain)
+    row["pcg_iters"], row["pcg_us"] = timed_solve(nystrom)
+    row["pcg_iter_ratio"] = row["cg_iters"] / max(row["pcg_iters"], 1)
+
 
 def run(ns=(1024, 4096, 16384), d: int = 8, m: int = 16, seed: int = 0, *,
         timing_iters: int = 3, timing_stat: str = "median",
-        with_dense: bool = True, with_pallas: bool = True):
+        with_dense: bool = True, with_pallas: bool = True,
+        with_pcg: bool = True):
     """``timing_iters``/``timing_stat`` select the wall-clock protocol
     (median-of-3 for the committed trajectory; the regression gate uses
     min-of-many — see benchmarks/check_regression.py).  ``with_dense``/
-    ``with_pallas`` drop the ungated sections for a fast gate rerun; dropped
-    measurements stay in the row as explicit None + marker."""
+    ``with_pallas``/``with_pcg`` drop the ungated sections for a fast gate
+    rerun; dropped measurements stay in the row as explicit None + marker."""
     time_args = {"iters": timing_iters, "stat": timing_stat}
     f = get_bucket_fn("rect")
     on_tpu = jax.default_backend() == "tpu"
@@ -114,6 +167,18 @@ def run(ns=(1024, 4096, 16384), d: int = 8, m: int = 16, seed: int = 0, *,
             row["pallas_fused_speedup"] = None
             row["pallas_interpret"] = None
             row["pallas_skipped"] = "interpret"
+
+        if not with_pcg:
+            for k in PCG_KEYS:
+                row[k] = None
+            row["pcg_skipped"] = "disabled"
+        elif n > PCG_MAX_N:
+            for k in PCG_KEYS:
+                row[k] = None
+            row["pcg_skipped"] = "large_n"
+        else:
+            _pcg_section(key, x, m, table_size, row)
+            row["pcg_skipped"] = None
         rows.append(row)
     return rows
 
@@ -146,6 +211,14 @@ def main(json_path: str | None = None) -> None:
                 else f"{r['pallas_fused_us']:.1f}")
         print(f"{r['n']},{r['exact_us']:.1f},{r['reference_us']:.1f},"
               f"{r['fused_us']:.1f},{pal},{palf},{r['dense_us']:.1f}")
+    for r in rows:
+        if r["pcg_iters"] is not None:
+            print(f"[pcg] n={r['n']}: cg {r['cg_iters']} iters "
+                  f"({r['cg_us']:.0f}us) vs nystrom {r['pcg_iters']} iters "
+                  f"({r['pcg_us']:.0f}us incl. build) — "
+                  f"{r['pcg_iter_ratio']:.1f}x fewer iterations")
+        else:
+            print(f"[pcg] n={r['n']}: skipped ({r['pcg_skipped']})")
     e_split = _exponent(rows, "reference_us")
     e_fused = _exponent(rows, "fused_us")
     if json_path:

@@ -11,7 +11,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (GammaPDF, WLSHKernelSpec, featurize, get_bucket_fn,
+from repro.core import (GammaPDF, featurize, get_bucket_fn,
                         laplace_kernel, make_wlsh_kernel, sample_lsh_params)
 from repro.core.wlsh import exact_kernel_matrix
 

@@ -55,7 +55,8 @@ def check(baseline_path=DEFAULT_BASELINE, factor: float = DEFAULT_FACTOR,
     rows = []
     for _ in range(repeats):
         rows = bench_matvec.run(ns=ns, timing_iters=10, timing_stat="min",
-                                with_dense=False, with_pallas=False)
+                                with_dense=False, with_pallas=False,
+                                with_pcg=False)
         for row in rows:
             for key in CHECKED_KEYS:
                 if row.get(key):

@@ -19,7 +19,7 @@ from repro.core import (GammaPDF, WLSHKernelSpec, exact_krr_fit,
                         wlsh_krr_fit, wlsh_krr_predict)
 from repro.core.gp import gp_regression_dataset
 
-from .common import emit, time_fn
+from .common import emit
 
 COVS = {"sqexp": gaussian_kernel, "laplace": laplace_kernel,
         "matern52": matern52_kernel}

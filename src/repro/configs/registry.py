@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from .base import EncoderSpec, LayerSpec, ModelConfig, MoESpec, ShapeSpec, SHAPES
+from .base import EncoderSpec, ModelConfig, MoESpec
 
 from . import (command_r_plus_104b, gemma3_1b, llama4_scout_17b_a16e,
                llama_3_2_vision_90b, mixtral_8x22b, phi3_mini_3_8b, qwen3_14b,

@@ -24,7 +24,14 @@ class WLSHKRRConfig:
                                   # jnp reference elsewhere
     fused: bool = True            # one-pass slot-blocked matvec where legal
                                   # (unsharded data axes); split otherwise
-    notes: str = "paper's technique; data-sharded CG step over the mesh"
+    precond: str = "none"         # PCG preconditioner (core/precond.py):
+                                  # none | jacobi (any mesh) | nystrom
+                                  # (unsharded data axes only)
+    precond_rank: int = 128       # Nyström pivot rank (mirrors
+                                  # core.precond.DEFAULT_NYSTROM_RANK)
+    num_rhs: int = 1              # RHS block width k: batched KRR targets /
+                                  # GP posterior samples per solve
+    notes: str = "paper's technique; data-sharded PCG step over the mesh"
 
 
 CONFIG = WLSHKRRConfig()

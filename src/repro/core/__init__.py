@@ -2,10 +2,14 @@
 from .bucket_fns import BUCKET_FNS, RECT, SMOOTH, TENT, BucketFn, get_bucket_fn
 from .kernels import (WLSHKernel, WLSHKernelSpec, gaussian_kernel, laplace_kernel,
                       make_wlsh_kernel, matern52_kernel)
-from .krr import (WLSHKRRModel, cg_solve, exact_krr_fit, exact_krr_predict,
-                  model_operator, wlsh_krr_fit, wlsh_krr_predict)
+from .krr import (CGResult, PCGResult, WLSHKRRModel, cg_solve, exact_krr_fit,
+                  exact_krr_predict, model_operator, pcg_solve, wlsh_krr_fit,
+                  wlsh_krr_predict)
 from .lsh import Features, GammaPDF, LSHParams, featurize, sample_lsh_params
 from .operator import WLSHOperator, default_table_size, make_operator
+from .precond import (PRECOND_NAMES, Preconditioner, identity_precond,
+                      jacobi_precond, make_preconditioner, nystrom_precond,
+                      table_diag)
 from .rff import rff_krr_fit, rff_krr_predict
 from .wlsh import (BlockedLayout, build_blocked_layout, build_exact_index,
                    build_table_index, exact_kernel_matrix, exact_matvec,

@@ -36,6 +36,8 @@ from ..compat import shard_map
 from .bucket_fns import BucketFn
 from .lsh import GammaPDF, LSHParams, sample_lsh_params
 from .operator import WLSHOperator
+from .precond import (DEFAULT_NYSTROM_RANK, PRECOND_NAMES, jacobi_precond,
+                      nystrom_precond, table_diag)
 
 Array = jnp.ndarray
 
@@ -44,11 +46,14 @@ class KRRStepConfig(NamedTuple):
     m: int                 # total WLSH instances (sharded over 'model')
     table_size: int        # CountSketch table slots (power of two)
     lam: float             # ridge regularizer
-    cg_iters: int          # fixed CG iteration count fused into the step
+    cg_iters: int          # fixed PCG iteration count fused into the step
     data_axes: tuple[str, ...] = ("data",)
     model_axis: str = "model"
     backend: str = "auto"  # operator backend inside each shard
     fused: bool = True     # one-pass local matvec when the data axes are size 1
+    precond: str = "none"  # 'none' | 'jacobi' (any mesh) | 'nystrom'
+                           # (unsharded data axes only — see make_krr_step)
+    precond_rank: int = DEFAULT_NYSTROM_RANK
 
 
 def _shard_operator(cfg: KRRStepConfig, f: BucketFn,
@@ -74,9 +79,12 @@ def make_distributed_matvec(cfg: KRRStepConfig, op: WLSHOperator, *,
 
     A thin psum wrapper around the operator's local scatter/readout — must be
     called inside shard_map with an index built from the local featurization
-    (m_loc, n_loc) and a (n_loc,) beta shard.  ``n_data_shards`` is the
-    product of the mesh's data-axis sizes (``_data_shard_count``) — required
-    so a forgotten kwarg cannot silently disable the fused path.
+    (m_loc, n_loc) and a (n_loc,) or (n_loc, k) beta shard (a RHS block
+    rides one scatter/psum/readout round trip: the psum'd object grows to
+    (m_loc, B, k) but the collective count per iteration is unchanged).
+    ``n_data_shards`` is the product of the mesh's data-axis sizes
+    (``_data_shard_count``) — required so a forgotten kwarg cannot silently
+    disable the fused path.
 
     The split loads → psum → readout sandwich is required whenever the data
     axes are sharded: the table psum is the scatter→gather barrier, so the
@@ -98,44 +106,103 @@ def make_distributed_matvec(cfg: KRRStepConfig, op: WLSHOperator, *,
 
 
 def _sharded_dot(a: Array, b: Array, axes: Sequence[str]) -> Array:
-    return jax.lax.psum(jnp.vdot(a, b), axes)
+    """Column-wise sharded inner product: scalar for (n_loc,) operands,
+    (k,) for (n_loc, k) RHS blocks — one scalar/vector psum either way."""
+    return jax.lax.psum(jnp.sum(a * b, axis=0), axes)
 
 
-def cg_iterations(matvec, y_local: Array, cfg: KRRStepConfig):
-    """Fixed-iteration CG on (K~ + lam I) beta = y, vectors data-sharded.
-    Returns (beta_local, resnorm)."""
+def _bcast(c: Array, v: Array) -> Array:
+    """Broadcast a per-column coefficient over v (n,) or (n, k)."""
+    return c * v if v.ndim == 1 else c[None, :] * v
+
+
+def cg_iterations(matvec, y_local: Array, cfg: KRRStepConfig,
+                  precond_apply=None):
+    """Fixed-iteration PCG on (K~ + lam I) beta = y, vectors data-sharded.
+    ``y_local`` is (n_loc,) or an (n_loc, k) RHS block — the recurrences run
+    column-wise so every column follows its own single-RHS trajectory while
+    sharing each matvec and collective.  ``precond_apply`` (z = P⁻¹ r on
+    local shards, e.g. the Jacobi diagonal from ``make_krr_step``) defaults
+    to identity, which reduces exactly to plain CG.  Returns
+    (beta_local, resnorm) with resnorm per column for a block."""
     lam = jnp.asarray(cfg.lam, jnp.float32)
+    identity = precond_apply is None
+    psolve = (lambda r: r) if identity else precond_apply
 
     def amv(v):
         return matvec(v) + lam * v
 
+    def residual_dots(r, z):
+        # with the identity preconditioner rho == ||r||², so plain CG keeps
+        # its two psums per iteration (no third collective sneaks in)
+        rs = _sharded_dot(r, r, cfg.data_axes)
+        return (rs, rs) if identity else \
+            (_sharded_dot(r, z, cfg.data_axes), rs)
+
     x = jnp.zeros_like(y_local)
     r = y_local - amv(x)
-    p = r
-    rs = _sharded_dot(r, r, cfg.data_axes)
+    z = psolve(r)
+    p = z
+    rho, rs = residual_dots(r, z)
 
     def body(_, state):
-        x, r, p, rs = state
+        x, r, p, rho, rs = state
         ap = amv(p)
-        alpha = rs / jnp.maximum(_sharded_dot(p, ap, cfg.data_axes), 1e-30)
-        x = x + alpha * p
-        r = r - alpha * ap
-        rs_new = _sharded_dot(r, r, cfg.data_axes)
-        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
-        return x, r, p, rs_new
+        alpha = rho / jnp.maximum(_sharded_dot(p, ap, cfg.data_axes), 1e-30)
+        x = x + _bcast(alpha, p)
+        r = r - _bcast(alpha, ap)
+        z = psolve(r)
+        rho_new, rs_new = residual_dots(r, z)
+        p = z + _bcast(rho_new / jnp.maximum(rho, 1e-30), p)
+        return x, r, p, rho_new, rs_new
 
-    x, r, p, rs = jax.lax.fori_loop(0, cfg.cg_iters, body, (x, r, p, rs))
+    x, r, p, rho, rs = jax.lax.fori_loop(0, cfg.cg_iters, body,
+                                         (x, r, p, rho, rs))
     return x, jnp.sqrt(rs)
+
+
+def _shard_preconditioner(cfg: KRRStepConfig, mv, idx):
+    """Build cfg.precond inside shard_map; returns apply(r_local) or None.
+
+    * jacobi — diag(K̃)_i = mean_s coeff²[s, i] is per-point, so the local
+      column sums only need the model-axis psum; the apply is elementwise on
+      the local shard (no extra collectives per iteration).
+    * nystrom — needs K̃-columns for its pivot block, i.e. a global matvec
+      with global one-hot columns.  With unsharded data axes the local index
+      IS global (only the model psum participates), so the single-host
+      factorization from core/precond.py traces directly; with sharded data
+      axes pivot selection/column exchange would need a gather we don't
+      ship yet, so make_krr_step rejects that combination up front.
+    """
+    if cfg.precond in ("none", None):
+        return None
+    diag = jax.lax.psum(table_diag(idx.coeff, average=False),
+                        cfg.model_axis) / cfg.m
+    if cfg.precond == "jacobi":
+        return jacobi_precond(diag, cfg.lam).apply
+    if cfg.precond == "nystrom":
+        pre = nystrom_precond(lambda v: mv(idx, v), diag, cfg.lam,
+                              cfg.precond_rank)
+        return pre.apply
+    raise ValueError(f"unknown preconditioner {cfg.precond!r}; "
+                     f"expected one of {PRECOND_NAMES}")
 
 
 def make_krr_step(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
     """Builds the jit-able distributed KRR training step.
 
     step(x, y, lsh) -> (beta, resnorm, tables)
-      x (n, d) sharded P(data_axes, None); y (n,) sharded P(data_axes)
+      x (n, d) sharded P(data_axes, None); y sharded P(data_axes) — (n,) for
+      one target or (n, k) for a RHS block (batched KRR / GP posterior
+      samples; the k columns share every matvec and collective)
       lsh: LSHParams with leading m dim sharded P(model_axis)
-    The returned beta is sharded like y; tables (m, B) are the prediction
-    data structure (model-sharded, data-replicated).
+    The returned beta is sharded like y; tables (m, B[, k]) are the
+    prediction data structure (model-sharded, data-replicated).
+
+    ``cfg.precond`` runs the solve as PCG: 'jacobi' works on any mesh (its
+    diagonal is a model-axis psum; the apply is shard-local); 'nystrom'
+    requires unsharded data axes — its pivot columns come from global
+    matvecs — and raises otherwise.
     """
     data_spec = P(cfg.data_axes)
     in_specs = (P(cfg.data_axes, None), data_spec,
@@ -144,6 +211,10 @@ def make_krr_step(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
     out_specs = (data_spec, P(), P(cfg.model_axis, None))
     n_data = _data_shard_count(mesh, cfg)
     local_fused = cfg.fused and n_data == 1
+    if cfg.precond == "nystrom" and n_data != 1:
+        raise ValueError(
+            "precond='nystrom' needs unsharded data axes (its pivot columns "
+            "are global K~ matvecs); use 'jacobi' on data-sharded meshes")
 
     @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs)
@@ -153,7 +224,9 @@ def make_krr_step(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
         # sharded data axes stay on the split (psum-able) index
         idx = op.build_index(op.featurize(x_local), blocked=local_fused)
         mv = make_distributed_matvec(cfg, op, n_data_shards=n_data)
-        beta_local, resnorm = cg_iterations(lambda v: mv(idx, v), y_local, cfg)
+        pre = _shard_preconditioner(cfg, mv, idx)
+        beta_local, resnorm = cg_iterations(lambda v: mv(idx, v), y_local,
+                                            cfg, precond_apply=pre)
         # final prediction tables for the solved beta
         tables = jax.lax.psum(op.loads(idx, beta_local), cfg.data_axes)
         return beta_local, resnorm, tables
@@ -286,8 +359,18 @@ def _hashjoin_matvec(rt: _Routing, coeff: Array, m_total: int,
 def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
                            cap_factor: float = 2.0,
                            payload_dtype=jnp.float32):
-    """Hash-join variant of make_krr_step (same signature/semantics; returns
-    (beta, resnorm, table_shard) with the table left SHARDED over data)."""
+    """Hash-join variant of make_krr_step (same signature; returns
+    (beta, resnorm, table_shard) with the table left SHARDED over data).
+
+    Single-RHS, unpreconditioned only: its scatter routes one contribution
+    stream per entry, and a silently-dropped cfg.precond would leave the
+    fixed cg_iters under-converged — so unsupported configs are rejected
+    up front rather than ignored.
+    """
+    if cfg.precond not in ("none", None):
+        raise ValueError("make_krr_step_hashjoin does not support "
+                         "preconditioning; use make_krr_step or "
+                         "precond='none'")
     n_shards = 1
     for a in cfg.data_axes:
         n_shards *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
@@ -300,6 +383,9 @@ def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
     @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs)
     def step(x_local, y_local, lsh_local):
+        if y_local.ndim != 1:
+            raise ValueError("hash-join step is single-RHS; use "
+                             "make_krr_step for (n, k) target blocks")
         op = _shard_operator(cfg, f, lsh_local)
         idx = op.build_index(op.featurize(x_local), blocked=False)
         m_loc = idx.slot.shape[0]

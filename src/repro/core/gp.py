@@ -1,4 +1,14 @@
-"""Gaussian-process sampling utilities for the paper's Table-1 experiment."""
+"""Gaussian-process sampling utilities for the paper's Table-1 experiment,
+plus batched posterior sampling through the multi-RHS KRR solver.
+
+Posterior samples use pathwise conditioning (Matheron's rule):
+
+    f_post = f_prior + K(·, X) (K + σ²I)⁻¹ (y − f_prior(X) − ε)
+
+so drawing S samples plus the posterior mean needs S+1 solves against the
+SAME operator — exactly the shape the multi-RHS block-CG solve amortizes
+(``wlsh_krr_fit`` with an (n, S+1) target block; one index build, one
+matvec per iteration for all columns)."""
 from __future__ import annotations
 
 import jax
@@ -29,3 +39,34 @@ def gp_regression_dataset(key: jax.Array, kernel_fn, *, n: int, d: int,
     f = sample_gp(kf, x, kernel_fn)
     y = f + noise * jax.random.normal(kn, (n,))
     return x, y, f
+
+
+def sample_gp_batch(key: jax.Array, x: Array, kernel_fn, n_samples: int,
+                    jitter: float = 1e-6) -> Array:
+    """(n, n_samples) independent GP(0, k) sample paths at the rows of x —
+    one eigendecomposition shared by all draws."""
+    k = kernel_fn(x, x).astype(jnp.float64 if jax.config.jax_enable_x64
+                               else jnp.float32)
+    evals, evecs = jnp.linalg.eigh(k)
+    root = evecs * jnp.sqrt(jnp.maximum(evals, jitter))[None, :]
+    eps = jax.random.normal(key, (x.shape[0], n_samples), k.dtype)
+    return (root @ eps).astype(jnp.float32)
+
+
+def gp_posterior_rhs(key: jax.Array, x_all: Array, y: Array, kernel_fn, *,
+                     n_train: int, n_samples: int,
+                     noise: float) -> tuple[Array, Array]:
+    """Build the (n_train, 1 + n_samples) RHS block for pathwise posterior
+    sampling.  Column 0 is y (its solve gives the posterior mean); column j
+    is ``y - f_j(X) - eps_j`` for a joint train+test prior draw f_j and
+    observation noise eps_j ~ N(0, noise²).  Returns (rhs, f_prior_all)
+    where ``f_prior_all`` is (n_all, n_samples) — the posterior sample at
+    any of the jointly-sampled points is ``f_j + K(·, X) v_j`` with v_j the
+    solve of column j (e.g. via wlsh_krr_predict on a model fit with this
+    block)."""
+    kf, kn = jax.random.split(key)
+    f_all = sample_gp_batch(kf, x_all, kernel_fn, n_samples)   # (n_all, S)
+    eps = noise * jax.random.normal(kn, (n_train, n_samples))
+    rhs = jnp.concatenate([y[:, None],
+                           y[:, None] - f_all[:n_train] - eps], axis=1)
+    return rhs, f_all

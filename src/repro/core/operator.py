@@ -103,7 +103,8 @@ class WLSHOperator(NamedTuple):
     # -- CountSketch scatter / gather ---------------------------------------
 
     def loads(self, index: TableIndex, beta: Array) -> Array:
-        """Bucket-load tables (m, B) for beta — the psum-able object."""
+        """Bucket-load tables for beta — the psum-able object.  (m, B) for a
+        (n,) beta; (m, B, k) for a (n, k) RHS block (columns independent)."""
         if self.backend == "pallas":
             from ..kernels.binning import bin_loads_op
             return bin_loads_op(index, beta, interpret=self.interpret)
@@ -124,7 +125,12 @@ class WLSHOperator(NamedTuple):
 
     def matvec(self, index: Index, beta: Array, *,
                average: bool = True) -> Array:
-        """K~ beta in O(n m).
+        """K~ beta in O(n m); ``beta`` is (n,) or an (n, k) RHS block.
+
+        The k columns of a block share the index, the slot sort and (on the
+        fused paths) every one-hot tile product / segment id — a block-CG
+        solve or batched GP-posterior fit costs far less than k single
+        solves (see core/krr.py:pcg_solve).
 
         Table mode dispatches on the index: with a slot-blocked layout (and
         ``fused`` set) the scatter and gather run in one pass — a single
@@ -158,7 +164,9 @@ class WLSHOperator(NamedTuple):
 
         With ``batch_size`` the test set is processed in fixed-size blocks via
         ``lax.map`` — peak memory is O(batch_size * m) regardless of n_test,
-        which is what lets multi-million-point inference stream."""
+        which is what lets multi-million-point inference stream.  Tables may
+        be (m, B) -> (n_test,) predictions, or (m, B, k) -> (n_test, k) (one
+        streamed readout serves all k fitted columns)."""
         n = x_test.shape[0]
         if batch_size is None or batch_size >= n:
             feats = self.featurize(x_test)
@@ -173,7 +181,7 @@ class WLSHOperator(NamedTuple):
             return self.readout(self.build_index(feats, blocked=False), tables)
 
         out = jax.lax.map(one_block, blocks)
-        return out.reshape(-1)[:n]
+        return out.reshape((-1,) + out.shape[2:])[:n]
 
 
 def make_operator(lsh: LSHParams, bucket: BucketFn, table_size: int, *,

@@ -1,0 +1,164 @@
+"""Preconditioners for the WLSH-KRR PCG solve (DESIGN.md §5).
+
+The fused matvec (PR 2) made each CG iteration cheap, so iteration *count*
+is the dominant solve cost — exactly the regime Avron et al. (1804.09893)
+analyze, where preconditioning decides end-to-end KRR time.  Two
+preconditioners live behind one interface:
+
+* **jacobi** — the exact diagonal of the CountSketch operator.  Scattering
+  e_i puts ``coeff[s, i]`` in slot ``slot[s, i]`` and the readout at i
+  multiplies by ``coeff[s, i]`` again, so ``diag(K̃)_i = mean_s coeff²[s,i]``
+  — a column sum over the hoisted coefficients of the existing TableIndex;
+  the (m, B) table is never materialized.  O(mn) once, O(n) per apply.
+
+* **nystrom** — a rank-r pivoted Nyström approximation of the WLSH gram:
+  pivot columns ``C = K̃[:, piv]`` come from ONE multi-RHS matvec on r
+  one-hot columns (the same batched matvec CG uses), pivots are the r
+  largest diagonal entries.  With ``A = C L⁻ᵀ`` (L = chol of the pivot
+  block) the preconditioner is P = A Aᵀ + λI ⪯ K̃ + λI, inverted by
+  Woodbury:
+
+      P⁻¹ r = (r − A u) / λ,   (λ I_r + AᵀA) u = Aᵀ r
+
+  where u comes from two small (r, r) triangular solves against the cached
+  Cholesky factor of λI + AᵀA.  Build cost is one k=r matvec + O(n r²);
+  each apply is two (n, r) matmuls + the triangular solves — negligible
+  next to a matvec.  Because A Aᵀ is the exact Schur-complement part of K̃
+  on the pivot block, the preconditioned spectrum clusters at 1 wherever
+  the gram's tail is captured, which is what collapses the iteration count
+  on ill-conditioned (small-λ) problems.
+
+``Preconditioner.apply`` takes r of shape (n,) or (n, k) — the whole stack
+is RHS-blocked, so preconditioned block-CG applies P⁻¹ to all columns at
+once.  Everything is pure jnp: builders and applies trace under jit and
+inside shard_map (the distributed step builds jacobi from its local index
+plus a model-axis psum — see core/distributed.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+PRECOND_NAMES = ("none", "jacobi", "nystrom")
+
+# shared Nyström rank default across every surface (wlsh_krr_fit,
+# KRRStepConfig, CLI flags, the committed benchmark): the test-pinned ≥3x
+# iteration reduction is measured at this rank
+DEFAULT_NYSTROM_RANK = 128
+
+
+class Preconditioner(NamedTuple):
+    """z = apply(r) ≈ (K̃ + λI)⁻¹ r, for r of shape (n,) or (n, k)."""
+
+    name: str
+    apply: Callable[[Array], Array]
+
+
+def _colwise_div(r: Array, d: Array) -> Array:
+    return r / d if r.ndim == 1 else r / d[:, None]
+
+
+def identity_precond() -> Preconditioner:
+    return Preconditioner(name="none", apply=lambda r: r)
+
+
+def table_diag(coeff: Array, *, average: bool = True) -> Array:
+    """diag(K̃) from a TableIndex's hoisted coeff (m, n): mean_s coeff².
+    ``average=False`` gives the instance sum (the distributed path psums the
+    local sums over the model axis and divides by the global m)."""
+    sq = coeff * coeff
+    return jnp.mean(sq, axis=0) if average else jnp.sum(sq, axis=0)
+
+
+def jacobi_precond(diag: Array, lam: float) -> Preconditioner:
+    """Diagonal (Jacobi) preconditioner for (K̃ + λI) from diag(K̃)."""
+    d = diag + jnp.asarray(lam, diag.dtype)
+    return Preconditioner(name="jacobi", apply=lambda r: _colwise_div(r, d))
+
+
+class NystromFactors(NamedTuple):
+    """Cached factorization P = A Aᵀ + λI of the rank-r pivoted Nyström
+    approximation (exposed for tests; ``apply`` closes over it)."""
+
+    pivots: Array   # (r,) int32 — pivot point indices (largest diag first)
+    a: Array        # (n, r) — C W with W W ᵀ = K̃[piv, piv]⁺ (whitened columns)
+    chol_small: Array  # (r, r) lower Cholesky of λ I_r + AᵀA
+    lam: Array      # scalar
+
+
+def nystrom_factors(matvec: Callable[[Array], Array], diag: Array,
+                    lam: float, rank: int, *,
+                    jitter: float = 1e-6) -> NystromFactors:
+    """One multi-RHS matvec + two small factorizations; O(n r²) flops.
+
+    The pivot block is whitened through its eigendecomposition with a
+    relative eigenvalue floor rather than a Cholesky: smooth kernels make
+    K̃[piv, piv] numerically rank-deficient in f32, where a jittered chol
+    either NaNs or amplifies noise past λ (directions below the floor are
+    dropped — the preconditioner just loses the rank they carried).  λI +
+    AᵀA is then safely SPD, and its Cholesky is what the two triangular
+    solves in ``apply`` run against.
+    """
+    n = diag.shape[0]
+    r = min(int(rank), n)
+    _, pivots = jax.lax.top_k(diag, r)
+    pivots = pivots.astype(jnp.int32)
+    onehot = jnp.zeros((n, r), jnp.float32).at[
+        pivots, jnp.arange(r, dtype=jnp.int32)].set(1.0)
+    cols = matvec(onehot)                                    # (n, r) = K̃[:, piv]
+    small = cols[pivots]                                     # (r, r) pivot block
+    small = 0.5 * (small + small.T)
+    evals, evecs = jnp.linalg.eigh(small)
+    floor = jnp.maximum(jnp.max(evals), 0.0) * jitter + 1e-30
+    inv_sqrt = jnp.where(evals > floor, 1.0 / jnp.sqrt(
+        jnp.maximum(evals, floor)), 0.0)
+    a = cols @ (evecs * inv_sqrt[None, :])                   # (n, r)
+    lam_arr = jnp.asarray(lam, a.dtype)
+    eye = jnp.eye(r, dtype=a.dtype)
+    chol_small = jnp.linalg.cholesky(lam_arr * eye + a.T @ a)
+    return NystromFactors(pivots=pivots, a=a, chol_small=chol_small,
+                          lam=lam_arr)
+
+
+def nystrom_precond(matvec: Callable[[Array], Array], diag: Array,
+                    lam: float, rank: int, *,
+                    jitter: float = 1e-6) -> Preconditioner:
+    """Randomized/pivoted Nyström preconditioner for (K̃ + λI)."""
+    fac = nystrom_factors(matvec, diag, lam, rank, jitter=jitter)
+
+    def apply(rhs: Array) -> Array:
+        vec = rhs.ndim == 1
+        rr = rhs[:, None] if vec else rhs
+        t = fac.a.T @ rr                                     # (r, k)
+        u = jax.scipy.linalg.solve_triangular(
+            fac.chol_small.T,
+            jax.scipy.linalg.solve_triangular(fac.chol_small, t, lower=True),
+            lower=False)
+        z = (rr - fac.a @ u) / fac.lam
+        return z[:, 0] if vec else z
+
+    return Preconditioner(name="nystrom", apply=apply)
+
+
+def make_preconditioner(name: str, *, matvec=None, diag=None,
+                        lam: float = 0.0, rank: int = DEFAULT_NYSTROM_RANK,
+                        jitter: float = 1e-6) -> Preconditioner:
+    """Factory keyed on the CLI names: 'none' | 'jacobi' | 'nystrom'.
+    'jacobi' needs ``diag``; 'nystrom' needs ``diag`` (pivot scores) and
+    ``matvec`` (the K̃ operator, multi-RHS capable)."""
+    if name == "none" or name is None:
+        return identity_precond()
+    if name == "jacobi":
+        if diag is None:
+            raise ValueError("jacobi preconditioner needs diag")
+        return jacobi_precond(diag, lam)
+    if name == "nystrom":
+        if diag is None or matvec is None:
+            raise ValueError("nystrom preconditioner needs diag and matvec")
+        return nystrom_precond(matvec, diag, lam, rank, jitter=jitter)
+    raise ValueError(f"unknown preconditioner {name!r}; "
+                     f"expected one of {PRECOND_NAMES}")

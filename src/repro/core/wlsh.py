@@ -57,15 +57,22 @@ def build_exact_index(feats: Features) -> ExactIndex:
     return ExactIndex(perm=perm, seg_id=seg_id, weight=feats.weight)
 
 
+def _colwise(coeff: Array, v: Array) -> Array:
+    """coeff ⊙ v for v of shape (n,) or (n, k) (coeff broadcast over RHS
+    columns).  The single place the multi-RHS axis convention lives."""
+    return coeff * v if v.ndim == 1 else coeff[:, None] * v
+
+
 def exact_matvec(index: ExactIndex, beta: Array) -> Array:
-    """(1/m) sum_s K̃^s beta — O(m n) (after the one-off O(m n log n) sort)."""
+    """(1/m) sum_s K̃^s beta — O(m n) (after the one-off O(m n log n) sort).
+    ``beta`` is (n,) or (n, k); k right-hand sides share the sort."""
     n = beta.shape[0]
 
     def one(perm, seg_id, weight):
-        contrib = (beta * weight)[perm]
+        contrib = _colwise(weight, beta)[perm]
         loads = jax.ops.segment_sum(contrib, seg_id, num_segments=n)
-        out_sorted = loads[seg_id] * weight[perm]
-        return jnp.zeros_like(beta).at[perm].set(out_sorted)
+        out_sorted = _colwise(weight[perm], loads[seg_id])
+        return jnp.zeros_like(contrib).at[perm].set(out_sorted)
 
     outs = jax.vmap(one)(index.perm, index.seg_id, index.weight)
     return jnp.mean(outs, axis=0)
@@ -254,10 +261,11 @@ def build_blocked_layout(slot: Array, coeff: Array, table_size: int, *,
 
 
 def table_loads(index: TableIndex, beta: Array) -> Array:
-    """Bucket-load tables for all m instances: (m, B)."""
-    contrib = beta[None, :] * index.coeff  # (m, n)
+    """Bucket-load tables for all m instances: (m, B) for beta (n,), or
+    (m, B, k) for a (n, k) RHS block (one scatter, k stacked columns)."""
+    contrib = jax.vmap(_colwise, in_axes=(0, None))(index.coeff, beta)
     m = index.slot.shape[0]
-    tables = jnp.zeros((m, index.table_size), contrib.dtype)
+    tables = jnp.zeros((m, index.table_size) + beta.shape[1:], contrib.dtype)
     rows = jnp.arange(m, dtype=jnp.int32)[:, None]
     return tables.at[rows, index.slot].add(contrib)
 
@@ -266,9 +274,10 @@ def table_readout(index: TableIndex, tables: Array, *,
                   average: bool = True) -> Array:
     """Per-point readout of the (possibly psum-merged) tables: (1/m) sum_s
     when ``average``, else the plain instance sum (distributed shards sum
-    locally and divide by the global m after their model-axis psum)."""
+    locally and divide by the global m after their model-axis psum).
+    ``tables`` is (m, B) -> (n,) out, or (m, B, k) -> (n, k)."""
     rows = jnp.arange(index.slot.shape[0], dtype=jnp.int32)[:, None]
-    vals = tables[rows, index.slot] * index.coeff
+    vals = jax.vmap(_colwise)(index.coeff, tables[rows, index.slot])
     return jnp.mean(vals, axis=0) if average else jnp.sum(vals, axis=0)
 
 
@@ -290,6 +299,10 @@ def table_matvec_fused(index: TableIndex, beta: Array, *,
     original point order, which makes this bitwise-identical to
     ``table_readout(table_loads(beta))`` (both lower to sequential
     scatter-adds over the same per-slot operand order).
+
+    ``beta`` is (n,) or (n, k): a RHS block rides the same permutation and
+    segment ids — one segment-sum over (n, k) rows instead of k solves'
+    worth of gathers, which is what amortizes multi-RHS CG.
     """
     lay = index.blocked
     if lay is None or lay.perm is None:
@@ -299,9 +312,9 @@ def table_matvec_fused(index: TableIndex, beta: Array, *,
     n = beta.shape[0]
 
     def one(perm, seg_id, coeff_sorted, seg_pt, coeff):
-        loads = jax.ops.segment_sum(beta[perm] * coeff_sorted, seg_id,
+        loads = jax.ops.segment_sum(_colwise(coeff_sorted, beta[perm]), seg_id,
                                     num_segments=n)
-        return loads[seg_pt] * coeff
+        return _colwise(coeff, loads[seg_pt])
 
     outs = jax.vmap(one)(lay.perm, lay.seg_id, lay.coeff_sorted, lay.seg_pt,
                          index.coeff)

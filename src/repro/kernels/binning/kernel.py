@@ -137,6 +137,41 @@ def _fused_body(v_block_ref, v_tile_ref, v_phase_ref, slot_ref, coeff_ref,
             preferred_element_type=jnp.float32)
 
 
+def _fused_body_mrhs(v_block_ref, v_tile_ref, v_phase_ref, slot_ref, coeff_ref,
+                     beta_ref, out_ref, table_ref):
+    """Multi-RHS variant of ``_fused_body``: the k RHS columns share every
+    one-hot matrix, so the tile products widen from (1, bn)×(bn, bt) to
+    (k, bn)×(bn, bt) and the VMEM table tile to (k, bt) — same visit
+    schedule, same HBM traffic for slots/coeffs, k× the MXU work."""
+    i, j = pl.program_id(0), pl.program_id(1)
+    tile = v_tile_ref[i, j]
+    phase = v_phase_ref[i, j]
+    prev_tile = v_tile_ref[i, jnp.maximum(j - 1, 0)]
+    new_tile = (j == 0) | (tile != prev_tile)
+
+    @pl.when(new_tile)
+    def _zero():
+        table_ref[...] = jnp.zeros_like(table_ref)
+
+    bt = table_ref.shape[1]
+    slot = slot_ref[...][0]                                  # (bn,) int32
+    col = jax.lax.broadcasted_iota(jnp.int32, (slot.shape[0], bt), 1)
+    onehot = (slot[:, None] - tile * bt == col).astype(jnp.float32)
+
+    @pl.when(phase == 0)
+    def _scatter():
+        contrib = coeff_ref[...] * beta_ref[...][0]          # (k, bn)
+        table_ref[...] += jax.lax.dot_general(
+            contrib, onehot, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(phase == 1)
+    def _gather():
+        out_ref[...] = (coeff_ref[...] * jax.lax.dot_general(
+            table_ref[...], onehot, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32))[None]
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "block_t", "interpret"))
 def bin_fused_matvec_pallas(v_block, v_tile, v_phase, slot_lay, coeff_lay,
                             beta_lay, *, block_n: int, block_t: int,
@@ -145,28 +180,40 @@ def bin_fused_matvec_pallas(v_block, v_tile, v_phase, slot_lay, coeff_lay,
 
     v_block/v_tile/v_phase (m, V) int32 — the per-instance visit schedule
     (scalar-prefetched; the index maps select layout block ``v_block[i, j]``
-    at visit j).  slot_lay/coeff_lay/beta_lay (m, L) — the blocked layout
-    arrays with L a multiple of ``block_n``.  Returns out_lay (m, L) f32 with
-    ``out_lay[p] = coeff_lay[p] * table[slot_lay[p]]`` at every real layout
-    position (padding positions have coeff 0).  The (m, B) table exists only
-    as a (1, block_t) VMEM scratch tile.
+    at visit j).  slot_lay/coeff_lay (m, L) — the blocked layout arrays with
+    L a multiple of ``block_n``.  ``beta_lay`` is (m, L) for one RHS or
+    (m, k, L) for a k-column RHS block laid out along the same permutation.
+    Returns out_lay of ``beta_lay``'s shape, f32, with
+    ``out_lay[..., p] = coeff_lay[p] * table[slot_lay[p]]`` at every real
+    layout position (padding positions have coeff 0).  The (m, B[, k]) table
+    exists only as a (1|k, block_t) VMEM scratch tile — the k columns ride
+    the same one-hot products, so the extra HBM traffic over single-RHS is
+    just beta/out themselves.
     """
     m, layout_len = slot_lay.shape
     if layout_len % block_n:
         raise ValueError("layout length must be a multiple of block_n")
     n_vis = v_block.shape[1]
     lay_spec = pl.BlockSpec((1, block_n), lambda i, j, vb, vt, vp: (i, vb[i, j]))
+    if beta_lay.ndim == 2:
+        beta_spec, scratch_rows = lay_spec, 1
+        body = _fused_body
+    else:
+        k = beta_lay.shape[1]
+        beta_spec = pl.BlockSpec((1, k, block_n),
+                                 lambda i, j, vb, vt, vp: (i, 0, vb[i, j]))
+        scratch_rows, body = k, _fused_body_mrhs
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(m, n_vis),
-        in_specs=[lay_spec, lay_spec, lay_spec],
-        out_specs=lay_spec,
-        scratch_shapes=[pltpu.VMEM((1, block_t), jnp.float32)],
+        in_specs=[lay_spec, lay_spec, beta_spec],
+        out_specs=beta_spec,
+        scratch_shapes=[pltpu.VMEM((scratch_rows, block_t), jnp.float32)],
     )
     return pl.pallas_call(
-        _fused_body,
+        body,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m, layout_len), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct(beta_lay.shape, jnp.float32),
         interpret=interpret,
     )(v_block, v_tile, v_phase, slot_lay, coeff_lay, beta_lay)
 

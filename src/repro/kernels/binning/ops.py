@@ -53,7 +53,15 @@ def _block_sizes(n: int, table_size: int, block_n: int, block_t: int):
 def bin_loads_op(index: TableIndex, beta, *, use_kernel: bool = True,
                  interpret: bool | None = None, block_n: int = BLOCK_N,
                  block_t: int = BLOCK_T):
-    """Kernel-backed ``table_loads``: (m, B) bucket-load tables for beta."""
+    """Kernel-backed ``table_loads``: (m, B) bucket-load tables for beta (n,),
+    or (m, B, k) for a (n, k) RHS block (the scatter kernel runs per column —
+    the split path stays psum-able; only the fused matvec amortizes k)."""
+    if beta.ndim == 2:
+        cols = [bin_loads_op(index, beta[:, j], use_kernel=use_kernel,
+                             interpret=interpret, block_n=block_n,
+                             block_t=block_t)
+                for j in range(beta.shape[1])]
+        return jnp.stack(cols, axis=-1)
     contrib = (beta[None, :] * index.coeff).astype(jnp.float32)
     if not use_kernel:
         return bin_scatter_ref(index.slot, contrib, table_size=index.table_size)
@@ -75,7 +83,14 @@ def bin_readout_op(index: TableIndex, tables, *, average: bool = True,
                    block_n: int = BLOCK_N, block_t: int = BLOCK_T):
     """Kernel-backed ``table_readout``: per-point loads combined over the m
     instances (mean when ``average``, else sum — the distributed path sums
-    locally and divides by the global m after its psum)."""
+    locally and divides by the global m after its psum).  ``tables`` is
+    (m, B) -> (n,) out, or (m, B, k) -> (n, k) (gather kernel per column)."""
+    if tables.ndim == 3:
+        cols = [bin_readout_op(index, tables[..., j], average=average,
+                               use_kernel=use_kernel, interpret=interpret,
+                               block_n=block_n, block_t=block_t)
+                for j in range(tables.shape[-1])]
+        return jnp.stack(cols, axis=-1)
     if not use_kernel:
         vals = bin_gather_ref(index.slot, tables)
     else:
@@ -111,6 +126,10 @@ def bin_fused_matvec_op(index: TableIndex, beta, *, average: bool = True,
     per-iteration jnp work is one gather (``beta`` into the sorted layout)
     and one gather back (``inv_pos``) — everything between runs inside a
     single Pallas kernel whose table tile never leaves VMEM.
+
+    ``beta`` is (n,) or (n, k): a RHS block is laid out as (m, k, L) along
+    the same slot permutation and the k columns share every one-hot tile
+    product inside the kernel (see ``bin_fused_matvec_pallas``).
     """
     lay = index.blocked
     if lay is None or lay.src is None:
@@ -127,13 +146,20 @@ def bin_fused_matvec_op(index: TableIndex, beta, *, average: bool = True,
     if interpret is None:
         interpret = default_interpret()
     m = index.slot.shape[0]
-    beta_pad = jnp.concatenate([jnp.asarray(beta, jnp.float32),
-                                jnp.zeros((1,), jnp.float32)])
-    beta_lay = beta_pad[lay.src]                              # (m, L)
+    multi = beta.ndim == 2
+    pad = jnp.zeros((1,) + beta.shape[1:], jnp.float32)
+    beta_pad = jnp.concatenate([jnp.asarray(beta, jnp.float32), pad])
+    beta_lay = beta_pad[lay.src]               # (m, L) | (m, L, k)
+    if multi:
+        beta_lay = jnp.swapaxes(beta_lay, 1, 2)              # (m, k, L)
     out_lay = bin_fused_matvec_pallas(
         lay.v_block, lay.v_tile, lay.v_phase, lay.slot_lay, lay.coeff_lay,
         beta_lay, block_n=lay.block_n, block_t=lay.block_t,
         interpret=interpret)
     rows = jnp.arange(m, dtype=jnp.int32)[:, None]
-    vals = out_lay[rows, lay.inv_pos]          # (m, n), coeff already applied
+    if multi:
+        # (m, k, L) -> (m, n, k), coeff already applied inside the kernel
+        vals = jnp.swapaxes(out_lay, 1, 2)[rows, lay.inv_pos]
+    else:
+        vals = out_lay[rows, lay.inv_pos]      # (m, n)
     return jnp.mean(vals, axis=0) if average else jnp.sum(vals, axis=0)

@@ -1,8 +1,6 @@
 """Public op: GQA flash decode with (B, H, D) <-> (B, KV, G, D) plumbing."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from .kernel import flash_decode_pallas
 from .ref import flash_decode_ref
 

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 
-from ..configs.base import ModelConfig, ShapeSpec, SHAPES
+from ..configs.base import ModelConfig, ShapeSpec
 from ..models import model
 from ..models.params import ParamSpec
 from ..sharding import spec_for, tree_shardings

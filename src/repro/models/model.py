@@ -14,7 +14,6 @@ mamba2 / rwkv6 slots.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import SSMSpec
 from ..sharding import constrain
 from .params import ParamSpec
 

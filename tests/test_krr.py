@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (GammaPDF, WLSHKernelSpec, cg_solve, exact_krr_fit,
+from repro.core import (WLSHKernelSpec, cg_solve, exact_krr_fit,
                         exact_krr_predict, gaussian_kernel, get_bucket_fn,
                         laplace_kernel, rff_krr_fit, rff_krr_predict,
                         wlsh_krr_fit, wlsh_krr_predict)

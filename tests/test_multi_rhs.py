@@ -1,0 +1,171 @@
+"""Multi-RHS matvec + block-PCG (tentpole of the solver PR).
+
+Pins the acceptance criteria: k=1 bitwise-matches the 1-D path on both
+backends, multi-RHS parity with per-column single solves (including k that
+divides no tile size and odd n), non-contiguous converged-column deflation
+in ``pcg_solve``, batched KRR fit/predict, and the wall-clock amortization
+claim (k=8 under 3x a single matvec on the reference backend — the block
+rides one index walk, it is not a hidden loop).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GammaPDF, WLSHKernelSpec, cg_solve, get_bucket_fn,
+                        make_operator, pcg_solve, sample_lsh_params,
+                        wlsh_krr_fit, wlsh_krr_predict)
+
+
+def _setup(key, n, d, m, table_size, backend):
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    lsh = sample_lsh_params(jax.random.fold_in(key, 1), m, d,
+                            GammaPDF(2.0, 1.0))
+    op = make_operator(lsh, get_bucket_fn("rect"), table_size,
+                       backend=backend)
+    idx = op.build_index(op.featurize(x))
+    return op, idx
+
+
+# k=1 / k=3 / k=5 never divide bn=128 or bt=512; n=300 exercises padding
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_multi_rhs_matvec_matches_per_column(backend, k):
+    key = jax.random.PRNGKey(10 + k)
+    n, d, m, table_size = 300, 3, 4, 1024
+    op, idx = _setup(key, n, d, m, table_size, backend)
+    betas = jax.random.normal(jax.random.fold_in(key, 2), (n, k))
+    got = op.matvec(idx, betas)
+    assert got.shape == (n, k)
+    for j in range(k):
+        np.testing.assert_allclose(got[:, j], op.matvec(idx, betas[:, j]),
+                                   atol=1e-5)
+    # sum mode (the distributed model-axis contribution) must agree too
+    got_sum = op.matvec(idx, betas, average=False)
+    np.testing.assert_allclose(got_sum[:, 0],
+                               op.matvec(idx, betas[:, 0], average=False),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_multi_rhs_k1_bitwise_matches_1d(backend):
+    """(n, 1) must be the 1-D path's result bit for bit: same scatter order,
+    same tile products — the k axis adds no reassociation anywhere."""
+    key = jax.random.PRNGKey(3)
+    n, d, m, table_size = 257, 3, 3, 2048
+    op, idx = _setup(key, n, d, m, table_size, backend)
+    beta = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    np.testing.assert_array_equal(
+        np.asarray(op.matvec(idx, beta[:, None])[:, 0]),
+        np.asarray(op.matvec(idx, beta)))
+    # split loads/readout too (the psum-able distributed path)
+    t1 = op.loads(idx, beta)
+    tk = op.loads(idx, beta[:, None])
+    np.testing.assert_array_equal(np.asarray(tk[..., 0]), np.asarray(t1))
+    np.testing.assert_array_equal(
+        np.asarray(op.readout(idx, tk)[:, 0]),
+        np.asarray(op.readout(idx, t1)))
+
+
+def test_pcg_block_matches_single_solves():
+    """Each column of a block solve follows its own single-RHS trajectory
+    (deflation freezes it at ITS convergence point, not the block's)."""
+    key = jax.random.PRNGKey(0)
+    n = 96
+    a = jax.random.normal(key, (n, n))
+    psd = a @ a.T / n
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    mv = lambda v: psd @ v
+    # columns of wildly different difficulty: zero (0 iters), a multiple of
+    # b (same trajectory as b), and a tiny-scale copy (same iters — the
+    # relative threshold scales with the column)
+    blk = jnp.stack([b, jnp.zeros_like(b), -2.5 * b, 1e-3 * b], axis=1)
+    res = pcg_solve(mv, blk, 0.3, tol=1e-8, maxiter=400)
+    singles = [cg_solve(mv, blk[:, j], 0.3, tol=1e-8, maxiter=400)
+               for j in range(4)]
+    for j, s in enumerate(singles):
+        np.testing.assert_allclose(res.x[:, j], s.x, rtol=1e-4, atol=1e-6)
+    assert int(res.col_iters[1]) == 0          # zero column: deflated at init
+    # the dense oracle matmul reassociates between (n, 1) and (n, 4)
+    # operands, so iteration counts may differ by a rounding step
+    assert abs(int(res.col_iters[0]) - int(singles[0].iters)) <= 1
+    assert int(res.iters) == int(jnp.max(res.col_iters))
+
+
+def test_pcg_noncontiguous_deflation():
+    """A column that converges early (aligned with the dominant eigenvector)
+    sits BETWEEN two slow columns; its deflation must not perturb them."""
+    key = jax.random.PRNGKey(7)
+    n = 80
+    a = jax.random.normal(key, (n, n))
+    psd = a @ a.T / n + jnp.eye(n)
+    evals, evecs = jnp.linalg.eigh(psd)
+    easy = evecs[:, -1]                        # one Krylov step suffices
+    hard1 = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    hard2 = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    blk = jnp.stack([hard1, easy, hard2], axis=1)
+    mv = lambda v: psd @ v
+    res = pcg_solve(mv, blk, 0.1, tol=1e-7, maxiter=300)
+    iters = [int(res.col_iters[j]) for j in range(3)]
+    assert iters[1] < iters[0] and iters[1] < iters[2], iters
+    direct = jnp.linalg.solve(psd + 0.1 * jnp.eye(n), blk)
+    np.testing.assert_allclose(res.x, direct, atol=5e-3)
+    assert bool(jnp.all(res.resnorm <= 1e-7 * jnp.linalg.norm(blk, axis=0)
+                        + 1e-10))
+
+
+def test_wlsh_krr_fit_multi_rhs():
+    """Batched fit: (n, k) targets -> (n, k) beta, (m, B, k) tables, and
+    predictions that match k independent single fits column-for-column."""
+    key = jax.random.PRNGKey(4)
+    n, d, k = 220, 2, 3
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    ys = jax.random.normal(jax.random.fold_in(key, 1), (n, k))
+    xte = jax.random.uniform(jax.random.fold_in(key, 2), (40, d)) * 2.0
+    spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"))
+    fit = lambda target: wlsh_krr_fit(jax.random.fold_in(key, 3), x, target,
+                                      spec, m=32, lam=0.5, tol=1e-7,
+                                      backend="reference")
+    mb = fit(ys)
+    assert mb.beta.shape == (n, k) and mb.tables.shape[-1] == k
+    assert mb.cg_col_iters.shape == (k,)
+    pb = wlsh_krr_predict(mb, xte, batch_size=16)
+    assert pb.shape == (40, k)
+    for j in range(k):
+        mj = fit(ys[:, j])
+        np.testing.assert_allclose(mb.beta[:, j], mj.beta, atol=1e-5)
+        np.testing.assert_allclose(pb[:, j],
+                                   wlsh_krr_predict(mj, xte, batch_size=16),
+                                   atol=1e-5)
+
+
+def test_multi_rhs_amortization_under_3x():
+    """Acceptance criterion: a k=8 matvec on the reference backend costs
+    < 3x a single-RHS matvec in wall-clock — the block shares the sorted
+    gather and segment-sum index walk, so it cannot be a hidden k-loop."""
+    key = jax.random.PRNGKey(1)
+    n, d, m, table_size = 8192, 8, 16, 32768
+    op, idx = _setup(key, n, d, m, table_size, "reference")
+    b1 = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    b8 = jax.random.normal(jax.random.fold_in(key, 3), (n, 8))
+    f = jax.jit(lambda b: op.matvec(idx, b))
+    f(b1).block_until_ready()
+    f(b8).block_until_ready()
+
+    def best_of(b, reps=7):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            f(b).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    # measured headroom is ~2x (k=8 runs 1.2-1.6x single), but shared CPU
+    # containers have multi-second noise bursts; re-measure before failing
+    for attempt in range(3):
+        t1, t8 = best_of(b1), best_of(b8)
+        if t8 < 3.0 * t1:
+            break
+    assert t8 < 3.0 * t1, (t1, t8)

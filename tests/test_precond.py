@@ -1,0 +1,179 @@
+"""Preconditioned CG: Jacobi + Nyström (core/precond.py, core/krr.py).
+
+Pins the PR's acceptance criterion — Nyström-PCG reaches tol=1e-6 in at
+most 1/3 the iterations of unpreconditioned CG on an ill-conditioned
+synthetic WLSH-KRR system — plus the algebra each preconditioner is built
+on: the Jacobi diagonal is the exact CountSketch operator diagonal, the
+Nyström apply inverts P = A Aᵀ + λI exactly, and both leave the solution
+unchanged (a preconditioner reshapes the path, not the fixed point).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GammaPDF, WLSHKernelSpec, get_bucket_fn,
+                        make_operator, make_preconditioner, pcg_solve,
+                        sample_lsh_params, table_diag, wlsh_krr_fit)
+from repro.core.precond import nystrom_factors
+from repro.core.wlsh import table_kernel_matrix
+
+
+def _ill_conditioned_system(key, n=1024, d=3, m=32, lengthscale=4.0):
+    """Small-lam WLSH-KRR on a smooth (long-lengthscale) kernel: the gram's
+    spectral tail is tiny next to its head, so (K~ + lam I) has condition
+    number ~ lam⁻¹ — the regime where preconditioning decides solve time."""
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    lsh = sample_lsh_params(jax.random.fold_in(key, 1), m, d,
+                            GammaPDF(2.0, 1.0), lengthscale=lengthscale)
+    op = make_operator(lsh, get_bucket_fn("rect"), 4 * n,
+                       backend="reference")
+    idx = op.build_index(op.featurize(x))
+    y = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    return op, idx, y
+
+
+def test_jacobi_diag_is_exact_operator_diagonal():
+    key = jax.random.PRNGKey(0)
+    n, d, m = 150, 2, 8
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    lsh = sample_lsh_params(jax.random.fold_in(key, 1), m, d,
+                            GammaPDF(2.0, 1.0))
+    op = make_operator(lsh, get_bucket_fn("rect"), 512, backend="reference")
+    idx = op.build_index(op.featurize(x), blocked=False)
+    want = jnp.diagonal(table_kernel_matrix(idx))
+    np.testing.assert_allclose(table_diag(idx.coeff), want, atol=1e-6)
+
+
+def test_nystrom_apply_inverts_its_own_preconditioner():
+    """apply(r) must invert P = A Aᵀ + λI — the Woodbury identity through
+    the two cached triangular solves.  Checked at moderate λ where the
+    round trip is well-posed in f32 (at tiny λ the check itself would be
+    amplified by cond(P); that regime is covered by the iteration-count
+    tests below)."""
+    key = jax.random.PRNGKey(5)
+    op, idx, y = _ill_conditioned_system(key, n=256, m=16, lengthscale=2.0)
+    mv = lambda v: op.matvec(idx, v)
+    lam = 1.0
+    diag = table_diag(idx.coeff)
+    fac = nystrom_factors(mv, diag, lam, rank=32)
+    pre = make_preconditioner("nystrom", matvec=mv, diag=diag, lam=lam,
+                              rank=32)
+    r = jax.random.normal(jax.random.fold_in(key, 3), (256,))
+    z = pre.apply(r)
+    back = fac.a @ (fac.a.T @ z) + lam * z
+    np.testing.assert_allclose(back, r, rtol=1e-3, atol=1e-3)
+    # block apply == per-column apply
+    rk = jax.random.normal(jax.random.fold_in(key, 4), (256, 3))
+    zk = pre.apply(rk)
+    for j in range(3):
+        np.testing.assert_allclose(zk[:, j], pre.apply(rk[:, j]), atol=1e-6)
+
+
+def test_preconditioner_preserves_solution():
+    """Same fixed point from none/jacobi/nystrom at tight tolerance."""
+    key = jax.random.PRNGKey(2)
+    op, idx, y = _ill_conditioned_system(key, n=512, m=32)
+    mv = lambda v: op.matvec(idx, v)
+    lam = 1e-2
+    diag = table_diag(idx.coeff)
+    sols = {}
+    for name in ("none", "jacobi", "nystrom"):
+        pre = make_preconditioner(name, matvec=mv, diag=diag, lam=lam,
+                                  rank=64)
+        sols[name] = pcg_solve(mv, y, lam, precond=pre, tol=1e-8,
+                               maxiter=3000)
+    scale = float(jnp.max(jnp.abs(sols["none"].x)))
+    for name in ("jacobi", "nystrom"):
+        np.testing.assert_allclose(sols[name].x, sols["none"].x,
+                                   atol=2e-3 * scale)
+
+
+def test_nystrom_pcg_cuts_iterations_3x():
+    """Acceptance criterion: Nyström-PCG reaches tol=1e-6 in <= 1/3 the
+    iterations of unpreconditioned CG on the ill-conditioned synthetic
+    benchmark (same system, same tolerance, same maxiter budget)."""
+    key = jax.random.PRNGKey(0)
+    op, idx, y = _ill_conditioned_system(key)
+    mv = lambda v: op.matvec(idx, v)
+    lam = 1e-3
+    tol = 1e-6
+    plain = pcg_solve(mv, y, lam, tol=tol, maxiter=1500)
+    diag = table_diag(idx.coeff)
+    pre = make_preconditioner("nystrom", matvec=mv, diag=diag, lam=lam,
+                              rank=128)
+    nys = pcg_solve(mv, y, lam, precond=pre, tol=tol, maxiter=1500)
+    bnorm = float(jnp.linalg.norm(y))
+    assert float(nys.resnorm[0]) <= tol * bnorm * 1.01, "nystrom unconverged"
+    it_plain, it_nys = int(plain.iters), int(nys.iters)
+    assert it_nys * 3 <= it_plain, (it_plain, it_nys)
+
+
+def test_wlsh_krr_fit_precond_reduces_iters_same_answer():
+    """End-to-end: ``precond='nystrom'`` through wlsh_krr_fit converges in
+    fewer iterations to the same beta on a small-lam fit."""
+    key = jax.random.PRNGKey(6)
+    n, d = 400, 2
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    y = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"), lengthscale=4.0)
+    fit = lambda p: wlsh_krr_fit(jax.random.fold_in(key, 2), x, y, spec,
+                                 m=32, lam=1e-2, tol=1e-6, maxiter=1000,
+                                 backend="reference", precond=p,
+                                 precond_rank=96)
+    plain, nys = fit("none"), fit("nystrom")
+    assert int(nys.cg_iters) < int(plain.cg_iters)
+    scale = float(jnp.max(jnp.abs(plain.beta)))
+    np.testing.assert_allclose(nys.beta, plain.beta, atol=5e-3 * scale)
+    assert nys.precond == "nystrom"
+
+
+def test_make_preconditioner_validation():
+    with pytest.raises(ValueError):
+        make_preconditioner("jacobi")
+    with pytest.raises(ValueError):
+        make_preconditioner("nystrom", diag=jnp.ones((4,)))
+    with pytest.raises(ValueError):
+        make_preconditioner("clueless")
+    assert make_preconditioner("none").name == "none"
+
+
+def test_distributed_jacobi_and_nystrom_guard():
+    """cfg.precond='jacobi' runs inside shard_map and matches the 'none'
+    solution; 'nystrom' on sharded data axes is rejected up front."""
+    from repro.compat import make_mesh
+    from repro.core.distributed import KRRStepConfig, make_krr_step
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
+    n, d, m, table_size = 192, 3, 4, 512
+    key = jax.random.PRNGKey(6)
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    y = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    lsh = sample_lsh_params(jax.random.fold_in(key, 2), m, d,
+                            GammaPDF(2.0, 1.0))
+    f = get_bucket_fn("rect")
+    base = KRRStepConfig(m=m, table_size=table_size, lam=0.5, cg_iters=40,
+                         data_axes=("pod", "data"), model_axis="model",
+                         backend="reference")
+    b0, r0, _ = jax.jit(make_krr_step(mesh, base, f))(x, y, lsh)
+    bj, rj, _ = jax.jit(make_krr_step(
+        mesh, base._replace(precond="jacobi"), f))(x, y, lsh)
+    bn, rn, _ = jax.jit(make_krr_step(
+        mesh, base._replace(precond="nystrom", precond_rank=32), f))(
+            x, y, lsh)
+    scale = float(jnp.max(jnp.abs(b0)))
+    np.testing.assert_allclose(bj, b0, atol=1e-3 * scale)
+    np.testing.assert_allclose(bn, b0, atol=1e-3 * scale)
+
+    # sharded data axes: nystrom must be rejected at build time.  The mesh
+    # is 1x1x1, so fake a sharded count via data axes that multiply to >1
+    # on a wider mesh shape when available; otherwise just check the
+    # validation branch directly
+    import repro.core.distributed as dist
+    cfg_bad = base._replace(precond="nystrom")
+    real_count = dist._data_shard_count
+    try:
+        dist._data_shard_count = lambda mesh_, cfg_: 2
+        with pytest.raises(ValueError):
+            make_krr_step(mesh, cfg_bad, f)
+    finally:
+        dist._data_shard_count = real_count

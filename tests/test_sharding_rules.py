@@ -6,7 +6,7 @@ import pytest
 # the property test skips individually when hypothesis is absent; the
 # example-based rule tests always run
 from _hypothesis_compat import given, settings, st
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.sharding import RULES, spec_for
 
