@@ -1,0 +1,176 @@
+"""Serving-path latency/throughput benchmark -> BENCH_serving.json.
+
+Measures the three serving tiers the subsystem exists for, on one fitted
+model (rect bucket, serving-scale m):
+
+* **cold**   — a FRESH predictor's first single-query call, compile included:
+  what a replica pays right after loading an artifact with no warmup.
+* **warm**   — the steady-state single-query featurize+readout path (padding
+  bucket already compiled, cache off): p50/p99 over many calls.
+* **cached** — the same query answered by the bucket-exact cache (key memo +
+  LRU probe, no jit entry): p50/p99.
+
+plus the micro-batcher under several offered loads (paced submit loop ->
+achieved QPS, latency percentiles, mean coalesced batch size).
+
+The committed BENCH_serving.json is the regression baseline:
+``benchmarks/check_regression.py`` gates warm_p50_us and cached_p50_us
+against it (same platform only, machine-speed normalized via the shared
+calibration workload).  The two structural claims — warm >= 5x faster than
+cold, cache hit >= 10x faster than warm — are asserted by
+tests/test_bench_regression.py --runslow off this module's ``run()``.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--json PATH] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from repro.serve import Predictor, bucket_sizes
+from repro.serve.batcher import percentile
+
+from .common import emit
+
+# serving-scale model: m matches the quickstart fit; n only shapes the tables
+MODEL_N = 2048
+MODEL_D = 8
+MODEL_M = 256
+SEED = 0
+
+OFFERED_QPS = (2000.0, 8000.0, 0.0)          # 0 = unthrottled
+BATCH_REQUESTS = 2000
+MAX_BATCH = 64
+MAX_WAIT_US = 1000
+DUP_FRAC = 0.5
+
+
+def _lat_us(fn, iters: int):
+    """Sorted per-call latencies in us (perf_counter around each call)."""
+    lat = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        lat.append((time.perf_counter() - t0) * 1e6)
+    return sorted(lat)
+
+
+def run(*, iters: int = 300, batch_requests: int = BATCH_REQUESTS,
+        offered_qps=OFFERED_QPS, repeats: int = 1) -> dict:
+    """Returns the JSON-able result dict (stable schema: every key always
+    present).  ``iters`` is the single-query sample count for the warm and
+    cached percentiles; ``repeats`` re-runs only those measurement sections
+    (min-of-N per percentile) so the regression gate can sample over minutes
+    without re-paying the model fit / export / predictor compile."""
+    from repro.launch.krr_serve import (_fit_and_export, _synthetic_stream,
+                                        serve_stream)
+
+    out = {"bench": "serving", "platform": jax.default_backend(),
+           "model": {"n": MODEL_N, "d": MODEL_D, "m": MODEL_M},
+           "max_batch": MAX_BATCH, "max_wait_us": MAX_WAIT_US,
+           "dup_frac": DUP_FRAC}
+    with tempfile.TemporaryDirectory() as tmp:
+        art_dir = tmp + "/artifact"
+        # one canonical serving fit, shared with the krr_serve selftest
+        _fit_and_export(art_dir, n=MODEL_N, d=MODEL_D, m=MODEL_M, seed=SEED)
+        q = (np.random.default_rng(SEED)
+             .uniform(0.0, 2.0, size=(1, MODEL_D)).astype(np.float32))
+
+        # cold: fresh predictor, first call pays tracing + compile
+        cold_pred = Predictor(cache_entries=0)
+        cold_pred.load(art_dir)
+        t0 = time.perf_counter()
+        cold_pred.predict(q)
+        out["cold_first_call_us"] = (time.perf_counter() - t0) * 1e6
+
+        # warm: steady-state single-query jit path (bucket compiled, no cache)
+        pred = Predictor(cache_entries=65536)
+        pred.load(art_dir)
+        pred.warmup(sizes=bucket_sizes(MAX_BATCH))
+        pred.predict(q)          # cached: first call inserts, later replay
+        for key in ("warm_p50_us", "warm_p99_us",
+                    "cached_p50_us", "cached_p99_us"):
+            out[key] = float("inf")
+        for _ in range(max(repeats, 1)):
+            warm = _lat_us(lambda: pred.predict(q, use_cache=False), iters)
+            cached = _lat_us(lambda: pred.predict(q), iters)
+            out["warm_p50_us"] = min(out["warm_p50_us"],
+                                     percentile(warm, 50))
+            out["warm_p99_us"] = min(out["warm_p99_us"],
+                                     percentile(warm, 99))
+            out["cached_p50_us"] = min(out["cached_p50_us"],
+                                       percentile(cached, 50))
+            out["cached_p99_us"] = min(out["cached_p99_us"],
+                                       percentile(cached, 99))
+
+        out["warm_speedup_vs_cold"] = \
+            out["cold_first_call_us"] / out["warm_p50_us"]
+        out["cache_speedup_vs_warm"] = \
+            out["warm_p50_us"] / out["cached_p50_us"]
+
+        # batcher tiers: same request stream at increasing offered load
+        stream = _synthetic_stream(MODEL_D, batch_requests, DUP_FRAC,
+                                   SEED + 1)
+        rows = []
+        for qps in offered_qps:
+            # tier isolation: each offered load starts from a cold cache so
+            # only the stream's own dup_frac produces hits
+            pred.clear_cache()
+            stats = serve_stream(pred, stream, max_batch=MAX_BATCH,
+                                 max_wait_us=MAX_WAIT_US, target_qps=qps)
+            rows.append({"offered_qps": qps or None,   # None = unthrottled
+                         "achieved_qps": stats["qps"],
+                         "p50_us": stats["p50_us"],
+                         "p99_us": stats["p99_us"],
+                         "mean_batch": stats["mean_batch"],
+                         "batches": stats["batches"],
+                         "requests": stats["served"]})
+        out["batcher_rows"] = rows
+    return out
+
+
+def main(json_path: str | None = None, *, quick: bool = False) -> dict:
+    from . import bench_matvec
+
+    res = run(iters=100 if quick else 300,
+              batch_requests=500 if quick else BATCH_REQUESTS,
+              offered_qps=(0.0,) if quick else OFFERED_QPS)
+    res["calib_us"] = bench_matvec.calibration_us()
+    print(f"[bench_serving] cold first call {res['cold_first_call_us']:.0f}us "
+          f"(compile included)")
+    print(f"[bench_serving] warm single query p50 {res['warm_p50_us']:.0f}us "
+          f"p99 {res['warm_p99_us']:.0f}us "
+          f"({res['warm_speedup_vs_cold']:.0f}x vs cold)")
+    print(f"[bench_serving] cached hit p50 {res['cached_p50_us']:.0f}us "
+          f"p99 {res['cached_p99_us']:.0f}us "
+          f"({res['cache_speedup_vs_warm']:.1f}x vs warm)")
+    for row in res["batcher_rows"]:
+        offered = ("unthrottled" if row["offered_qps"] is None
+                   else f"{row['offered_qps']:.0f} offered")
+        print(f"[bench_serving] batcher {offered}: "
+              f"{row['achieved_qps']:.0f} QPS, p50 {row['p50_us']:.0f}us "
+              f"p99 {row['p99_us']:.0f}us, "
+              f"mean batch {row['mean_batch']:.1f}")
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(res, fh, indent=2)
+        print(f"[bench_serving] wrote {json_path}")
+    emit("bench_serving", res["warm_p50_us"] * 1e-6,
+         f"cache_speedup={res['cache_speedup_vs_warm']:.1f}x "
+         f"warm_speedup_vs_cold={res['warm_speedup_vs_cold']:.0f}x")
+    return res
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_serving.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer samples + one batcher tier (CI artifact run)")
+    args = ap.parse_args()
+    main(args.json, quick=args.quick)

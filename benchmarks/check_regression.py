@@ -1,11 +1,14 @@
-"""Matvec perf regression gate.
+"""Perf regression gates: matvec + serving.
 
 Reruns the matvec benchmark section at the sizes recorded in the committed
 ``BENCH_matvec.json`` and fails when ``reference_us`` or ``fused_us``
 regresses more than ``factor`` (default 1.3x) against the baseline row for
-the same n.  Exposed two ways:
+the same n; likewise reruns the serving warm/cached single-query sections
+against ``BENCH_serving.json`` (``warm_p50_us``, ``cached_p50_us``).
+Exposed two ways:
 
     PYTHONPATH=src python -m benchmarks.check_regression [--baseline PATH]
+        [--serving-baseline PATH]
     PYTHONPATH=src python -m pytest tests/test_bench_regression.py --runslow
 
 Comparisons are skipped (not failed) when the baseline was recorded on a
@@ -23,8 +26,14 @@ import pathlib
 
 DEFAULT_BASELINE = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_matvec.json"
+DEFAULT_SERVING_BASELINE = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_serving.json"
 DEFAULT_FACTOR = 1.3
+# serving latencies are single-digit-us dict probes and sub-ms jit dispatch:
+# proportionally noisier than the matvec timing loops, so the gate is looser
+SERVING_FACTOR = 2.0
 CHECKED_KEYS = ("reference_us", "fused_us")
+SERVING_KEYS = ("warm_p50_us", "cached_p50_us")
 
 
 def check(baseline_path=DEFAULT_BASELINE, factor: float = DEFAULT_FACTOR,
@@ -79,19 +88,63 @@ def check(baseline_path=DEFAULT_BASELINE, factor: float = DEFAULT_FACTOR,
     return failures, rows
 
 
+def check_serving(baseline_path=DEFAULT_SERVING_BASELINE,
+                  factor: float = SERVING_FACTOR, repeats: int = 3):
+    """Serving-latency gate: (failures, fresh) where ``fresh`` maps each of
+    SERVING_KEYS to the best-of-``repeats`` remeasurement.  Same platform
+    skip + calibration scaling as the matvec gate; the batcher tiers are NOT
+    re-run (offered-load QPS on a shared runner is weather, not signal)."""
+    import jax
+
+    from . import bench_matvec, bench_serving
+
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    if base.get("platform") != jax.default_backend():
+        return [], {}
+    scale = 1.0
+    if base.get("calib_us"):
+        scale = max(1.0, bench_matvec.calibration_us() / base["calib_us"])
+    # one fit/export/compile, ``repeats`` interleaved measurement passes
+    res = bench_serving.run(iters=100, batch_requests=0, offered_qps=(),
+                            repeats=repeats)
+    best = {key: res[key] for key in SERVING_KEYS}
+    failures = []
+    for key, new in sorted(best.items()):
+        old = base.get(key)
+        if not old:
+            continue
+        if new > factor * old * scale:
+            failures.append(f"serving {key} {new:.0f}us > {factor:.2f}x "
+                            f"baseline {old:.0f}us (machine scale "
+                            f"{scale:.2f})")
+    return failures, best
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument("--serving-baseline", default=str(DEFAULT_SERVING_BASELINE))
     ap.add_argument("--factor", type=float, default=DEFAULT_FACTOR)
+    ap.add_argument("--serving-factor", type=float, default=SERVING_FACTOR)
     args = ap.parse_args(argv)
     failures, rows = check(args.baseline, args.factor)
     if not rows:
-        print("[check_regression] baseline platform differs — skipped")
-        return 0
+        print("[check_regression] matvec baseline platform differs — skipped")
     for row in rows:
         print(f"[check_regression] n={row['n']}: "
               f"reference_us={row['reference_us']:.0f} "
               f"fused_us={row['fused_us']:.0f}")
+    if pathlib.Path(args.serving_baseline).exists():
+        sfail, sbest = check_serving(args.serving_baseline,
+                                     args.serving_factor)
+        failures += sfail
+        if not sbest:
+            print("[check_regression] serving baseline platform differs — "
+                  "skipped")
+        else:
+            print("[check_regression] serving: " +
+                  " ".join(f"{k}={v:.0f}us" for k, v in sorted(sbest.items())))
     if failures:
         for f in failures:
             print(f"[check_regression] REGRESSION {f}")

@@ -13,16 +13,19 @@ import time
 import traceback
 
 MATVEC_JSON = "BENCH_matvec.json"
+SERVING_JSON = "BENCH_serving.json"
 
 
 def main() -> None:
-    from . import bench_matvec, bench_ose, table1_gp, table2_krr
+    from . import bench_matvec, bench_ose, bench_serving, table1_gp, table2_krr
     sections = [
         ("Table 1 (GP regression RMSE)", lambda: table1_gp.main(scale=0.15,
                                                                 m=280)),
         ("Table 2 (large-scale KRR)", table2_krr.main),
         ("Matvec O(n) scaling (paper §4)",
          lambda: bench_matvec.main(json_path=MATVEC_JSON)),
+        ("Serving latency tiers (DESIGN §8)",
+         lambda: bench_serving.main(json_path=SERVING_JSON)),
         ("OSE eps vs m (Thm 11/12)", bench_ose.main),
     ]
     failures = 0

@@ -14,6 +14,11 @@ K - 1 GP posterior samples alongside the mean via pathwise conditioning —
 one batched multi-RHS solve instead of K separate fits (core/gp.py).
 Prediction streams through fixed-size batches — the same code path that
 serves multi-million-point inference.
+
+``--export DIR`` writes the fitted model as a serving artifact
+(src/repro/serve/artifact.py) and ``--serve DIR`` loads it back through the
+online Predictor and round-trips a request sample — the export -> serve hop
+that `python -m repro.launch.krr_serve --artifact DIR` then runs at traffic.
 """
 import argparse
 import time
@@ -43,6 +48,12 @@ def main():
     ap.add_argument("--num-rhs", type=int, default=1,
                     help="K > 1 adds K-1 pathwise GP posterior samples to "
                          "the solve as extra RHS columns (one batched fit)")
+    ap.add_argument("--export", default=None, metavar="DIR",
+                    help="write the fitted WLSH model as a serving artifact")
+    ap.add_argument("--serve", default=None, metavar="DIR",
+                    help="load the artifact back through the online "
+                         "Predictor and verify the round-trip (defaults to "
+                         "the --export dir when both are wanted)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -99,6 +110,51 @@ def main():
         print(f"GP posterior: {n_samples} pathwise samples in the same "
               f"solve; mean test-point std {spread:.4f}")
     assert rmse_wlsh < 2.0 * rmse_exact + 0.05, "WLSH should track exact KRR"
+
+    # ---- serving round-trip: export the fitted model, load it back through
+    # the online predictor, and check artifact == in-memory predictions ----
+    if args.export:
+        from repro.serve import export_artifact
+        aid = export_artifact(args.export, model)
+        print(f"serving    : exported artifact {aid!r} -> {args.export}")
+    serve_dir = args.serve or args.export
+    if args.serve is not None or args.export:
+        import numpy as np
+        from repro.serve import Predictor
+        predictor = Predictor(backend=args.backend if args.backend != "auto"
+                              else None, cache_entries=4096)
+        aid = predictor.load(serve_dir)
+        predictor.warmup(sizes=(1, 256))
+        # a power-of-two query count keeps the predictor's padded shape equal
+        # to the direct path's shape — shape-retiling ulps would otherwise
+        # blur the bitwise round-trip signal
+        xq = np.asarray(xte[:256], np.float32)
+        served = predictor.predict(xq)
+        bitwise = False
+        compared = bool(args.export) and serve_dir == args.export
+        if compared:
+            # the artifact IS this run's fit: reference round-trip is
+            # bitwise (same arrays, same program); across backends the
+            # fused kernels regroup sums -> <=1e-6.  (a --serve-only dir
+            # may hold any artifact, so there is nothing to compare then)
+            direct = np.asarray(wlsh_krr_predict(model, xte[:256]))
+            bitwise = np.array_equal(served, direct)
+            assert bitwise or np.allclose(served, direct, atol=1e-6), \
+                "served predictions diverged from the in-memory model"
+        again = predictor.predict(xq)
+        assert np.array_equal(again, served), "cache replay not bitwise"
+        t0 = time.time()
+        for row in np.asarray(xte[:64], np.float32):
+            predictor.predict(row)
+        per_query = (time.time() - t0) / 64
+        verdict = ("round-trip bitwise" if bitwise else
+                   "round-trip <=1e-6" if compared else
+                   "served (no in-memory model to compare)")
+        print(f"serving    : {verdict} over {len(served)} "
+              f"test points; single-query warm+cache path "
+              f"{per_query * 1e6:.0f}us/query "
+              f"(cache hit rate "
+              f"{predictor.cache_stats(artifact_id=aid)['hit_rate']:.2f})")
     print("OK")
 
 

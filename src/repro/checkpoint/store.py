@@ -18,6 +18,7 @@ import os
 import re
 import shutil
 import threading
+import time
 from typing import Any
 
 import jax
@@ -106,14 +107,19 @@ class CheckpointManager:
     """Async checkpointing with bounded retention.
 
     save() snapshots device arrays to host and hands the file write to a
-    worker thread; wait() joins the in-flight write (call before exit and in
-    tests).  Keeps the newest ``keep`` checkpoints.
+    worker thread; wait()/flush() joins the in-flight write (call before exit
+    and in tests) and re-raises any exception the background write hit — an
+    async save failure must not be silently swallowed by a daemon thread.
+    Keeps the newest ``keep`` checkpoints and sweeps crash-window ``.tmp``
+    dirs left behind by a killed writer (they are invisible to
+    ``latest_step`` either way, but they pin disk).
     """
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
 
     def save(self, step: int, state: Any, meta: dict | None = None,
              blocking: bool = False) -> None:
@@ -121,23 +127,52 @@ class CheckpointManager:
         self.wait()
 
         def _write():
-            save_checkpoint(self.directory, step, host_state, meta)
-            self._gc()
+            try:
+                save_checkpoint(self.directory, step, host_state, meta)
+                self._gc()
+            except BaseException as e:      # surfaced by the next wait()
+                self._error = e
 
         if blocking:
             _write()
+            self.wait()                     # raise immediately when blocking
         else:
             self._thread = threading.Thread(target=_write, daemon=True)
             self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight write; re-raise its exception, if any."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # flush == wait: both names exist because callers that treat the manager
+    # as a sink (serving exporters, shutdown hooks) look for flush()
+    flush = wait
+
+    # a .tmp dir this old cannot be an in-flight write (writes take seconds);
+    # younger ones are left alone in case ANOTHER writer shares the directory
+    # (this manager's own saves are serialized through wait(), but
+    # save_checkpoint is also called directly, e.g. by serve/artifact.py)
+    STALE_TMP_SECONDS = 600.0
 
     def _gc(self) -> None:
         if not os.path.isdir(self.directory):
             return
+        now = time.time()
+        for name in os.listdir(self.directory):
+            if not (name.endswith(".tmp") and _STEP_RE.match(name[:-4])):
+                continue
+            path = os.path.join(self.directory, name)
+            try:
+                age = now - os.path.getmtime(path)
+            except OSError:
+                continue          # raced with its writer's rename/cleanup
+            if age > self.STALE_TMP_SECONDS:
+                shutil.rmtree(path, ignore_errors=True)
         steps = sorted(s for s in (
             int(m.group(1)) for m in (_STEP_RE.match(n) for n in
                                       os.listdir(self.directory)) if m))

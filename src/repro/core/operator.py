@@ -9,7 +9,11 @@ the CountSketch table geometry behind a small primitive set:
     readout         index, tables -> per-point    (CountSketch gather)
     matvec          index, beta -> K~ beta        (fused one-pass off the
                     slot-blocked layout, or loads ∘ readout when split)
-    predict_batched tables, x_test -> yhat        (streaming, fixed memory)
+    featurize_buckets    x_query -> TableIndex    (query hash half of predict)
+    predict_from_buckets index, tables -> yhat    (readout half of predict —
+                         pure function of the query's bucket structure)
+    predict_batched      tables, x_test -> yhat   (streaming, fixed memory;
+                         wrapper over the two halves)
 
 Every primitive dispatches on ``backend``:
 
@@ -158,9 +162,26 @@ class WLSHOperator(NamedTuple):
 
     # -- streaming prediction -----------------------------------------------
 
+    def featurize_buckets(self, x: Array) -> TableIndex:
+        """Query half of the prediction path: featurize ``x`` and build the
+        readout-only table index (no slot-blocked layout — prediction never
+        scatters).  The result is the per-query bucket structure: its
+        (slot, coeff) pairs are everything a prediction depends on, which is
+        what makes bucket-keyed caching exact (serve/cache.py) and lets the
+        serving layer split the query hash from the table gather."""
+        return self.build_index(self.featurize(x), blocked=False)
+
+    def predict_from_buckets(self, index: TableIndex, tables: Array) -> Array:
+        """Readout half of the prediction path: predictions for an already
+        bucketed query set.  Pure function of (index.slot, index.coeff) and
+        ``tables`` — no access to the raw points.  Tables may be (m, B) ->
+        (n_query,) predictions, or (m, B, k) -> (n_query, k)."""
+        return self.readout(index, tables)
+
     def predict_batched(self, tables: Array, x_test: Array, *,
                         batch_size: int | None = None) -> Array:
-        """Read test-point predictions out of prebuilt bucket-load tables.
+        """Read test-point predictions out of prebuilt bucket-load tables —
+        a thin wrapper over ``featurize_buckets`` + ``predict_from_buckets``.
 
         With ``batch_size`` the test set is processed in fixed-size blocks via
         ``lax.map`` — peak memory is O(batch_size * m) regardless of n_test,
@@ -169,16 +190,16 @@ class WLSHOperator(NamedTuple):
         streamed readout serves all k fitted columns)."""
         n = x_test.shape[0]
         if batch_size is None or batch_size >= n:
-            feats = self.featurize(x_test)
-            return self.readout(self.build_index(feats, blocked=False), tables)
+            return self.predict_from_buckets(self.featurize_buckets(x_test),
+                                             tables)
         n_blocks = -(-n // batch_size)
         xp = jnp.pad(jnp.asarray(x_test, jnp.float32),
                      ((0, n_blocks * batch_size - n), (0, 0)))
         blocks = xp.reshape(n_blocks, batch_size, x_test.shape[1])
 
         def one_block(xb):
-            feats = self.featurize(xb)
-            return self.readout(self.build_index(feats, blocked=False), tables)
+            return self.predict_from_buckets(self.featurize_buckets(xb),
+                                             tables)
 
         out = jax.lax.map(one_block, blocks)
         return out.reshape((-1,) + out.shape[2:])[:n]

@@ -1,0 +1,226 @@
+"""Online KRR serving driver: load an exported artifact, serve a request
+stream through the micro-batcher, report latency/QPS/cache stats.
+
+    # export first (examples/quickstart.py --export /tmp/krr_artifact), then:
+    PYTHONPATH=src python -m repro.launch.krr_serve --artifact /tmp/krr_artifact \
+        --requests 2000 --dup-frac 0.5
+
+    # self-contained smoke (fit -> export -> serve -> verify; used by CI):
+    PYTHONPATH=src python -m repro.launch.krr_serve --selftest
+
+The request stream is synthetic by default (uniform points in the training
+box, with ``--dup-frac`` of requests replaying earlier queries — that is the
+traffic the bucket-exact cache exists for) or file-driven via ``--input``
+pointing at an (n, d) ``.npy``.  Every request goes through submit -> coalesce
+-> padded warm path (or cache hit) -> future, i.e. the exact production path.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from ..serve import MicroBatcher, Predictor, bucket_sizes
+
+
+def _synthetic_stream(d: int, n_requests: int, dup_frac: float,
+                      seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    fresh = (rng.uniform(0.0, 2.0, size=(n_requests, d))
+             .astype(np.float32))
+    out = fresh.copy()
+    # the first request can never be a replay, so a "fraction" of 1.0 means
+    # every row after it
+    n_dup = min(int(dup_frac * n_requests), max(n_requests - 1, 0))
+    if n_dup:
+        # replay earlier rows: repeats arrive interleaved, like real traffic.
+        # ascending order matters — processing position i only after every
+        # j < i is final keeps each copied row actually present earlier in
+        # the stream (unsorted, ~18% of the dups silently went unique)
+        dup_pos = rng.choice(n_requests - 1, size=n_dup, replace=False) + 1
+        for i in np.sort(dup_pos):
+            out[i] = out[rng.integers(0, i)]
+    return out
+
+
+def serve_stream(predictor: Predictor, stream: np.ndarray, *,
+                 max_batch: int, max_wait_us: int,
+                 target_qps: float = 0.0) -> dict:
+    """Push every row of ``stream`` through a MicroBatcher; returns the
+    batcher stats plus end-to-end wall clock.  ``target_qps`` paces the
+    offered load (0 = as fast as the submit loop goes)."""
+    gap = 1.0 / target_qps if target_qps > 0 else 0.0
+    with MicroBatcher(lambda xb: predictor.predict(xb),
+                      max_batch=max_batch, max_wait_us=max_wait_us,
+                      dim=stream.shape[1]) as mb:
+        t0 = time.perf_counter()
+        futures = []
+        for i, row in enumerate(stream):
+            if gap:
+                # sleep-based pacing: a busy-wait would pin the GIL and
+                # starve the batcher's worker thread
+                while True:
+                    rem = t0 + i * gap - time.perf_counter()
+                    if rem <= 0:
+                        break
+                    time.sleep(min(rem, 5e-4))
+            futures.append(mb.submit(row))
+        results = np.stack([f.result(timeout=60.0) for f in futures])
+        wall = time.perf_counter() - t0
+        stats = mb.stats()
+    stats["wall_s"] = wall
+    stats["offered_qps"] = target_qps or float("inf")
+    stats["results"] = results
+    return stats
+
+
+def _fit_and_export(directory: str, *, n: int = 1024, d: int = 8,
+                    m: int = 128, seed: int = 0):
+    """Tiny in-process fit -> artifact, for --selftest and missing --artifact
+    runs.  Returns (model, x_train)."""
+    import jax
+
+    from ..core import WLSHKernelSpec, get_bucket_fn, wlsh_krr_fit
+    from ..serve import export_artifact
+
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    y = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"))
+    model = wlsh_krr_fit(jax.random.fold_in(key, 2), x, y, spec, m=m,
+                         lam=0.5, backend="reference")
+    export_artifact(directory, model, artifact_id="selftest")
+    return model, np.asarray(x, np.float32)
+
+
+def selftest() -> int:
+    """Export a small artifact, serve 100 requests through the in-process
+    batcher, and verify every response against the library predict path —
+    the CI serving smoke."""
+    import jax.numpy as jnp
+
+    from ..core import wlsh_krr_predict
+
+    with tempfile.TemporaryDirectory() as tmp:
+        model, xtr = _fit_and_export(tmp + "/artifact")
+        predictor = Predictor(cache_entries=4096)
+        predictor.load(tmp + "/artifact")
+        predictor.warmup(sizes=bucket_sizes(16))
+        stream = _synthetic_stream(xtr.shape[1], 100, dup_frac=0.3, seed=1)
+        stats = serve_stream(predictor, stream, max_batch=16,
+                             max_wait_us=1000)
+        expect = np.asarray(wlsh_krr_predict(model, jnp.asarray(stream)))
+        if stats["served"] != 100:
+            print(f"[krr_serve] SELFTEST FAIL: served {stats['served']}/100")
+            return 1
+        # coalescing pads each micro-batch to its power-of-two bucket and XLA
+        # tiles the instance-mean per shape, so cross-shape agreement is
+        # ~1 ulp, not bitwise (bitwise is pinned per-path by tests)
+        if not np.allclose(stats["results"], expect, atol=1e-6):
+            print("[krr_serve] SELFTEST FAIL: batched serving != library "
+                  "predictions")
+            return 1
+        # exactness of the serving path itself: replaying the same stream
+        # must reproduce the first pass bit-for-bit (cache hits replay the
+        # stored cold-path rows; repeated warm rows hit identical programs)
+        replay = serve_stream(predictor, stream, max_batch=16,
+                              max_wait_us=1000)
+        if not np.array_equal(replay["results"], stats["results"]):
+            print("[krr_serve] SELFTEST FAIL: replayed stream not bitwise "
+                  "reproducible")
+            return 1
+        cache = predictor.cache_stats()
+        print(f"[krr_serve] selftest ok: 100/100 round-tripped (<=1e-6 of "
+              f"the library path, replay bitwise); "
+              f"{stats['batches']} batches (mean {stats['mean_batch']:.1f} "
+              f"rows), p50 {stats['p50_us']:.0f}us p99 {stats['p99_us']:.0f}us, "
+              f"cache hit rate {cache['hit_rate']:.2f}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifact", default=None,
+                    help="artifact directory (from quickstart --export); "
+                         "omitted -> fit+export a small model in-process")
+    ap.add_argument("--selftest", action="store_true",
+                    help="fit -> export -> serve 100 requests -> verify "
+                         "bitwise (CI smoke); ignores the traffic flags")
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "reference", "pallas"],
+                    help="override the artifact's recorded backend")
+    ap.add_argument("--input", default=None,
+                    help=".npy of (n, d) request points (default: synthetic)")
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--dup-frac", type=float, default=0.5,
+                    help="fraction of synthetic requests replaying earlier "
+                         "ones (the bucket-exact cache's traffic)")
+    ap.add_argument("--target-qps", type=float, default=0.0,
+                    help="paced offered load; 0 = unthrottled")
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-wait-us", type=int, default=2000)
+    ap.add_argument("--cache-entries", type=int, default=65536,
+                    help="bucket-exact cache size; 0 disables")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.selftest:
+        return selftest()
+
+    predictor = Predictor(backend=args.backend,
+                          cache_entries=args.cache_entries)
+    with contextlib.ExitStack() as stack:
+        if args.artifact:
+            aid = predictor.load(args.artifact)
+        else:
+            # demo artifact lives only for this run — cleaned up on exit
+            tmp = stack.enter_context(
+                tempfile.TemporaryDirectory(prefix="krr_serve_"))
+            print(f"[krr_serve] no --artifact: fitting a demo model "
+                  f"-> {tmp}/artifact")
+            _fit_and_export(tmp + "/artifact")
+            aid = predictor.load(tmp + "/artifact")
+        return _serve_main(predictor, aid, args)
+
+
+def _serve_main(predictor: Predictor, aid: str, args) -> int:
+    d = predictor._hosted(aid).loaded.model.lsh.d
+    n_compiled = predictor.warmup(artifact_id=aid,
+                                  sizes=bucket_sizes(args.max_batch))
+    print(f"[krr_serve] hosting {aid!r} (d={d}, backend="
+          f"{predictor._hosted(aid).loaded.operator.backend}); "
+          f"{n_compiled} padding buckets compiled")
+
+    if args.input:
+        stream = np.load(args.input).astype(np.float32)
+        if stream.ndim != 2 or stream.shape[1] != d:
+            print(f"[krr_serve] --input must be (n, {d}), "
+                  f"got {stream.shape}", file=sys.stderr)
+            return 2
+    else:
+        stream = _synthetic_stream(d, args.requests, args.dup_frac, args.seed)
+
+    stats = serve_stream(predictor, stream, max_batch=args.max_batch,
+                         max_wait_us=args.max_wait_us,
+                         target_qps=args.target_qps)
+    print(f"[krr_serve] {stats['served']} requests in {stats['wall_s']:.2f}s "
+          f"-> {stats['qps']:.0f} QPS achieved "
+          f"({stats['batches']} batches, mean {stats['mean_batch']:.1f} "
+          f"rows/batch)")
+    print(f"[krr_serve] latency p50 {stats['p50_us']:.0f}us  "
+          f"p99 {stats['p99_us']:.0f}us  (max_batch={args.max_batch}, "
+          f"max_wait={args.max_wait_us}us)")
+    cache = predictor.cache_stats(artifact_id=aid)
+    if cache is not None:
+        print(f"[krr_serve] cache: {cache['entries']} entries, "
+              f"hit rate {cache['hit_rate']:.2f} "
+              f"({cache['hits']} hits / {cache['misses']} misses)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

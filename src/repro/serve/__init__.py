@@ -1,0 +1,11 @@
+"""Online serving for fitted WLSH-KRR models (DESIGN.md §8).
+
+Layered as artifact (disk format) -> predictor (warm jit path + bucket-exact
+cache) -> batcher (request coalescing); ``repro.launch.krr_serve`` is the
+driver that strings them together.
+"""
+from .artifact import (ARTIFACT_FORMAT, LoadedArtifact, Normalization,
+                       export_artifact, load_artifact)
+from .batcher import MicroBatcher
+from .cache import BucketKeyFn, PredictionCache
+from .predictor import Predictor, bucket_sizes, padding_bucket

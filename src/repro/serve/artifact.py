@@ -1,0 +1,206 @@
+"""Serving artifacts: a fitted WLSH-KRR model as an on-disk, versioned thing.
+
+Export writes everything prediction needs — the m LSH instances (widths,
+offsets, hash coefficients), the bucket-load tables, the bucket-fn name and
+table geometry, optional input/output normalization stats, and the fit
+provenance (backend, preconditioner, CG stats) — through the checkpoint
+store's atomic tmp-dir + rename layout, so a crash mid-export can never leave
+a loadable half-artifact.  The checkpoint "step" slot carries the artifact
+FORMAT version: ``latest_step`` discovery then naturally picks the newest
+format a writer produced, and a loader refuses formats newer than it knows.
+
+Load rebuilds the exact ``WLSHKRRModel`` plus its operator on any backend
+(all backends read the same tables — see core/operator.py), after validating
+every array shape against the metadata manifest and the metadata against
+itself (bucket fn exists, table_size is a power of two and matches the
+tables, LSH arrays agree on (m, d)).  Round-trip is bitwise: arrays go
+through npz untouched.
+"""
+from __future__ import annotations
+
+import os
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import restore_checkpoint, save_checkpoint
+from ..checkpoint.store import latest_step
+from ..core.bucket_fns import BUCKET_FNS
+from ..core.krr import WLSHKRRModel, model_operator
+from ..core.lsh import LSHParams
+from ..core.operator import WLSHOperator
+
+ARTIFACT_FORMAT = 1          # bump on any layout/meta change
+_DTYPES = {"lsh_w": np.float32, "lsh_z": np.float32,
+           "lsh_r1": np.uint32, "lsh_r2": np.uint32,
+           "beta": np.float32, "tables": np.float32,
+           "x_mean": np.float32, "x_std": np.float32,
+           "y_mean": np.float32, "y_std": np.float32}
+
+
+class Normalization(NamedTuple):
+    """Optional request/response normalization baked into an artifact.
+
+    The predictor applies ``(x - x_mean) / x_std`` before featurization and
+    ``yhat * y_std + y_mean`` after readout — the stats travel with the model
+    so every replica serves identically without a side channel.
+    """
+
+    x_mean: np.ndarray   # (d,)
+    x_std: np.ndarray    # (d,)
+    y_mean: float
+    y_std: float
+
+
+class LoadedArtifact(NamedTuple):
+    artifact_id: str
+    model: WLSHKRRModel
+    operator: WLSHOperator   # rebuilt on the requested (or recorded) backend
+    norm: Normalization | None
+    meta: dict
+
+
+def _model_arrays(model: WLSHKRRModel, *,
+                  include_beta: bool) -> dict[str, np.ndarray]:
+    tables = np.asarray(model.tables, np.float32)
+    # prediction never reads beta (readout is lsh params + tables only); it
+    # is O(n_train * k) — the one artifact array that scales with the
+    # TRAINING set — so serving replicas can drop it.  A zero-row stand-in
+    # keeps the manifest/validation shape contract (column count must still
+    # match the tables' RHS block).
+    beta = (np.asarray(model.beta, np.float32) if include_beta
+            else np.zeros((0,) + tables.shape[2:], np.float32))
+    return {"lsh_w": np.asarray(model.lsh.w, np.float32),
+            "lsh_z": np.asarray(model.lsh.z, np.float32),
+            "lsh_r1": np.asarray(model.lsh.r1, np.uint32),
+            "lsh_r2": np.asarray(model.lsh.r2, np.uint32),
+            "beta": beta,
+            "tables": tables}
+
+
+def export_artifact(directory: str, model: WLSHKRRModel, *,
+                    artifact_id: str | None = None,
+                    norm: Normalization | None = None,
+                    extra_meta: dict | None = None,
+                    include_beta: bool = True) -> str:
+    """Atomically write ``model`` (+ optional normalization) to ``directory``.
+
+    Returns the artifact id (defaults to the directory basename).  The write
+    goes through ``checkpoint.save_checkpoint`` at step ``ARTIFACT_FORMAT``.
+    ``include_beta=False`` drops the training solution from the artifact —
+    serving needs only the LSH params and tables, and beta is the one array
+    that scales with the training-set size.
+    """
+    arrays = _model_arrays(model, include_beta=include_beta)
+    if norm is not None:
+        arrays["x_mean"] = np.asarray(norm.x_mean, np.float32).reshape(-1)
+        arrays["x_std"] = np.asarray(norm.x_std, np.float32).reshape(-1)
+        arrays["y_mean"] = np.asarray(norm.y_mean, np.float32).reshape(())
+        arrays["y_std"] = np.asarray(norm.y_std, np.float32).reshape(())
+    artifact_id = artifact_id or os.path.basename(os.path.normpath(directory))
+    meta = {"kind": "wlsh_krr_artifact",
+            "format": ARTIFACT_FORMAT,
+            "artifact_id": artifact_id,
+            "bucket_name": model.bucket_name,
+            "table_size": int(model.table_size),
+            "backend": model.backend,
+            "precond": model.precond,
+            "cg_iters": int(np.asarray(model.cg_iters)),
+            "cg_resnorm": np.asarray(model.cg_resnorm).tolist(),
+            "has_norm": norm is not None,
+            "has_beta": include_beta,
+            "arrays": {k: list(v.shape) for k, v in arrays.items()},
+            **(extra_meta or {})}
+    save_checkpoint(directory, ARTIFACT_FORMAT, arrays, meta)
+    return artifact_id
+
+
+def _validate(meta: dict, arrays: dict[str, np.ndarray]) -> None:
+    if meta.get("kind") != "wlsh_krr_artifact":
+        raise ValueError(f"not a serving artifact: kind={meta.get('kind')!r}")
+    bucket = meta.get("bucket_name")
+    if bucket not in BUCKET_FNS:
+        raise ValueError(f"artifact bucket fn {bucket!r} unknown to this "
+                         f"build; have {sorted(BUCKET_FNS)}")
+    table_size = int(meta.get("table_size", 0))
+    if table_size <= 0 or table_size & (table_size - 1):
+        raise ValueError(f"table_size must be a positive power of two, "
+                         f"got {table_size}")
+    m, d = arrays["lsh_w"].shape
+    for name in ("lsh_z", "lsh_r1", "lsh_r2"):
+        if arrays[name].shape != (m, d):
+            raise ValueError(f"{name}: shape {arrays[name].shape} != "
+                             f"lsh_w shape {(m, d)}")
+    tables = arrays["tables"]
+    if tables.ndim not in (2, 3) or tables.shape[:2] != (m, table_size):
+        raise ValueError(f"tables: shape {tables.shape} inconsistent with "
+                         f"m={m}, table_size={table_size}")
+    beta = arrays["beta"]
+    if beta.shape[1:] != tables.shape[2:]:
+        raise ValueError(f"beta RHS block {beta.shape} vs tables "
+                         f"{tables.shape}: column counts differ")
+    if meta.get("has_norm"):
+        for name in ("x_mean", "x_std", "y_mean", "y_std"):
+            if name not in arrays:
+                raise ValueError(f"has_norm set but {name} missing")
+        if arrays["x_mean"].shape != (d,) or arrays["x_std"].shape != (d,):
+            raise ValueError(f"normalization stats shaped "
+                             f"{arrays['x_mean'].shape}, expected ({d},)")
+
+
+def load_artifact(directory: str, *, backend: str | None = None,
+                  artifact_id: str | None = None) -> LoadedArtifact:
+    """Load + validate an artifact and rebuild its operator.
+
+    ``backend`` overrides the recorded fit backend ('reference' | 'pallas' |
+    'auto'); every backend reads the same tables, so a model fit on a TPU pod
+    serves from a CPU replica unchanged.  Raises ``ValueError`` on any
+    shape/metadata inconsistency and on artifact formats newer than this
+    build understands.
+    """
+    step = latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no artifact under {directory}")
+    if step > ARTIFACT_FORMAT:
+        raise ValueError(f"artifact format {step} is newer than this build's "
+                         f"reader (supports <= {ARTIFACT_FORMAT})")
+    # template shapes come from the meta manifest; restore_checkpoint then
+    # cross-checks every stored array against it
+    meta = _read_meta(directory, step)
+    manifest = meta.get("arrays")
+    if not isinstance(manifest, dict) or "lsh_w" not in manifest:
+        raise ValueError("artifact meta has no array manifest")
+    template = {name: np.zeros(tuple(shape), _DTYPES.get(name, np.float32))
+                for name, shape in manifest.items()}
+    arrays, _, meta = restore_checkpoint(directory, template, step)
+    _validate(meta, arrays)
+
+    lsh = LSHParams(w=jnp.asarray(arrays["lsh_w"]),
+                    z=jnp.asarray(arrays["lsh_z"]),
+                    r1=jnp.asarray(arrays["lsh_r1"]),
+                    r2=jnp.asarray(arrays["lsh_r2"]))
+    model = WLSHKRRModel(lsh=lsh, bucket_name=meta["bucket_name"],
+                         beta=jnp.asarray(arrays["beta"]),
+                         tables=jnp.asarray(arrays["tables"]),
+                         table_size=int(meta["table_size"]),
+                         cg_iters=jnp.asarray(meta.get("cg_iters", 0)),
+                         cg_resnorm=jnp.asarray(meta.get("cg_resnorm", 0.0)),
+                         backend=meta.get("backend", "reference"),
+                         precond=meta.get("precond", "none"))
+    norm = None
+    if meta.get("has_norm"):
+        norm = Normalization(x_mean=arrays["x_mean"], x_std=arrays["x_std"],
+                             y_mean=float(arrays["y_mean"]),
+                             y_std=float(arrays["y_std"]))
+    op = model_operator(model, backend=backend)
+    return LoadedArtifact(
+        artifact_id=artifact_id or meta.get("artifact_id")
+        or os.path.basename(os.path.normpath(directory)),
+        model=model, operator=op, norm=norm, meta=meta)
+
+
+def _read_meta(directory: str, step: int) -> dict:
+    import json
+    with open(os.path.join(directory, f"step_{step}", "meta.json")) as fh:
+        return json.load(fh)

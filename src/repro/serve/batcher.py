@@ -1,0 +1,200 @@
+"""Micro-batching engine: coalesce single-point requests under a deadline.
+
+State machine (one worker thread):
+
+    IDLE     -- blocked on the queue; a request arrives -> FILLING and the
+                flush deadline is armed at t_arrival + max_wait_us
+    FILLING  -- drain further requests; flush when the batch hits max_batch
+                or the deadline expires, whichever first
+    FLUSH    -- stack the pending rows, run predict_fn once, resolve every
+                request's future (or fail them all with the raised
+                exception) -> IDLE
+
+max_batch bounds tail latency under load (a full batch flushes immediately);
+max_wait_us bounds it when idle (a lone request waits at most one deadline).
+Each request costs its queue wait plus a 1/batch share of one warm-path call
+— which is how single-point traffic gets batched-throughput economics.
+
+``submit`` returns a ``concurrent.futures.Future``; the caller's thread never
+blocks unless it asks for ``.result()``.  Stats are collected continuously
+(served counts, batch-size histogram summary, latency percentiles over a
+sliding window, queue depth) and read with ``stats()``.
+"""
+from __future__ import annotations
+
+import collections
+import math
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+
+class _Request:
+    __slots__ = ("x", "future", "t_submit")
+
+    def __init__(self, x: np.ndarray):
+        self.x = x
+        self.future: Future = Future()
+        self.t_submit = time.perf_counter()
+
+
+def percentile(sorted_vals, q: float) -> float:
+    """Nearest-rank percentile of an already-sorted sequence: the
+    ceil(q/100 * n)-th smallest value (so q=99 over 100 samples is the
+    99th-smallest, not the maximum)."""
+    if not sorted_vals:
+        return float("nan")
+    n = len(sorted_vals)
+    rank = max(0, min(n - 1, math.ceil(q / 100.0 * n) - 1))
+    return float(sorted_vals[rank])
+
+
+class MicroBatcher:
+    """Thread-safe request queue in front of a batch predict function.
+
+    ``predict_fn`` maps a (b, d) float32 batch to per-row predictions; it is
+    only ever called from the single worker thread, so it needs no locking of
+    its own (the Predictor's jit path and cache are thread-safe anyway).
+    """
+
+    def __init__(self, predict_fn, *, max_batch: int = 64,
+                 max_wait_us: int = 2000, latency_window: int = 4096,
+                 dim: int | None = None):
+        if max_batch <= 0:
+            raise ValueError("max_batch must be positive")
+        self.predict_fn = predict_fn
+        self.max_batch = int(max_batch)
+        # one batcher fronts one model, so every row must share one d —
+        # checked at submit() so a malformed request is rejected at ITS
+        # call site instead of blowing up np.stack in _flush and failing
+        # every innocent request coalesced into the same batch.  None =
+        # locked in from the first accepted request.
+        self._dim = int(dim) if dim is not None else None
+        self.max_wait_s = max(int(max_wait_us), 0) * 1e-6
+        self._queue: queue.Queue[_Request | None] = queue.Queue()
+        self._latencies = collections.deque(maxlen=latency_window)
+        self._lock = threading.Lock()
+        self._n_requests = 0
+        self._n_served = 0
+        self._n_batches = 0
+        self._batch_rows = 0
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        self._closed = False
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="microbatcher")
+        self._worker.start()
+
+    # -- client side --------------------------------------------------------
+
+    def submit(self, x_row) -> Future:
+        """Enqueue one d-dimensional point; resolves to its prediction."""
+        req = _Request(np.asarray(x_row, np.float32).reshape(-1))
+        # the closed-check and the enqueue are one atomic step: close() flips
+        # the flag and enqueues its sentinel under the same lock, so either
+        # this request lands BEFORE the sentinel (and is served/drained) or
+        # the submit raises — a request can never slip in behind the drain
+        # and leave its future forever unresolved
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            if self._dim is None:
+                self._dim = req.x.shape[0]
+            elif req.x.shape[0] != self._dim:
+                raise ValueError(f"request has {req.x.shape[0]} features, "
+                                 f"batcher serves d={self._dim}")
+            self._n_requests += 1
+            self._queue.put(req)
+        return req.future
+
+    def close(self) -> None:
+        """Stop the worker.  Everything already submitted is served first:
+        submit() and close() serialize on one lock, so every accepted
+        request sits FIFO-ahead of the stop sentinel and the worker flushes
+        them all before it exits."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._queue.put(None)                   # wake + stop sentinel
+        self._worker.join()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- worker side --------------------------------------------------------
+
+    def _run(self) -> None:
+        while True:
+            req = self._queue.get()                 # IDLE
+            if req is None:
+                return
+            batch = [req]                           # FILLING
+            deadline = time.perf_counter() + self.max_wait_s
+            while len(batch) < self.max_batch:
+                try:
+                    # anything ALREADY queued joins the batch immediately —
+                    # under backlog the deadline never delays (or starves)
+                    # coalescing, it only bounds the wait for new arrivals
+                    nxt = self._queue.get_nowait()
+                except queue.Empty:
+                    timeout = deadline - time.perf_counter()
+                    if timeout <= 0:
+                        break
+                    try:
+                        nxt = self._queue.get(timeout=timeout)
+                    except queue.Empty:
+                        break
+                if nxt is None:
+                    self._flush(batch)
+                    return
+                batch.append(nxt)
+            self._flush(batch)                      # FLUSH -> IDLE
+
+    def _flush(self, batch: list[_Request]) -> None:
+        try:
+            out = self.predict_fn(np.stack([r.x for r in batch]))
+        except BaseException as e:
+            for r in batch:
+                r.future.set_exception(e)
+            return
+        now = time.perf_counter()
+        with self._lock:
+            if self._t_first is None:
+                self._t_first = batch[0].t_submit
+            self._t_last = now
+            self._n_batches += 1
+            self._batch_rows += len(batch)
+            self._n_served += len(batch)
+            for r in batch:
+                self._latencies.append(now - r.t_submit)
+        for r, row in zip(batch, np.asarray(out)):
+            r.future.set_result(row)
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Snapshot: served/batch counts, mean coalesced batch size, sliding-
+        window latency percentiles (us), achieved QPS, live queue depth."""
+        with self._lock:
+            lat = sorted(self._latencies)
+            span = (self._t_last - self._t_first) \
+                if self._t_first is not None and self._t_last is not None \
+                else 0.0
+            return {
+                "requests": self._n_requests,
+                "served": self._n_served,
+                "batches": self._n_batches,
+                "mean_batch": (self._batch_rows / self._n_batches
+                               if self._n_batches else 0.0),
+                "queue_depth": self._queue.qsize(),
+                "p50_us": percentile(lat, 50) * 1e6,
+                "p99_us": percentile(lat, 99) * 1e6,
+                "qps": self._n_served / span if span > 0 else 0.0,
+            }

@@ -1,8 +1,11 @@
-"""Perf regression gate over the committed BENCH_matvec.json (--runslow).
+"""Perf regression gates over the committed BENCH_*.json files (--runslow).
 
 Reruns the matvec benchmark section at the committed sizes and fails when
-``reference_us`` or ``fused_us`` regresses more than 1.3x — see
-``benchmarks/check_regression.py`` for the standalone CLI form.
+``reference_us`` or ``fused_us`` regresses more than 1.3x; reruns the
+serving warm/cached single-query sections against BENCH_serving.json and
+additionally pins the subsystem's two structural speedups (warm >= 5x cold,
+cache hit >= 10x warm) — see ``benchmarks/check_regression.py`` for the
+standalone CLI form.
 """
 import pathlib
 import sys
@@ -21,3 +24,31 @@ def test_matvec_perf_no_regression():
     if not rows:
         pytest.skip("baseline recorded on a different platform")
     assert not failures, "\n".join(failures)
+
+
+def test_serving_latency_no_regression():
+    from benchmarks.check_regression import (DEFAULT_SERVING_BASELINE,
+                                             check_serving)
+    assert DEFAULT_SERVING_BASELINE.exists(), \
+        "committed BENCH_serving.json missing"
+    failures, best = check_serving()
+    if not best:
+        pytest.skip("baseline recorded on a different platform")
+    assert not failures, "\n".join(failures)
+
+
+def test_serving_structural_speedups():
+    """Acceptance pins: the warm path must beat the compile-included cold
+    first call by >= 5x, and a bucket-exact cache hit must beat the warm
+    featurize+readout path by >= 10x.  Best-of-3 on the cache ratio — the
+    shared-container timing distribution is bursty and only the quiet mode
+    is reproducible (see benchmarks/common.time_fn)."""
+    from benchmarks import bench_serving
+    res = bench_serving.run(iters=100, batch_requests=0, offered_qps=(),
+                            repeats=3)
+    warm = res["warm_speedup_vs_cold"]
+    cache = res["cache_speedup_vs_warm"]
+    assert warm >= 5.0, \
+        f"warm path only {warm:.1f}x faster than cold first call"
+    assert cache >= 10.0, \
+        f"cache hit only {cache:.1f}x faster than warm path"

@@ -156,6 +156,62 @@ def test_manager_async_save_and_gc():
         assert steps == [3, 4]
 
 
+def test_latest_step_ignores_killed_writer_tmp():
+    """A crash-window .tmp dir left by a writer killed mid-save — even one
+    with a complete-looking payload inside — must be invisible to discovery
+    and to restore."""
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, _state(1.0))
+        # simulate a killed writer: full payload, but never renamed
+        crash = os.path.join(d, "step_9.tmp")
+        os.makedirs(crash)
+        np.savez(os.path.join(crash, "arrays.npz"), x=np.zeros(2))
+        with open(os.path.join(crash, "meta.json"), "w") as fh:
+            fh.write('{"step": 9}')
+        assert latest_step(d) == 3
+        state, step, _ = restore_checkpoint(d, _state())
+        assert step == 3
+        np.testing.assert_allclose(state["a"], 1.0)
+        # age the leftover past the staleness window (a FRESH tmp dir could
+        # be another writer's in-flight save and must survive gc)
+        old = os.path.getmtime(crash) - CheckpointManager.STALE_TMP_SECONDS - 1
+        os.utime(crash, (old, old))
+        # the next managed save sweeps the stale tmp dir
+        mgr = CheckpointManager(d, keep=2)
+        mgr.save(4, _state(2.0))
+        mgr.flush()
+        assert not os.path.exists(crash)
+        assert latest_step(d) == 4
+
+
+def test_manager_flush_is_wait_and_propagates_errors():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        mgr.save(1, _state(1.0))
+        mgr.flush()                          # alias of wait()
+        assert latest_step(d) == 1
+        # an async write failure must surface at the join, not vanish in the
+        # daemon thread: make the target directory un-creatable
+        blocker = os.path.join(d, "blocked")
+        with open(blocker, "w") as fh:
+            fh.write("file where the checkpoint dir should go")
+        bad = CheckpointManager(blocker, keep=2)
+        bad.save(2, _state())
+        with pytest.raises(OSError):
+            bad.wait()
+        bad.wait()                           # error is consumed, not sticky
+
+
+def test_manager_blocking_save_raises_inline():
+    with tempfile.TemporaryDirectory() as d:
+        blocker = os.path.join(d, "blocked")
+        with open(blocker, "w") as fh:
+            fh.write("x")
+        mgr = CheckpointManager(blocker, keep=2)
+        with pytest.raises(OSError):
+            mgr.save(1, _state(), blocking=True)
+
+
 def test_elastic_restore_places_with_target_sharding():
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.compat import make_mesh
