@@ -24,6 +24,9 @@ class WLSHKRRConfig:
                                   # jnp reference elsewhere
     fused: bool = True            # one-pass slot-blocked matvec where legal
                                   # (unsharded data axes); split otherwise
+    blocked_split: bool = True    # sharded psum path: visit-list split
+                                  # kernels off the same slot-blocked layout
+                                  # (pallas backend; tables stay psum-able)
     precond: str = "none"         # PCG preconditioner (core/precond.py):
                                   # none | jacobi (any mesh) | nystrom
                                   # (unsharded data axes only)

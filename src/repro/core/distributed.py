@@ -36,6 +36,7 @@ from ..compat import shard_map
 from .bucket_fns import BucketFn
 from .lsh import GammaPDF, LSHParams, sample_lsh_params
 from .operator import WLSHOperator
+from .wlsh import build_blocked_layout
 from .precond import (DEFAULT_NYSTROM_RANK, PRECOND_NAMES, jacobi_precond,
                       nystrom_precond, table_diag)
 
@@ -51,18 +52,24 @@ class KRRStepConfig(NamedTuple):
     model_axis: str = "model"
     backend: str = "auto"  # operator backend inside each shard
     fused: bool = True     # one-pass local matvec when the data axes are size 1
+    blocked_split: bool = True  # visit-list split kernels for the sharded
+                                # psum path (pallas backend; the (m, B)
+                                # tables stay in HBM so the psum is unchanged)
     precond: str = "none"  # 'none' | 'jacobi' (any mesh) | 'nystrom'
                            # (unsharded data axes only — see make_krr_step)
     precond_rank: int = DEFAULT_NYSTROM_RANK
 
 
-def _shard_operator(cfg: KRRStepConfig, f: BucketFn,
-                    lsh_local: LSHParams) -> WLSHOperator:
+def _shard_operator(cfg: KRRStepConfig, f: BucketFn, lsh_local: LSHParams,
+                    *, fused: bool | None = None) -> WLSHOperator:
     """Per-shard operator over the local LSH slice (backend resolved at
-    trace time — shard_map bodies must see a concrete choice)."""
+    trace time — shard_map bodies must see a concrete choice).  ``fused``
+    overrides cfg.fused: a data-sharded step passes False so a blocked
+    index is built with the split kernels' geometry, not the fused one's."""
     return WLSHOperator(lsh=lsh_local, bucket=f, table_size=cfg.table_size,
                         backend=resolve_backend(cfg.backend),
-                        interpret=default_interpret(), fused=cfg.fused)
+                        interpret=default_interpret(),
+                        fused=cfg.fused if fused is None else fused)
 
 
 def _data_shard_count(mesh: Mesh, cfg: KRRStepConfig) -> int:
@@ -92,6 +99,12 @@ def make_distributed_matvec(cfg: KRRStepConfig, op: WLSHOperator, *,
     (model-parallel-only meshes) there is nothing to merge, and the fused
     one-pass matvec (slot-blocked index) runs locally with only the final
     model-axis psum.
+
+    The split sandwich itself is still visit-list scheduled when the index
+    carries the slot-blocked layout (``cfg.blocked_split``, pallas backend):
+    ``op.loads``/``op.readout`` dispatch to the blocked split kernels, which
+    walk only the O(n/bn + B/bt) real collisions per pass while landing the
+    same psum-able (m_loc, B[, k]) tables in HBM.
     """
     local_fused = cfg.fused and n_data_shards == 1
 
@@ -211,6 +224,11 @@ def make_krr_step(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
     out_specs = (data_spec, P(), P(cfg.model_axis, None))
     n_data = _data_shard_count(mesh, cfg)
     local_fused = cfg.fused and n_data == 1
+    # sharded data axes keep the split (psum-able) sandwich, but the pallas
+    # scatter/gather still follow the slot-blocked visit lists when the
+    # index carries the layout — only the reference split path ignores it
+    want_blocked = local_fused or (
+        cfg.blocked_split and resolve_backend(cfg.backend) == "pallas")
     if cfg.precond == "nystrom" and n_data != 1:
         raise ValueError(
             "precond='nystrom' needs unsharded data axes (its pivot columns "
@@ -219,10 +237,8 @@ def make_krr_step(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
     @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs)
     def step(x_local, y_local, lsh_local):
-        op = _shard_operator(cfg, f, lsh_local)
-        # the slot-blocked layout is only consumed by the fused local matvec;
-        # sharded data axes stay on the split (psum-able) index
-        idx = op.build_index(op.featurize(x_local), blocked=local_fused)
+        op = _shard_operator(cfg, f, lsh_local, fused=local_fused)
+        idx = op.build_index(op.featurize(x_local), blocked=want_blocked)
         mv = make_distributed_matvec(cfg, op, n_data_shards=n_data)
         pre = _shard_preconditioner(cfg, mv, idx)
         beta_local, resnorm = cg_iterations(lambda v: mv(idx, v), y_local,
@@ -278,81 +294,135 @@ def sample_sharded_lsh(key: jax.Array, m: int, d: int, pdf: GammaPDF,
 # capacity_factor >= 2 with uniform hashing; the estimator stays unbiased in
 # sign expectation, and tests compare against the exact table mode).
 #
+# The routing is built off the slot-blocked layout's per-instance stable
+# slot sort (core/wlsh.py): owner shards are slot//spp, so owner grouping
+# falls out of the already-sorted slot order — no second argsort — and
+# duplicate (instance, slot) pairs collapse to ONE routed cell per distinct
+# bucket (contributions pre-summed by the layout's segment ids before they
+# touch the wire; values broadcast back through the same ids).  The wire
+# payload is the deduplicated slot set, never more than the owner's
+# m_loc·spp table cells.
+#
 # This path's scatter/readout is NOT the operator's dense-table primitive —
 # it is a different algorithm (table sharded over data, all_to_all routing),
 # so only featurization/indexing is shared with the operator.
 
 class _Routing(NamedTuple):
-    bpos: Array        # (E,) destination bucket cell per entry (sentinel = NB)
-    sidx: Array        # (NB,) source entry per bucket cell (sentinel = E)
-    recv_packed: Array # (NB,) received (m*spp + slot%spp) ids after a2a
+    useg_cell: Array   # (E,) destination cell per (instance, bucket) segment,
+                       #   indexed by inst·n_loc + seg (sentinel = NB)
+    usidx: Array       # (NB,) flat segment id per cell (sentinel = E)
+    recv_packed: Array # (NB,) received (inst·spp + slot%spp) ids after a2a
     spp: int           # slots per shard
     cap: int           # bucket capacity per destination shard
 
 
-def _build_routing(slot: Array, n_shards: int, table_size: int,
-                   data_axes, cap_factor: float) -> _Routing:
-    """Precompute the entry <-> bucket-cell maps and exchange slot requests.
-    slot (m_loc, n_loc); runs once per CG solve (slots are fixed)."""
+def _routing_maps(slot: Array, lay, n_shards: int, table_size: int,
+                  cap_factor: float):
+    """Pure half of the routing build (no collectives — unit-lowerable):
+    derive the segment <-> cell maps and per-destination slot requests from
+    the layout's slot sort.  Contains NO sort: owners ascend with the
+    already-sorted slots, so group starts come from ``searchsorted`` and
+    in-group ranks from the layout's segment ids."""
     m_loc, n_loc = slot.shape
     e = m_loc * n_loc
     spp = table_size // n_shards
     cap = max(8, int(-(-e * cap_factor // n_shards) // 8 * 8))
+    # a cell is a distinct (instance, slot) pair at its owner: never more
+    # than the owner's m_loc*spp table cells (exact => dedup cannot drop)
+    cap = min(cap, m_loc * spp)
     nb = n_shards * cap
 
-    flat_slot = slot.reshape(-1)
-    owner = (flat_slot // spp).astype(jnp.int32)
-    packed = (jnp.arange(e, dtype=jnp.int32) // n_loc) * spp + \
-        (flat_slot % spp)                                     # m_idx*spp + mod
+    inst = jnp.arange(m_loc, dtype=jnp.int32)[:, None]
+    ss = jnp.take_along_axis(slot, lay.perm, axis=1)          # sorted slots
+    owner = (ss // spp).astype(jnp.int32)                     # ascending rows
+    is_first = jnp.concatenate(
+        [jnp.ones((m_loc, 1), bool), ss[:, 1:] != ss[:, :-1]], axis=1)
+    # distinct buckets per (instance, owner) and their cross-instance offsets
+    ucount = jnp.zeros((m_loc, n_shards), jnp.int32).at[inst, owner].add(
+        is_first.astype(jnp.int32))
+    off = jnp.cumsum(ucount, axis=0) - ucount                 # exclusive
+    # rank of each distinct bucket inside its (instance, owner) group:
+    # segment id minus the segment id at the owner group's first position
+    fpos = jax.vmap(lambda o: jnp.searchsorted(
+        o, jnp.arange(n_shards, dtype=o.dtype)))(owner)
+    fpos = jnp.minimum(fpos, n_loc - 1).astype(jnp.int32)
+    first_seg = jnp.take_along_axis(lay.seg_id, fpos, axis=1)  # (m, S)
+    rank = lay.seg_id - first_seg[inst, owner]
+    pos = off[inst, owner] + rank
+    keep = is_first & (pos < cap)
+    cell = jnp.where(keep, owner * cap + pos, nb)              # (m, n)
+    flat_seg = inst * n_loc + lay.seg_id                       # (m, n)
+    useg_cell = jnp.full((e,), nb, jnp.int32).at[
+        jnp.where(keep, flat_seg, e).reshape(-1)].set(
+        cell.reshape(-1), mode="drop")
+    usidx = jnp.full((nb,), e, jnp.int32).at[cell.reshape(-1)].set(
+        flat_seg.reshape(-1), mode="drop")
+    packed = inst * spp + (ss % spp).astype(jnp.int32)
+    send_packed = jnp.full((nb,), -1, jnp.int32).at[cell.reshape(-1)].set(
+        packed.reshape(-1), mode="drop").reshape(n_shards, cap)
+    return useg_cell, usidx, send_packed, spp, cap
 
-    order = jnp.argsort(owner)
-    so, sidx_entries = owner[order], jnp.arange(e, dtype=jnp.int32)[order]
-    start = jnp.searchsorted(so, jnp.arange(n_shards, dtype=so.dtype))
-    pos = jnp.arange(e, dtype=jnp.int32) - start[so].astype(jnp.int32)
-    keep = pos < cap
-    cell = jnp.where(keep, so.astype(jnp.int32) * cap + pos, nb)
 
-    bpos = jnp.full((e,), nb, jnp.int32).at[sidx_entries].set(
-        jnp.where(keep, cell, nb), mode="drop")               # entry -> cell
-    sidx = jnp.full((nb,), e, jnp.int32).at[cell].set(sidx_entries,
-                                                      mode="drop")
-    # send each destination the packed ids it must serve (fixed per solve)
-    send_packed = jnp.full((nb,), -1, jnp.int32).at[cell].set(
-        packed[sidx_entries], mode="drop").reshape(n_shards, cap)
+def _build_routing(slot: Array, lay, n_shards: int, table_size: int,
+                   data_axes, cap_factor: float) -> _Routing:
+    """Precompute the segment <-> cell maps and exchange slot requests.
+    slot (m_loc, n_loc); ``lay`` is the slot-blocked layout's reference
+    group (perm/seg_id/seg_pt).  Runs once per CG solve (slots are fixed)."""
+    useg_cell, usidx, send_packed, spp, cap = _routing_maps(
+        slot, lay, n_shards, table_size, cap_factor)
     recv_packed = jax.lax.all_to_all(send_packed, data_axes, 0, 0,
                                      tiled=True).reshape(-1)
-    return _Routing(bpos=bpos, sidx=sidx, recv_packed=recv_packed, spp=spp,
-                    cap=cap)
+    return _Routing(useg_cell=useg_cell, usidx=usidx,
+                    recv_packed=recv_packed, spp=spp, cap=cap)
 
 
-def _hashjoin_matvec(rt: _Routing, coeff: Array, m_total: int,
-                     m_loc: int, data_axes, model_axis, beta_local: Array,
-                     payload_dtype=jnp.float32):
-    """payload_dtype=bfloat16 halves bucket/wire bytes; the table scatter-add
-    still accumulates in f32, so only individual contributions are rounded
-    (CG tolerates the ~0.4% relative matvec noise; tests pin the accuracy).
-    ``coeff`` is the index's precomputed weight·sign (m_loc, n_loc)."""
+def _hashjoin_loads(rt: _Routing, lay, m_loc: int, n_loc: int, data_axes,
+                    beta_local: Array, payload_dtype=jnp.float32) -> Array:
+    """Route the deduplicated per-bucket contribution sums to their owner
+    shards and scatter-add into MY (m_loc·spp,) table shard.  One wire float
+    per distinct (instance, slot) pair — the layout's segment sum collapses
+    same-bucket points before the all_to_all."""
     n_shards = rt.recv_packed.shape[0] // rt.cap
     nb = n_shards * rt.cap
-    contrib = (beta_local[None, :] * coeff).reshape(-1)           # (E,)
-    # route contributions to slot owners
-    send_c = jnp.zeros((nb,), payload_dtype).at[rt.bpos].set(
-        contrib.astype(payload_dtype), mode="drop")
+    contrib_sorted = lay.coeff_sorted * beta_local[lay.perm]   # (m, n)
+    usum = jax.vmap(lambda c, s: jax.ops.segment_sum(
+        c, s, num_segments=n_loc))(contrib_sorted, lay.seg_id)
+    send_c = jnp.zeros((nb,), payload_dtype).at[rt.useg_cell].set(
+        usum.reshape(-1).astype(payload_dtype), mode="drop")
     recv_c = jax.lax.all_to_all(send_c.reshape(n_shards, rt.cap), data_axes,
                                 0, 0, tiled=True).reshape(-1)
-    # local scatter-add into MY table shard (m_loc, spp)
     valid = rt.recv_packed >= 0
     ids = jnp.where(valid, rt.recv_packed, m_loc * rt.spp)
-    table = jnp.zeros((m_loc * rt.spp,), jnp.float32).at[ids].add(
+    return jnp.zeros((m_loc * rt.spp,), jnp.float32).at[ids].add(
         recv_c.astype(jnp.float32), mode="drop")
+
+
+def _hashjoin_matvec(rt: _Routing, lay, coeff: Array, m_total: int,
+                     m_loc: int, data_axes, model_axis, beta_local: Array,
+                     payload_dtype=jnp.float32):
+    """payload_dtype=bfloat16 halves the wire bytes; the per-bucket segment
+    sums are computed in f32 and rounded once at the a2a boundary (each
+    way), and the owner's cross-shard scatter-add still accumulates in f32
+    — so the noise is one bf16 rounding per distinct (instance, slot) per
+    hop, not per point (CG tolerates it; tests pin the accuracy).
+    ``coeff`` is the index's precomputed weight·sign (m_loc, n_loc); ``lay``
+    the slot-blocked layout whose sort/segments route one value per
+    distinct bucket each way."""
+    n_shards = rt.recv_packed.shape[0] // rt.cap
+    n_loc = coeff.shape[1]
+    table = _hashjoin_loads(rt, lay, m_loc, n_loc, data_axes, beta_local,
+                            payload_dtype)
     # serve the (fixed) readout requests and route values back
+    valid = rt.recv_packed >= 0
     vals_serve = jnp.where(valid, table[jnp.clip(rt.recv_packed, 0)],
                            0.0).astype(payload_dtype)
     back = jax.lax.all_to_all(vals_serve.reshape(n_shards, rt.cap), data_axes,
                               0, 0, tiled=True).reshape(-1)
-    vals = jnp.zeros((coeff.size,), jnp.float32).at[rt.sidx].set(
-        back.astype(jnp.float32), mode="drop")
-    out = jnp.sum(vals.reshape(coeff.shape) * coeff, axis=0)
+    # one value per distinct bucket, broadcast to its points via seg_pt
+    uval = jnp.zeros((coeff.size,), jnp.float32).at[rt.usidx].set(
+        back.astype(jnp.float32), mode="drop").reshape(m_loc, n_loc)
+    vals = jnp.take_along_axis(uval, lay.seg_pt, axis=1)
+    out = jnp.sum(vals * coeff, axis=0)
     return jax.lax.psum(out, model_axis) / m_total
 
 
@@ -361,6 +431,12 @@ def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
                            payload_dtype=jnp.float32):
     """Hash-join variant of make_krr_step (same signature; returns
     (beta, resnorm, table_shard) with the table left SHARDED over data).
+
+    The routing is derived from the slot-blocked layout's per-instance slot
+    sort (owner grouping and per-bucket dedup fall out of the sorted order —
+    no second sort; `tests/test_blocked_split.py` pins the op count), and
+    the all_to_all payloads carry one float per distinct (instance, slot)
+    pair each way.
 
     Single-RHS, unpreconditioned only: its scatter routes one contribution
     stream per entry, and a silently-dropped cfg.precond would leave the
@@ -388,23 +464,20 @@ def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
                              "make_krr_step for (n, k) target blocks")
         op = _shard_operator(cfg, f, lsh_local)
         idx = op.build_index(op.featurize(x_local), blocked=False)
-        m_loc = idx.slot.shape[0]
-        rt = _build_routing(idx.slot, n_shards, cfg.table_size, cfg.data_axes,
-                            cap_factor)
-        mv = lambda v: _hashjoin_matvec(rt, idx.coeff, cfg.m,
+        m_loc, n_loc = idx.slot.shape
+        # the routing rides the slot-blocked layout's stable slot sort —
+        # the ONLY sort in the step (the old path re-sorted by owner shard)
+        lay = build_blocked_layout(idx.slot, idx.coeff, cfg.table_size,
+                                   parts="reference")
+        rt = _build_routing(idx.slot, lay, n_shards, cfg.table_size,
+                            cfg.data_axes, cap_factor)
+        mv = lambda v: _hashjoin_matvec(rt, lay, idx.coeff, cfg.m,
                                         m_loc, cfg.data_axes, cfg.model_axis,
                                         v, payload_dtype)
         beta_local, resnorm = cg_iterations(mv, y_local, cfg)
         # final sharded prediction table for the solved beta
-        contrib = (beta_local[None, :] * idx.coeff).reshape(-1)
-        send_c = jnp.zeros((n_shards * rt.cap,), jnp.float32).at[rt.bpos].set(
-            contrib, mode="drop")
-        recv_c = jax.lax.all_to_all(send_c.reshape(n_shards, rt.cap),
-                                    cfg.data_axes, 0, 0, tiled=True).reshape(-1)
-        valid = rt.recv_packed >= 0
-        ids = jnp.where(valid, rt.recv_packed, m_loc * rt.spp)
-        table = jnp.zeros((m_loc * rt.spp,), jnp.float32).at[ids].add(
-            recv_c, mode="drop")
+        table = _hashjoin_loads(rt, lay, m_loc, n_loc, cfg.data_axes,
+                                beta_local)
         return beta_local, resnorm, table.reshape(m_loc, rt.spp)
 
     return step

@@ -40,7 +40,8 @@ import jax.numpy as jnp
 from ..backend import default_interpret, resolve_backend
 from .bucket_fns import BucketFn
 from .lsh import Features, LSHParams, featurize as featurize_reference
-from .wlsh import (ExactIndex, TableIndex, build_blocked_layout,
+from .wlsh import (BLOCKED_N, BLOCKED_SPLIT_N, BLOCKED_SPLIT_T, BLOCKED_T,
+                   ExactIndex, TableIndex, build_blocked_layout,
                    build_exact_index, build_table_index, exact_matvec,
                    table_loads, table_matvec_fused, table_readout)
 
@@ -86,19 +87,29 @@ class WLSHOperator(NamedTuple):
         sorted-bucket ExactIndex (reference-only validation path).
 
         ``blocked`` attaches the slot-blocked layout (one-off per-instance
-        sort + per-tile offsets) that the fused matvec consumes; ``None``
-        follows the operator's ``fused`` flag.  Readout-only consumers
-        (prediction) pass ``blocked=False`` to skip the sort.
+        sort + per-tile offsets) consumed by the fused matvec AND by the
+        pallas split scatter/gather (``loads``/``readout`` dispatch to the
+        visit-list kernels when the layout is present — the distributed
+        psum path schedules only real collisions while keeping the
+        (m, B[, k]) tables in HBM).  ``None`` follows the operator's
+        ``fused`` flag.  Readout-only consumers (prediction) pass
+        ``blocked=False`` to skip the sort.
         """
         if mode == "table":
             idx = build_table_index(feats, self.table_size)
             want_blocked = self.fused if blocked is None else blocked
             if want_blocked:
                 # only materialize the array group this backend's fused
-                # matvec consumes (the groups are disjoint and O(mn)-sized)
+                # matvec consumes (the groups are disjoint and O(mn)-sized).
+                # A pallas layout destined for the split kernels (operator
+                # not fused — e.g. the data-sharded psum path) takes the
+                # split-tuned geometry; the fused kernel keeps its own.
+                split_only = self.backend == "pallas" and not self.fused
+                bn = BLOCKED_SPLIT_N if split_only else BLOCKED_N
+                bt = BLOCKED_SPLIT_T if split_only else BLOCKED_T
                 idx = idx._replace(blocked=build_blocked_layout(
                     idx.slot, idx.coeff, self.table_size,
-                    parts=self.backend))
+                    block_n=bn, block_t=bt, parts=self.backend))
             return idx
         if mode == "exact":
             return build_exact_index(feats)
@@ -108,7 +119,10 @@ class WLSHOperator(NamedTuple):
 
     def loads(self, index: TableIndex, beta: Array) -> Array:
         """Bucket-load tables for beta — the psum-able object.  (m, B) for a
-        (n,) beta; (m, B, k) for a (n, k) RHS block (columns independent)."""
+        (n,) beta; (m, B, k) for a (n, k) RHS block (columns independent).
+        On the pallas backend an index carrying the slot-blocked layout
+        scatters through the visit-list kernel (O(n/bn + B/bt) grid) instead
+        of the (n/bn)·(B/bt) cross product — same tables, same psum."""
         if self.backend == "pallas":
             from ..kernels.binning import bin_loads_op
             return bin_loads_op(index, beta, interpret=self.interpret)

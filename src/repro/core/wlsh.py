@@ -96,6 +96,15 @@ def exact_kernel_matrix(feats: Features) -> Array:
 BLOCKED_N = 128
 BLOCKED_T = 512
 
+# Default geometry when the layout feeds the *split* visit-list kernels
+# (distributed psum path).  Their per-step cost is dominated by the one-hot
+# materialization plus an HBM table-tile round trip per visit, so a narrower
+# point block wins on CPU/interpret (measured 4.3x vs 2.6x at bn=128 over
+# the cross-product split, n=1024).  bn = 64 is half an MXU contraction —
+# on-device retuning rides the ROADMAP "TPU validation" item.
+BLOCKED_SPLIT_N = 64
+BLOCKED_SPLIT_T = 512
+
 
 class BlockedLayout(NamedTuple):
     """Slot-blocked point layout for a fixed (point set, table geometry).
@@ -116,6 +125,22 @@ class BlockedLayout(NamedTuple):
     both passes.  Visits past ``n_visits[s]`` re-gather the last real block
     (idempotent no-ops that keep the grid static).
 
+    The **split** kernels (distributed psum path — the (m, B) table must
+    round-trip through HBM as the scatter→psum→gather barrier) ride the same
+    sort through two per-pass schedules of NB visits each instead of the
+    (n/bn)·(B/bt) cross product:
+
+    * ``vs_block``/``vs_tile`` drive ``bin_scatter_blocked_pallas``: every
+      table tile is visited at least once (tiles ascending, each tile's
+      visits contiguous, so the revisited HBM output tile is zeroed exactly
+      once on its first visit) — tiles no point hashes into get one visit
+      pairing them with the all-padding layout block, which zeroes them
+      explicitly and adds nothing.
+    * ``vg_tile[s, j]`` is the one tile layout block j addresses, driving
+      ``bin_gather_blocked_pallas`` (every block written exactly once;
+      padding blocks carry slot 0 and read tile 0 — positions never mapped
+      back through ``inv_pos``).
+
     Each backend consumes a disjoint array group, so ``build_blocked_layout``
     gates construction on ``parts`` ('reference' | 'pallas' | 'both'); the
     unbuilt group's fields are None.
@@ -134,6 +159,11 @@ class BlockedLayout(NamedTuple):
     v_block: Array    # (m, V) int32 — visit -> layout block
     v_tile: Array     # (m, V) int32 — visit -> table tile
     v_phase: Array    # (m, V) int32 — 0 scatter, 1 gather
+    # pallas split-kernel (per-pass) schedules, NB = n//bn + ceil(B/bt):
+    vs_block: Array   # (m, NB) int32 — scatter visit -> layout block
+    vs_tile: Array    # (m, NB) int32 — scatter visit -> table tile (covers
+                      #   every tile at least once; ascending, contiguous)
+    vg_tile: Array    # (m, NB) int32 — layout block -> its table tile
     # always present:
     n_visits: Array   # (m,) int32 — real visits (<= V = 2·(n//bn + B/bt))
     block_n: int
@@ -244,18 +274,46 @@ def build_blocked_layout(slot: Array, coeff: Array, table_size: int, *,
             v_block = jnp.where(pad, last_b, v_block)
             v_tile = jnp.where(pad, block_tile[last_b], v_tile)
             v_phase = jnp.where(pad, 1, v_phase)
+
+            # split-kernel per-pass schedules (NB visits each).  Scatter:
+            # tile t owns visits [vstart[t], vstart[t+1]) with at least one
+            # visit per tile — empty tiles pair with layout block nb-1,
+            # which is all padding (coeff 0) whenever an empty tile exists
+            # (total_blocks <= n//bn + #nonempty <= nb-1), so the visit
+            # zeroes the tile's HBM output and adds nothing.
+            ksched = jnp.maximum(kblocks, 1)
+            vstart = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                      jnp.cumsum(ksched).astype(jnp.int32)])
+            total_sched = vstart[-1]
+            vj = jnp.arange(nb, dtype=jnp.int32)
+            s_tile = jnp.minimum(
+                jnp.searchsorted(vstart[1:], vj, side="right"),
+                num_tiles - 1).astype(jnp.int32)
+            q_s = vj - vstart[s_tile]
+            s_block = jnp.where(counts[s_tile] > 0,
+                                blk_start[s_tile] + q_s, nb - 1)
+            # trailing padding visits revisit the last tile (no re-zeroing:
+            # same tile as the previous visit) with the all-padding block
+            pad_s = vj >= total_sched
+            vs_tile = jnp.where(pad_s, num_tiles - 1, s_tile)
+            vs_block = jnp.where(pad_s, nb - 1, s_block)
+            # gather: block j reads its own tile exactly once; padding
+            # blocks (slot_lay 0) read tile 0
+            vg_tile = jnp.where(vj < total_blocks, block_tile, 0)
             pal_group = (inv_pos, src, slot_lay, coeff_lay,
-                         v_block, v_tile, v_phase)
+                         v_block, v_tile, v_phase,
+                         vs_block, vs_tile, vg_tile)
         return ref_group, pal_group, 2 * total_blocks
 
     ref_group, pal_group, n_visits = jax.vmap(one)(slot, coeff)
     perm, seg_id, seg_pt, coeff_sorted = ref_group or (None,) * 4
-    (inv_pos, src, slot_lay, coeff_lay,
-     v_block, v_tile, v_phase) = pal_group or (None,) * 7
+    (inv_pos, src, slot_lay, coeff_lay, v_block, v_tile, v_phase,
+     vs_block, vs_tile, vg_tile) = pal_group or (None,) * 10
     return BlockedLayout(perm=perm, seg_id=seg_id, seg_pt=seg_pt,
                          coeff_sorted=coeff_sorted, inv_pos=inv_pos, src=src,
                          slot_lay=slot_lay, coeff_lay=coeff_lay,
                          v_block=v_block, v_tile=v_tile, v_phase=v_phase,
+                         vs_block=vs_block, vs_tile=vs_tile, vg_tile=vg_tile,
                          n_visits=n_visits.astype(jnp.int32),
                          block_n=bn, block_t=bt, num_tiles=num_tiles)
 

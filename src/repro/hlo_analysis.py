@@ -209,6 +209,15 @@ def materializes_shape(hlo_text: str, dims, dtype: str = "f32") -> bool:
     return (dtype, tuple(int(d) for d in dims)) in tensor_shapes(hlo_text)
 
 
+def count_ops(hlo_text: str, opcode: str) -> int:
+    """Number of ops with this opcode across all computations (no trip
+    weighting).  Used by op-count tests — e.g. the hash-join routing build
+    must contain zero ``sort`` ops (it rides the blocked layout's one)."""
+    comps, _, _ = _parse_module(hlo_text)
+    return sum(1 for c in comps.values() for op in c.ops
+               if op.opcode == opcode)
+
+
 @dataclass
 class HLOStats:
     flops: float = 0.0                # per-device dot FLOPs, trip-weighted

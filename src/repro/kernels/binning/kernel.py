@@ -26,6 +26,17 @@ Two kernel families:
   table tile lives in a VMEM scratch for both the scatter and the gather
   pass — the (m, B) table never exists in HBM.  O(n/bn + B/bt) visits per
   instance: genuinely linear when B = Θ(n).
+* **blocked split** (``bin_scatter_blocked_pallas`` /
+  ``bin_gather_blocked_pallas``) — the split contract (tables in HBM, so
+  the distributed data-axis psum can merge them between the two calls) on
+  the fused kernel's visit schedule: per pass, a scalar-prefetched
+  per-instance list walks only the O(n/bn + B/bt) real (point block, table
+  tile) collisions of the slot-blocked layout.  The scatter schedule visits
+  every tile at least once (empty tiles against an all-padding block), so
+  the HBM output table is explicitly zeroed tile by tile — no tile is left
+  uninitialized by the data-dependent grid.  Multi-RHS is native: the k
+  columns share each one-hot via (k, bn)×(bn, bt) products against
+  (1, k, bt) table blocks.
 """
 from __future__ import annotations
 
@@ -216,6 +227,148 @@ def bin_fused_matvec_pallas(v_block, v_tile, v_phase, slot_lay, coeff_lay,
         out_shape=jax.ShapeDtypeStruct(beta_lay.shape, jnp.float32),
         interpret=interpret,
     )(v_block, v_tile, v_phase, slot_lay, coeff_lay, beta_lay)
+
+
+def _tile_onehot(slot_ref, tile, bt):
+    """(bn, bt) one-hot of this block's slots against table tile ``tile``
+    (slots outside the tile produce all-zero rows)."""
+    slot = slot_ref[...][0]                                  # (bn,) int32
+    col = jax.lax.broadcasted_iota(jnp.int32, (slot.shape[0], bt), 1)
+    return (slot[:, None] - tile * bt == col).astype(jnp.float32)
+
+
+def _scatter_blocked_body(vs_block_ref, vs_tile_ref, slot_ref, contrib_ref,
+                          table_ref, *, multi: bool):
+    """One scatter visit of the blocked split schedule: layout block
+    ``vs_block[i, j]`` accumulates into HBM table tile ``vs_tile[i, j]``.
+
+    A tile's visits are contiguous with tiles ascending, so the revisited
+    output tile stays resident between them and is zeroed exactly once, on
+    its first visit — including tiles no point hashes into, which get one
+    visit against the all-padding layout block (coeff 0 ⇒ adds nothing).
+    ``multi`` selects the multi-RHS blocks: the k columns share each
+    one-hot — (k, bn)×(bn, bt) per visit against a (1, k, bt) table block.
+    """
+    i, j = pl.program_id(0), pl.program_id(1)
+    tile = vs_tile_ref[i, j]
+    prev_tile = vs_tile_ref[i, jnp.maximum(j - 1, 0)]
+
+    @pl.when((j == 0) | (tile != prev_tile))
+    def _zero():
+        table_ref[...] = jnp.zeros_like(table_ref)
+
+    onehot = _tile_onehot(slot_ref, tile, table_ref.shape[-1])
+    contrib = contrib_ref[...][0] if multi else contrib_ref[...]
+    upd = jax.lax.dot_general(contrib, onehot, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    table_ref[...] += upd[None] if multi else upd
+
+
+def _gather_blocked_body(vg_tile_ref, slot_ref, table_ref, out_ref, *,
+                         multi: bool):
+    """One gather visit: layout block j reads the ONE tile it addresses.
+    Every block is written exactly once, so no accumulation or init pass."""
+    i, j = pl.program_id(0), pl.program_id(1)
+    tile = vg_tile_ref[i, j]
+    onehot = _tile_onehot(slot_ref, tile, table_ref.shape[-1])
+    table = table_ref[...][0] if multi else table_ref[...]
+    out = jax.lax.dot_general(table, onehot, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    out_ref[...] = out[None] if multi else out
+
+
+@functools.partial(jax.jit, static_argnames=("num_tiles", "block_n",
+                                             "block_t", "interpret"))
+def bin_scatter_blocked_pallas(vs_block, vs_tile, slot_lay, contrib_lay, *,
+                               num_tiles: int, block_n: int, block_t: int,
+                               interpret: bool = True):
+    """Visit-list scatter over the slot-blocked layout — the split contract
+    (the (m, B) table lands in HBM, psum-able) at the fused kernel's
+    O(n/bn + B/bt) grid cost.
+
+    vs_block/vs_tile (m, NB) int32 — the scatter schedule (scalar-prefetched;
+    every tile visited at least once, tiles ascending and contiguous).
+    slot_lay (m, L) int32 with L a multiple of ``block_n``; ``contrib_lay``
+    is (m, L) for one RHS or (m, k, L) for a k-column block laid out along
+    the same permutation (padding positions carry contribution 0).  Returns
+    tables (m, num_tiles·block_t) f32 — or (m, k, num_tiles·block_t) — with
+    tables[s, ..., b] = sum over layout positions p with slot_lay[s, p] == b
+    of contrib_lay[s, ..., p].
+    """
+    m = slot_lay.shape[0]
+    n_vis = vs_block.shape[1]
+    lay_spec = pl.BlockSpec((1, block_n), lambda i, j, vb, vt: (i, vb[i, j]))
+    multi = contrib_lay.ndim == 3
+    body = functools.partial(_scatter_blocked_body, multi=multi)
+    if not multi:
+        contrib_spec = lay_spec
+        out_spec = pl.BlockSpec((1, block_t),
+                                lambda i, j, vb, vt: (i, vt[i, j]))
+        out_shape = (m, num_tiles * block_t)
+    else:
+        k = contrib_lay.shape[1]
+        contrib_spec = pl.BlockSpec((1, k, block_n),
+                                    lambda i, j, vb, vt: (i, 0, vb[i, j]))
+        out_spec = pl.BlockSpec((1, k, block_t),
+                                lambda i, j, vb, vt: (i, 0, vt[i, j]))
+        out_shape = (m, k, num_tiles * block_t)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m, n_vis),
+        in_specs=[lay_spec, contrib_spec],
+        out_specs=out_spec,
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        interpret=interpret,
+    )(vs_block, vs_tile, slot_lay, contrib_lay)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_t",
+                                             "interpret"))
+def bin_gather_blocked_pallas(vg_tile, slot_lay, tables, *, block_n: int,
+                              block_t: int, interpret: bool = True):
+    """Visit-list gather over the slot-blocked layout: layout block j reads
+    only the ONE table tile ``vg_tile[i, j]`` it addresses — NB grid steps
+    per instance instead of the (L/bn)·(B/bt) cross product.
+
+    tables (m, T·bt) f32 — or (m, k, T·bt) for a k-column RHS block.
+    Returns out_lay of shape (m, L) — or (m, k, L) — with
+    ``out_lay[s, ..., p] = tables[s, ..., slot_lay[s, p]]``.
+    """
+    m, layout_len = slot_lay.shape
+    n_vis = vg_tile.shape[1]
+    if layout_len != n_vis * block_n:
+        raise ValueError("layout length must equal visits * block_n")
+    lay_spec = pl.BlockSpec((1, block_n), lambda i, j, vt: (i, j))
+    multi = tables.ndim == 3
+    body = functools.partial(_gather_blocked_body, multi=multi)
+    if not multi:
+        table_spec = pl.BlockSpec((1, block_t),
+                                  lambda i, j, vt: (i, vt[i, j]))
+        out_spec = lay_spec
+        out_shape = (m, layout_len)
+    else:
+        k = tables.shape[1]
+        table_spec = pl.BlockSpec((1, k, block_t),
+                                  lambda i, j, vt: (i, 0, vt[i, j]))
+        out_spec = pl.BlockSpec((1, k, block_n),
+                                lambda i, j, vt: (i, 0, j))
+        out_shape = (m, k, layout_len)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m, n_vis),
+        in_specs=[lay_spec, table_spec],
+        out_specs=out_spec,
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        interpret=interpret,
+    )(vg_tile, slot_lay, tables)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_n", "block_t"))

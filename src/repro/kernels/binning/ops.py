@@ -30,7 +30,8 @@ from ...backend import default_interpret
 from ...core.wlsh import (TableIndex, table_loads, table_matvec_fused,
                           table_readout)
 from .kernel import (BLOCK_N, BLOCK_T, bin_fused_matvec_pallas,
-                     bin_gather_pallas, bin_scatter_pallas)
+                     bin_gather_blocked_pallas, bin_gather_pallas,
+                     bin_scatter_blocked_pallas, bin_scatter_pallas)
 from .ref import bin_gather_ref, bin_scatter_ref
 
 
@@ -50,12 +51,86 @@ def _block_sizes(n: int, table_size: int, block_n: int, block_t: int):
     return bn, bt
 
 
+def _split_layout(index: TableIndex):
+    """The slot-blocked layout when it carries the split-kernel visit
+    schedules (pallas group), else None."""
+    lay = getattr(index, "blocked", None)
+    return lay if lay is not None and lay.vs_block is not None else None
+
+
+def _beta_to_layout(lay, beta):
+    """Lay beta (n,[ k]) out along the slot permutation: (m, L) or (m, k, L)
+    (padding positions read the appended zero row)."""
+    pad = jnp.zeros((1,) + beta.shape[1:], jnp.float32)
+    beta_lay = jnp.concatenate([jnp.asarray(beta, jnp.float32), pad])[lay.src]
+    return jnp.swapaxes(beta_lay, 1, 2) if beta.ndim == 2 else beta_lay
+
+
+def bin_loads_blocked_op(index: TableIndex, beta, *,
+                         interpret: bool | None = None):
+    """Visit-list split scatter: same (m, B[, k]) psum-able tables as
+    ``bin_loads_op`` at the blocked layout's O(n/bn + B/bt) grid cost.
+    Multi-RHS is native — the k columns share every one-hot tile product
+    instead of re-running the kernel per column."""
+    lay = _split_layout(index)
+    if lay is None:
+        raise ValueError("blocked split scatter needs a slot-blocked index "
+                         "with the pallas group; build it with "
+                         "build_blocked_layout(parts='pallas'|'both') / a "
+                         "pallas-backend build_index(blocked=True)")
+    if interpret is None:
+        interpret = default_interpret()
+    beta_lay = _beta_to_layout(lay, beta)                    # (m,[ k,] L)
+    coeff = lay.coeff_lay if beta.ndim == 1 else lay.coeff_lay[:, None, :]
+    tables = bin_scatter_blocked_pallas(
+        lay.vs_block, lay.vs_tile, lay.slot_lay, coeff * beta_lay,
+        num_tiles=lay.num_tiles, block_n=lay.block_n, block_t=lay.block_t,
+        interpret=interpret)[..., :index.table_size]
+    return jnp.swapaxes(tables, 1, 2) if beta.ndim == 2 else tables
+
+
+def bin_readout_blocked_op(index: TableIndex, tables, *, average: bool = True,
+                           interpret: bool | None = None):
+    """Visit-list split gather of (possibly psum-merged) tables: each layout
+    block reads only the ONE tile it addresses; results map back to point
+    order through the layout's ``inv_pos``."""
+    lay = _split_layout(index)
+    if lay is None:
+        raise ValueError("blocked split gather needs a slot-blocked index "
+                         "with the pallas group; build it with "
+                         "build_blocked_layout(parts='pallas'|'both') / a "
+                         "pallas-backend build_index(blocked=True)")
+    if interpret is None:
+        interpret = default_interpret()
+    multi = tables.ndim == 3
+    bp = lay.num_tiles * lay.block_t
+    t = jnp.swapaxes(tables, 1, 2) if multi else tables      # (m,[ k,] B)
+    t = jnp.pad(t.astype(jnp.float32),
+                ((0, 0),) * (t.ndim - 1) + ((0, bp - index.table_size),))
+    out_lay = bin_gather_blocked_pallas(
+        lay.vg_tile, lay.slot_lay, t, block_n=lay.block_n,
+        block_t=lay.block_t, interpret=interpret)
+    rows = jnp.arange(index.slot.shape[0], dtype=jnp.int32)[:, None]
+    if multi:
+        vals = jnp.swapaxes(out_lay, 1, 2)[rows, lay.inv_pos]  # (m, n, k)
+        signed = vals * index.coeff[:, :, None]
+    else:
+        signed = out_lay[rows, lay.inv_pos] * index.coeff      # (m, n)
+    return jnp.mean(signed, axis=0) if average else jnp.sum(signed, axis=0)
+
+
 def bin_loads_op(index: TableIndex, beta, *, use_kernel: bool = True,
                  interpret: bool | None = None, block_n: int = BLOCK_N,
                  block_t: int = BLOCK_T):
     """Kernel-backed ``table_loads``: (m, B) bucket-load tables for beta (n,),
-    or (m, B, k) for a (n, k) RHS block (the scatter kernel runs per column —
-    the split path stays psum-able; only the fused matvec amortizes k)."""
+    or (m, B, k) for a (n, k) RHS block.  An index carrying the slot-blocked
+    layout takes the visit-list kernels (``bin_loads_blocked_op`` — multi-RHS
+    native) at the LAYOUT'S geometry — ``block_n``/``block_t`` here only
+    shape the cross-product fallback (geometry A/B runs rebuild the layout
+    via ``build_blocked_layout``); otherwise the cross-product scatter runs
+    per column — either way the split path stays psum-able."""
+    if use_kernel and _split_layout(index) is not None:
+        return bin_loads_blocked_op(index, beta, interpret=interpret)
     if beta.ndim == 2:
         cols = [bin_loads_op(index, beta[:, j], use_kernel=use_kernel,
                              interpret=interpret, block_n=block_n,
@@ -84,7 +159,14 @@ def bin_readout_op(index: TableIndex, tables, *, average: bool = True,
     """Kernel-backed ``table_readout``: per-point loads combined over the m
     instances (mean when ``average``, else sum — the distributed path sums
     locally and divides by the global m after its psum).  ``tables`` is
-    (m, B) -> (n,) out, or (m, B, k) -> (n, k) (gather kernel per column)."""
+    (m, B) -> (n,) out, or (m, B, k) -> (n, k).  An index carrying the
+    slot-blocked layout takes the visit-list gather
+    (``bin_readout_blocked_op``) at the layout's own geometry
+    (``block_n``/``block_t`` here shape only the cross-product fallback);
+    otherwise the cross-product kernel runs per column."""
+    if use_kernel and _split_layout(index) is not None:
+        return bin_readout_blocked_op(index, tables, average=average,
+                                      interpret=interpret)
     if tables.ndim == 3:
         cols = [bin_readout_op(index, tables[..., j], average=average,
                                use_kernel=use_kernel, interpret=interpret,

@@ -55,6 +55,14 @@ def main() -> int:
                     help="one-pass slot-blocked matvec for the CG solve "
                          "(used when the data axes are unsharded; --no-fused "
                          "forces the split scatter->gather path for A/B runs)")
+    ap.add_argument("--blocked-split", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="visit-list split kernels for the sharded psum "
+                         "path (pallas backend): scatter/gather walk only "
+                         "real (point block, table tile) collisions while "
+                         "the (m, B) tables stay psum-able; "
+                         "--no-blocked-split keeps the cross-product grid "
+                         "for A/B runs")
     ap.add_argument("--precond", default="none",
                     choices=["none", "jacobi", "nystrom"],
                     help="PCG preconditioner (core/precond.py): jacobi works "
@@ -84,7 +92,8 @@ def main() -> int:
     cfg = KRRStepConfig(m=args.m, table_size=table, lam=args.lam,
                         cg_iters=args.cg_iters, data_axes=("data",),
                         model_axis="model", backend=args.backend,
-                        fused=args.fused, precond=args.precond,
+                        fused=args.fused, blocked_split=args.blocked_split,
+                        precond=args.precond,
                         precond_rank=args.precond_rank)
     f = get_bucket_fn(args.bucket)
     lsh = sample_sharded_lsh(jax.random.PRNGKey(args.seed + 1), args.m, d,

@@ -1,0 +1,213 @@
+"""Blocked distributed matvec: visit-list split kernels + slot-sort routing.
+
+Pins PR 5's acceptance criteria: the blocked split scatter/gather match the
+unblocked split path on both backends (odd n, m=1, non-dividing tiles, k=8
+multi-RHS) — bitwise for the gather, ulp-level for the scatter (the one-hot
+dot reduces a block's same-slot contributions in tree order where the
+sequential scatter-add chains them; same operands, different association) —
+explicit zeroing of table tiles no point hashes into, the per-pass
+O(n/bn + B/bt) visit schedules, and the hash-join routing build containing
+NO sort (it rides the slot-blocked layout's one stable argsort).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GammaPDF, get_bucket_fn, make_operator,
+                        sample_lsh_params)
+from repro.core.distributed import _routing_maps
+from repro.core.wlsh import (BLOCKED_SPLIT_N, BLOCKED_SPLIT_T, TableIndex,
+                             build_blocked_layout, build_table_index,
+                             table_loads, table_matvec, table_readout)
+from repro.hlo_analysis import count_ops
+from repro.kernels.binning import (bin_loads_blocked_op, bin_loads_op,
+                                   bin_readout_blocked_op)
+
+
+def _setup(key, n, d, m, table_size, block_n=64, block_t=512):
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    lsh = sample_lsh_params(jax.random.fold_in(key, 1), m, d,
+                            GammaPDF(2.0, 1.0))
+    beta = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    op = make_operator(lsh, get_bucket_fn("rect"), table_size,
+                       backend="reference", fused=False)
+    feats = op.featurize(x)
+    idx = build_table_index(feats, table_size)
+    lay = build_blocked_layout(idx.slot, idx.coeff, table_size,
+                               block_n=block_n, block_t=block_t,
+                               parts="pallas")
+    return beta, idx, idx._replace(blocked=lay)
+
+
+# odd n, n < block_n, m=1, table sizes from one tile up, non-dividing tiles
+@pytest.mark.parametrize("n,d,m,table_size,bn,bt",
+                         [(97, 3, 2, 512, 64, 512),
+                          (300, 5, 4, 1024, 128, 384),
+                          (128, 2, 1, 256, 64, 512),
+                          (257, 3, 3, 2048, 64, 512)])
+def test_blocked_split_matches_unblocked_split(n, d, m, table_size, bn, bt):
+    key = jax.random.PRNGKey(n + d + m)
+    beta, idx, bidx = _setup(key, n, d, m, table_size, bn, bt)
+    want = table_loads(idx, beta)                    # reference split scatter
+    got = bin_loads_blocked_op(bidx, beta, interpret=True)
+    got_cross = bin_loads_op(idx, beta, interpret=True)
+    assert got.shape == want.shape                   # psum contract unchanged
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    np.testing.assert_allclose(got, got_cross, atol=1e-5)
+    # gather is pure selection — bitwise against both split paths
+    out_want = table_readout(idx, want)
+    out_got = bin_readout_blocked_op(bidx, jnp.asarray(want), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_got), np.asarray(out_want))
+    # sum mode (the distributed model-axis contribution)
+    np.testing.assert_array_equal(
+        np.asarray(bin_readout_blocked_op(bidx, jnp.asarray(want),
+                                          average=False, interpret=True)),
+        np.asarray(table_readout(idx, want, average=False)))
+
+
+def test_blocked_split_multi_rhs_k8():
+    """A (n, 8) RHS block rides the same visit schedule: (m, B, k) tables
+    bitwise-shaped like the per-column split path, values within an ulp."""
+    n, d, m, table_size, k = 300, 4, 3, 1024, 8
+    key = jax.random.PRNGKey(7)
+    _, idx, bidx = _setup(key, n, d, m, table_size)
+    bk = jax.random.normal(jax.random.fold_in(key, 3), (n, k))
+    want = table_loads(idx, bk)                      # (m, B, k)
+    got = bin_loads_blocked_op(bidx, bk, interpret=True)
+    got_cross = bin_loads_op(idx, bk, interpret=True)
+    assert got.shape == want.shape == (m, table_size, k)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    np.testing.assert_allclose(got, got_cross, atol=1e-5)
+    out_want = table_readout(idx, want)
+    out_got = bin_readout_blocked_op(bidx, jnp.asarray(want), interpret=True)
+    assert out_got.shape == (n, k)
+    np.testing.assert_array_equal(np.asarray(out_got), np.asarray(out_want))
+
+
+def test_blocked_split_matvec_through_operator():
+    """The fused=False pallas operator takes the visit-list kernels whenever
+    the index carries the layout — same matvec as the reference split."""
+    n, d, m, table_size = 300, 3, 4, 1024
+    key = jax.random.PRNGKey(11)
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    lsh = sample_lsh_params(jax.random.fold_in(key, 1), m, d,
+                            GammaPDF(2.0, 1.0))
+    beta = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    op = make_operator(lsh, get_bucket_fn("rect"), table_size,
+                       backend="pallas", fused=False)
+    feats = op.featurize(x)
+    bidx = op.build_index(feats, blocked=True)       # split-tuned geometry
+    assert bidx.blocked is not None
+    assert bidx.blocked.block_n == BLOCKED_SPLIT_N
+    assert bidx.blocked.block_t == BLOCKED_SPLIT_T
+    ref = make_operator(lsh, get_bucket_fn("rect"), table_size,
+                        backend="reference", fused=False)
+    ridx = ref.build_index(feats, blocked=False)
+    want = ref.matvec(ridx, beta)
+    np.testing.assert_allclose(op.matvec(bidx, beta), want, atol=1e-5)
+    np.testing.assert_allclose(
+        op.matvec(bidx, beta, average=False),
+        ref.matvec(ridx, beta, average=False), atol=1e-4)
+
+
+def test_blocked_scatter_zeroes_unvisited_tiles():
+    """A table tile no point hashes into must come back EXACTLY zero: the
+    scatter schedule gives it one visit against the all-padding block, which
+    zeroes its HBM tile and adds nothing."""
+    m, n, table_size, bt = 2, 64, 1024, 256          # 4 tiles of 256
+    # every slot in tile 0 or tile 2 — tiles 1 and 3 are never hit
+    key = jax.random.PRNGKey(3)
+    raw = jax.random.randint(key, (m, n), 0, 256)
+    slot = jnp.where(jnp.arange(n)[None, :] % 2 == 0, raw, raw + 512)
+    coeff = jax.random.normal(jax.random.fold_in(key, 1), (m, n))
+    idx = TableIndex(slot=slot.astype(jnp.int32), sign=jnp.sign(coeff),
+                     weight=jnp.abs(coeff), coeff=coeff,
+                     table_size=table_size)
+    lay = build_blocked_layout(idx.slot, idx.coeff, table_size,
+                               block_n=64, block_t=bt, parts="pallas")
+    # the scatter schedule still covers every tile at least once
+    for s in range(m):
+        assert set(np.asarray(lay.vs_tile[s])) == set(range(4))
+    bidx = idx._replace(blocked=lay)
+    beta = jax.random.normal(jax.random.fold_in(key, 2), (n,))
+    tables = bin_loads_blocked_op(bidx, beta, interpret=True)
+    assert bool(jnp.all(tables[:, 256:512] == 0.0))
+    assert bool(jnp.all(tables[:, 768:] == 0.0))
+    np.testing.assert_allclose(tables, table_loads(idx, beta), atol=1e-5)
+    # full round trip through the gather stays exact
+    np.testing.assert_allclose(
+        bin_readout_blocked_op(bidx, tables, interpret=True),
+        table_matvec(idx, beta), atol=1e-5)
+
+
+def test_split_schedule_is_O_n_per_pass():
+    """Each split pass is NB = n/bn + ceil(B/bt) visits per instance — not
+    the (n/bn)·(B/bt) cross product — and the scatter schedule's tiles are
+    ascending with every tile present (the zero-init contract)."""
+    n, d, m, table_size = 4096, 4, 3, 16384
+    bn, bt = 64, 512
+    key = jax.random.PRNGKey(5)
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    lsh = sample_lsh_params(jax.random.fold_in(key, 1), m, d,
+                            GammaPDF(2.0, 1.0))
+    op = make_operator(lsh, get_bucket_fn("rect"), table_size,
+                       backend="reference")
+    idx = op.build_index(op.featurize(x), blocked=False)
+    lay = build_blocked_layout(idx.slot, idx.coeff, table_size,
+                               block_n=bn, block_t=bt, parts="pallas")
+    nb = n // bn + table_size // bt
+    assert lay.vs_block.shape == (m, nb)
+    assert lay.vs_tile.shape == (m, nb)
+    assert lay.vg_tile.shape == (m, nb)
+    assert nb < (n // bn) * (table_size // bt) / 8   # cross product
+    vt = np.asarray(lay.vs_tile)
+    assert (np.diff(vt, axis=1) >= 0).all()          # ascending, contiguous
+    for s in range(m):
+        assert set(vt[s]) == set(range(table_size // bt))
+
+
+def test_routing_maps_contains_no_sort():
+    """Acceptance criterion: the hash-join routing build rides the blocked
+    layout's slot sort — its own lowering contains ZERO sort ops."""
+    m, n, table_size, n_shards = 3, 200, 1024, 4
+    key = jax.random.PRNGKey(9)
+    slot = jax.random.randint(key, (m, n), 0, table_size).astype(jnp.int32)
+    coeff = jax.random.normal(jax.random.fold_in(key, 1), (m, n))
+    lay = build_blocked_layout(slot, coeff, table_size, parts="reference")
+    fn = jax.jit(lambda s, la: _routing_maps(s, la, n_shards, table_size,
+                                             2.0))
+    hlo = fn.lower(slot, lay).compile().as_text()
+    assert count_ops(hlo, "sort") == 0
+    # ... and the layout build itself is exactly the one stable argsort
+    lay_fn = jax.jit(lambda s, c: build_blocked_layout(s, c, table_size,
+                                                       parts="reference"))
+    hlo_lay = lay_fn.lower(slot, coeff).compile().as_text()
+    assert count_ops(hlo_lay, "sort") == 1
+
+
+def test_hashjoin_step_single_device_matches_psum_and_single_sort():
+    """On a trivial mesh the hash-join step must agree with the psum step
+    (dedup exact: cap is bounded by the owner's m·spp distinct cells), and
+    its whole lowered program must contain exactly ONE sort — the layout's."""
+    from repro.compat import make_mesh
+    from repro.core.distributed import (KRRStepConfig, make_krr_step,
+                                        make_krr_step_hashjoin)
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
+    n, d, m, table_size = 192, 3, 4, 512
+    key = jax.random.PRNGKey(6)
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    y = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    lsh = sample_lsh_params(jax.random.fold_in(key, 2), m, d,
+                            GammaPDF(2.0, 1.0))
+    f = get_bucket_fn("rect")
+    cfg = KRRStepConfig(m=m, table_size=table_size, lam=0.5, cg_iters=15,
+                        data_axes=("pod", "data"), model_axis="model",
+                        backend="reference")
+    b_ref, _, _ = jax.jit(make_krr_step(mesh, cfg, f))(x, y, lsh)
+    hj = jax.jit(make_krr_step_hashjoin(mesh, cfg, f))
+    b_hj, _, _ = hj(x, y, lsh)
+    np.testing.assert_allclose(np.asarray(b_hj), np.asarray(b_ref),
+                               atol=1e-5)
+    hlo = hj.lower(x, y, lsh).compile().as_text()
+    assert count_ops(hlo, "sort") == 1
