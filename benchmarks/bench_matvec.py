@@ -246,26 +246,39 @@ for n in ns:
                         data_axes=("pod", "data"), model_axis="model",
                         backend="reference", fused=False)
 
-    def best(fn, reps=3):
-        jax.block_until_ready(fn(x, y, lsh)[0])
+    yk = jax.random.normal(jax.random.fold_in(key, 3), (n, 8))
+
+    def best(fn, tgt, reps=3):
+        jax.block_until_ready(fn(x, tgt, lsh)[0])
         ts = []
         for _ in range(reps):
             t0 = time.perf_counter()
-            jax.block_until_ready(fn(x, y, lsh)[0])
+            jax.block_until_ready(fn(x, tgt, lsh)[0])
             ts.append(time.perf_counter() - t0)
         return min(ts)
 
-    def iter_us(make, **kw):
+    def iter_us(make, tgt=y, **kw):
         # isolate the per-CG-iteration (matvec + collectives) cost: the
         # cg_iters=0 step carries the same featurize/index/routing build
-        full = best(jax.jit(make(mesh, cfg, f, **kw)))
-        zero = best(jax.jit(make(mesh, cfg._replace(cg_iters=0), f, **kw)))
+        full = best(jax.jit(make(mesh, cfg, f, **kw)), tgt)
+        zero = best(jax.jit(make(mesh, cfg._replace(cg_iters=0), f, **kw)),
+                    tgt)
         return max(full - zero, 0.0) / iters * 1e6
 
+    # headline hashjoin_iter_us keeps cap_factor=4.0 + f32 wire — directly
+    # comparable to the committed pre-fusion baseline
+    hj = iter_us(make_krr_step_hashjoin, cap_factor=4.0,
+                 payload_dtype=jnp.float32)
+    hj_k8 = iter_us(make_krr_step_hashjoin, tgt=yk, cap_factor=4.0,
+                    payload_dtype=jnp.float32)
     rows.append({"n": n, "shards": shards, "m": m, "table_size": table_size,
                  "cg_iters": iters, "psum_iter_us": iter_us(make_krr_step),
-                 "hashjoin_iter_us": iter_us(make_krr_step_hashjoin,
-                                             cap_factor=4.0)})
+                 "hashjoin_iter_us": hj,
+                 "hashjoin_bf16_iter_us": iter_us(make_krr_step_hashjoin,
+                                                  cap_factor=4.0),
+                 "hashjoin_k8_iter_us": hj_k8,
+                 "hashjoin_k8_percol_ratio": hj_k8 / (8 * hj) if hj > 0
+                 else None})
 print("DISTROWS:" + json.dumps(rows))
 """
 
@@ -352,9 +365,13 @@ def main(json_path: str | None = None, with_dist: bool = True) -> None:
         if "error" in r:
             print(f"[dist] shards={r['shards']}: FAILED {r['error'][:120]}")
         else:
+            ratio = r.get("hashjoin_k8_percol_ratio")
+            extra = (f" (bf16 {r['hashjoin_bf16_iter_us']:.0f}us, k=8 "
+                     f"per-col {ratio:.2f}x)"
+                     if ratio is not None else "")
             print(f"[dist] n={r['n']} shards={r['shards']}: psum "
                   f"{r['psum_iter_us']:.0f}us/iter, hash-join "
-                  f"{r['hashjoin_iter_us']:.0f}us/iter")
+                  f"{r['hashjoin_iter_us']:.0f}us/iter{extra}")
     e_split = _exponent(rows, "reference_us")
     e_fused = _exponent(rows, "fused_us")
     if json_path:

@@ -1,4 +1,4 @@
-"""Perf regression gates: matvec + serving.
+"""Perf regression gates: matvec + serving + hash-join distributed.
 
 Reruns the matvec benchmark section at the sizes recorded in the committed
 ``BENCH_matvec.json`` and fails when ``reference_us`` or ``fused_us``
@@ -32,6 +32,8 @@ DEFAULT_FACTOR = 1.3
 # serving latencies are single-digit-us dict probes and sub-ms jit dispatch:
 # proportionally noisier than the matvec timing loops, so the gate is looser
 SERVING_FACTOR = 2.0
+# distributed timings come from subprocess fake-CPU meshes (noisier still)
+DIST_FACTOR = 2.0
 CHECKED_KEYS = ("reference_us", "fused_us")
 SERVING_KEYS = ("warm_p50_us", "cached_p50_us")
 
@@ -121,21 +123,114 @@ def check_serving(baseline_path=DEFAULT_SERVING_BASELINE,
     return failures, best
 
 
+def check_distributed(baseline_path=DEFAULT_BASELINE,
+                      factor: float = DIST_FACTOR):
+    """Hash-join fast-path gate: (failures, fresh_rows).
+
+    Reruns the distributed benchmark section (subprocess fake-CPU meshes) at
+    the (n, shards) cells recorded in the committed baseline and fails when:
+
+    * ``hashjoin_iter_us`` regresses more than ``factor`` against the
+      baseline cell (calibration-rescaled, like the matvec gate), or
+    * a baseline cell carries ``hashjoin_prefuse_iter_us`` (the pre-fusion
+      routing cost carried forward at the fusion PR) and the fresh time is
+      not at least 2x below it — the fused route kernels' floor, or
+    * ``hashjoin_k8_percol_ratio`` >= 2.0 — a k=8 RHS block must cost less
+      than 2x a single-RHS iteration per column (the multi-RHS payload
+      amortization contract).
+
+    Subprocess timings on shared runners are noisier than in-process loops,
+    hence the looser default factor.  Error-marker baseline rows and rows
+    missing from the fresh run are skipped, not failed (a runner that
+    cannot spawn N fake devices says nothing about the code)."""
+    import jax
+
+    from . import bench_matvec
+
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    if base.get("platform") != jax.default_backend():
+        return [], []
+    base_cells = {(r["n"], r["shards"]): r
+                  for r in base.get("distributed", []) if "error" not in r}
+    if not base_cells:
+        return [], []
+    scale = 1.0
+    if base.get("calib_us"):
+        scale = max(1.0, bench_matvec.calibration_us() / base["calib_us"])
+    ns = tuple(sorted({n for n, _ in base_cells}))
+    shard_counts = tuple(sorted({s for _, s in base_cells}))
+    fresh = bench_matvec.distributed_rows(ns=ns, shard_counts=shard_counts)
+    failures = []
+    for r in fresh:
+        if "error" in r:
+            continue
+        cell = base_cells.get((r["n"], r["shards"]))
+        if cell is None:
+            continue
+        old = cell.get("hashjoin_iter_us")
+        new = r.get("hashjoin_iter_us")
+        if old and new and new > factor * old * scale:
+            failures.append(
+                f"dist n={r['n']} shards={r['shards']}: hashjoin_iter_us "
+                f"{new:.0f}us > {factor:.2f}x baseline {old:.0f}us "
+                f"(machine scale {scale:.2f})")
+        prefuse = cell.get("hashjoin_prefuse_iter_us")
+        if prefuse and new and new > prefuse * scale / 2.0:
+            failures.append(
+                f"dist n={r['n']} shards={r['shards']}: hashjoin_iter_us "
+                f"{new:.0f}us not >= 2x below pre-fusion "
+                f"{prefuse:.0f}us (machine scale {scale:.2f})")
+        ratio = r.get("hashjoin_k8_percol_ratio")
+        if ratio is not None and ratio >= 2.0:
+            failures.append(
+                f"dist n={r['n']} shards={r['shards']}: k=8 per-column "
+                f"cost {ratio:.2f}x single-RHS (must be < 2x)")
+    return failures, fresh
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
     ap.add_argument("--serving-baseline", default=str(DEFAULT_SERVING_BASELINE))
     ap.add_argument("--factor", type=float, default=DEFAULT_FACTOR)
     ap.add_argument("--serving-factor", type=float, default=SERVING_FACTOR)
+    ap.add_argument("--distributed", action="store_true",
+                    help="also gate the hash-join distributed section "
+                         "(spawns fake-CPU-mesh subprocesses; minutes-scale)")
+    ap.add_argument("--distributed-only", action="store_true",
+                    help="run ONLY the distributed gate (CI multidevice job)")
+    ap.add_argument("--distributed-factor", type=float, default=DIST_FACTOR)
     args = ap.parse_args(argv)
-    failures, rows = check(args.baseline, args.factor)
-    if not rows:
-        print("[check_regression] matvec baseline platform differs — skipped")
+    failures = []
+    rows = []
+    if not args.distributed_only:
+        failures, rows = check(args.baseline, args.factor)
+        if not rows:
+            print("[check_regression] matvec baseline platform differs — "
+                  "skipped")
     for row in rows:
         print(f"[check_regression] n={row['n']}: "
               f"reference_us={row['reference_us']:.0f} "
               f"fused_us={row['fused_us']:.0f}")
-    if pathlib.Path(args.serving_baseline).exists():
+    if args.distributed or args.distributed_only:
+        dfail, dfresh = check_distributed(args.baseline,
+                                          args.distributed_factor)
+        failures += dfail
+        if not dfresh:
+            print("[check_regression] distributed baseline absent or "
+                  "platform differs — skipped")
+        for r in dfresh:
+            if "error" in r:
+                print(f"[check_regression] dist shards={r['shards']}: "
+                      f"measurement FAILED {r['error'][:120]}")
+            else:
+                print(f"[check_regression] dist n={r['n']} "
+                      f"shards={r['shards']}: "
+                      f"hashjoin_iter_us={r['hashjoin_iter_us']:.0f} "
+                      f"psum_iter_us={r['psum_iter_us']:.0f}")
+    if (not args.distributed_only
+            and pathlib.Path(args.serving_baseline).exists()):
         sfail, sbest = check_serving(args.serving_baseline,
                                      args.serving_factor)
         failures += sfail

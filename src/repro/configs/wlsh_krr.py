@@ -34,6 +34,16 @@ class WLSHKRRConfig:
                                   # core.precond.DEFAULT_NYSTROM_RANK)
     num_rhs: int = 1              # RHS block width k: batched KRR targets /
                                   # GP posterior samples per solve
+    table_mode: str = "psum"      # bucket-table merge strategy:
+                                  # psum (dense (m, B) tables; paper-faithful)
+                                  # | hashjoin (table sharded over data,
+                                  # all_to_all nonzero routing — DESIGN.md §6)
+    cap_factor: float = 2.0       # hashjoin per-destination capacity factor
+                                  # (cap ~ cap_factor·e/n_shards; overflow
+                                  # buckets are dropped)
+    wire_dtype: str = "bf16"      # hashjoin all_to_all payload dtype:
+                                  # bf16 (half the bytes, f32 accumulate,
+                                  # accuracy pinned by tests) | f32 (exact)
     notes: str = "paper's technique; data-sharded PCG step over the mesh"
 
 

@@ -36,7 +36,7 @@ from ..compat import shard_map
 from .bucket_fns import BucketFn
 from .lsh import GammaPDF, LSHParams, sample_lsh_params
 from .operator import WLSHOperator
-from .wlsh import build_blocked_layout
+from .wlsh import RouteSchedule, build_route_schedule
 from .precond import (DEFAULT_NYSTROM_RANK, PRECOND_NAMES, jacobi_precond,
                       nystrom_precond, table_diag)
 
@@ -177,6 +177,9 @@ def cg_iterations(matvec, y_local: Array, cfg: KRRStepConfig,
 def _shard_preconditioner(cfg: KRRStepConfig, mv, idx):
     """Build cfg.precond inside shard_map; returns apply(r_local) or None.
 
+    ``mv`` may be None when the caller has already rejected 'nystrom'
+    (the hash-join step does — jacobi never touches the matvec).
+
     * jacobi — diag(K̃)_i = mean_s coeff²[s, i] is per-point, so the local
       column sums only need the model-axis psum; the apply is elementwise on
       the local shard (no extra collectives per iteration).
@@ -251,7 +254,19 @@ def make_krr_step(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
 
 
 def make_krr_predict(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
-    """predict(x_test, lsh, tables) -> yhat; test points data-sharded."""
+    """predict(x_test, lsh, tables) -> yhat; test points data-sharded.
+
+    The index is built with the same ``want_blocked``/``local_fused`` logic
+    as ``make_krr_step`` — a pallas-backend predict gathers through the
+    visit-list kernels off the slot-blocked layout instead of falling back
+    to the cross-product gather the train step abandoned (the old
+    ``blocked=False`` hardcode).  Reference-backend prediction still skips
+    the layout: its readout never consults it, so the sort would be wasted.
+    """
+    n_data = _data_shard_count(mesh, cfg)
+    local_fused = cfg.fused and n_data == 1
+    want_blocked = (local_fused or cfg.blocked_split) and \
+        resolve_backend(cfg.backend) == "pallas"
     in_specs = (P(cfg.data_axes, None),
                 LSHParams(w=P(cfg.model_axis, None), z=P(cfg.model_axis, None),
                           r1=P(cfg.model_axis, None), r2=P(cfg.model_axis, None)),
@@ -261,8 +276,8 @@ def make_krr_predict(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn):
     @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs)
     def predict(x_local, lsh_local, tables_local):
-        op = _shard_operator(cfg, f, lsh_local)
-        idx = op.build_index(op.featurize(x_local), blocked=False)
+        op = _shard_operator(cfg, f, lsh_local, fused=local_fused)
+        idx = op.build_index(op.featurize(x_local), blocked=want_blocked)
         out = op.readout(idx, tables_local, average=False)
         return jax.lax.psum(out, cfg.model_axis) / cfg.m
 
@@ -307,13 +322,26 @@ def sample_sharded_lsh(key: jax.Array, m: int, d: int, pdf: GammaPDF,
 # it is a different algorithm (table sharded over data, all_to_all routing),
 # so only featurization/indexing is shared with the operator.
 
+class _RoutePlan(NamedTuple):
+    """Pallas route-kernel driver: destination cells along the slot-blocked
+    layout plus the pack/unpack visit schedules (core.wlsh.RouteSchedule)."""
+    cell_lay: Array    # (m, L) int32 — wire cell per layout position
+                       #   (sentinel = num_cell_tiles·block_t)
+    sched: RouteSchedule
+
+
 class _Routing(NamedTuple):
-    useg_cell: Array   # (E,) destination cell per (instance, bucket) segment,
-                       #   indexed by inst·n_loc + seg (sentinel = NB)
-    usidx: Array       # (NB,) flat segment id per cell (sentinel = E)
-    recv_packed: Array # (NB,) received (inst·spp + slot%spp) ids after a2a
+    pt_cell: Array     # (m_loc, n_loc) destination wire cell per point (its
+                       #   bucket's cell at the owner; sentinel NB = dropped)
+    recv_ids: Array    # (NB,) owner-side (inst·spp + slot%spp) table ids per
+                       #   received cell (sentinel m_loc·spp = empty cell)
+    serve_map: Array   # (n_shards, NB) flat recv positions holding each wire
+                       #   cell's table id in sender run r (sentinel NB =
+                       #   absent) — the per-iteration serve is s gathers
+                       #   through this map instead of a table scatter+gather
     spp: int           # slots per shard
     cap: int           # bucket capacity per destination shard
+    plan: _RoutePlan | None = None   # pallas backends only
 
 
 def _routing_maps(slot: Array, lay, n_shards: int, table_size: int,
@@ -355,101 +383,263 @@ def _routing_maps(slot: Array, lay, n_shards: int, table_size: int,
     useg_cell = jnp.full((e,), nb, jnp.int32).at[
         jnp.where(keep, flat_seg, e).reshape(-1)].set(
         cell.reshape(-1), mode="drop")
-    usidx = jnp.full((nb,), e, jnp.int32).at[cell.reshape(-1)].set(
-        flat_seg.reshape(-1), mode="drop")
+    # broadcast each bucket's cell back to its points: pt_cell is the ONLY
+    # per-iteration map — route-pack scatter-adds contributions through it
+    # (the bucket segment-sum happens inside the scatter-add) and
+    # route-unpack gathers received values back through it
+    pt_cell = useg_cell[inst * n_loc + lay.seg_pt]             # (m, n)
     packed = inst * spp + (ss % spp).astype(jnp.int32)
     send_packed = jnp.full((nb,), -1, jnp.int32).at[cell.reshape(-1)].set(
         packed.reshape(-1), mode="drop").reshape(n_shards, cap)
-    return useg_cell, usidx, send_packed, spp, cap
+    return pt_cell, send_packed, spp, cap
+
+
+# destination-cell tile width for the route kernels (matches the table tile
+# width of the binning kernels; cells are wire positions, not table slots)
+ROUTE_BLOCK_T = 512
+
+
+def _make_route_plan(pt_cell: Array, lay, nb: int) -> _RoutePlan:
+    """Lay the per-point wire cells out along the slot-blocked layout and
+    build the pack/unpack visit schedules.  Cells ascend with the layout's
+    slot sort (owner, then in-owner rank), which is exactly the monotonicity
+    ``build_route_schedule`` needs; dropped points and padding positions map
+    to the kernels' out-of-range sentinel."""
+    m_loc, n_loc = pt_cell.shape
+    cb = -(-nb // ROUTE_BLOCK_T)
+    sentinel = cb * ROUTE_BLOCK_T
+    rows = jnp.arange(m_loc, dtype=jnp.int32)[:, None]
+    ptc_pad = jnp.concatenate(
+        [pt_cell, jnp.full((m_loc, 1), nb, jnp.int32)], axis=1)
+    cell_lay = ptc_pad[rows, lay.src]                          # (m, L)
+    cell_lay = jnp.where(cell_lay < nb, cell_lay, sentinel).astype(jnp.int32)
+    sched = build_route_schedule(cell_lay, num_cell_tiles=cb,
+                                 block_n=lay.block_n, block_t=ROUTE_BLOCK_T)
+    return _RoutePlan(cell_lay=cell_lay, sched=sched)
 
 
 def _build_routing(slot: Array, lay, n_shards: int, table_size: int,
-                   data_axes, cap_factor: float) -> _Routing:
-    """Precompute the segment <-> cell maps and exchange slot requests.
-    slot (m_loc, n_loc); ``lay`` is the slot-blocked layout's reference
-    group (perm/seg_id/seg_pt).  Runs once per CG solve (slots are fixed)."""
-    useg_cell, usidx, send_packed, spp, cap = _routing_maps(
+                   data_axes, cap_factor: float, *,
+                   kernels: bool = False) -> _Routing:
+    """Precompute the point <-> wire-cell maps and exchange slot requests.
+    slot (m_loc, n_loc); ``lay`` is the slot-blocked layout (reference
+    group; plus the pallas group when ``kernels`` asks for the route-kernel
+    schedules).  Runs once per CG solve (slots are fixed)."""
+    pt_cell, send_packed, spp, cap = _routing_maps(
         slot, lay, n_shards, table_size, cap_factor)
     recv_packed = jax.lax.all_to_all(send_packed, data_axes, 0, 0,
                                      tiled=True).reshape(-1)
-    return _Routing(useg_cell=useg_cell, usidx=usidx,
-                    recv_packed=recv_packed, spp=spp, cap=cap)
+    m_loc = slot.shape[0]
+    recv_ids = jnp.where(recv_packed >= 0, recv_packed,
+                         m_loc * spp).astype(jnp.int32)
+    # serve map: each sender run of recv_ids is sorted (instance-major,
+    # slot-ascending pack order; sentinels trail), so the position of any
+    # table id inside run r is one searchsorted — NO sort, and the
+    # per-iteration segment-sum across runs becomes s vectorized gathers
+    # (XLA CPU scatters are scalar loops; this was the iteration hot spot)
+    nb = n_shards * cap
+    ids2 = recv_ids.reshape(n_shards, cap)
+    pos = jax.vmap(lambda row: jnp.searchsorted(row, recv_ids))(ids2)
+    pos = jnp.minimum(pos, cap - 1).astype(jnp.int32)
+    hit = (jnp.take_along_axis(ids2, pos, axis=1) == recv_ids[None]) \
+        & (recv_ids < m_loc * spp)[None]
+    serve_map = jnp.where(
+        hit, jnp.arange(n_shards, dtype=jnp.int32)[:, None] * cap + pos, nb)
+    plan = _make_route_plan(pt_cell, lay, nb) if kernels else None
+    return _Routing(pt_cell=pt_cell, recv_ids=recv_ids, serve_map=serve_map,
+                    spp=spp, cap=cap, plan=plan)
 
 
-def _hashjoin_loads(rt: _Routing, lay, m_loc: int, n_loc: int, data_axes,
-                    beta_local: Array, payload_dtype=jnp.float32) -> Array:
-    """Route the deduplicated per-bucket contribution sums to their owner
-    shards and scatter-add into MY (m_loc·spp,) table shard.  One wire float
-    per distinct (instance, slot) pair — the layout's segment sum collapses
-    same-bucket points before the all_to_all."""
-    n_shards = rt.recv_packed.shape[0] // rt.cap
-    nb = n_shards * rt.cap
-    contrib_sorted = lay.coeff_sorted * beta_local[lay.perm]   # (m, n)
-    usum = jax.vmap(lambda c, s: jax.ops.segment_sum(
-        c, s, num_segments=n_loc))(contrib_sorted, lay.seg_id)
-    send_c = jnp.zeros((nb,), payload_dtype).at[rt.useg_cell].set(
-        usum.reshape(-1).astype(payload_dtype), mode="drop")
-    recv_c = jax.lax.all_to_all(send_c.reshape(n_shards, rt.cap), data_axes,
-                                0, 0, tiled=True).reshape(-1)
-    valid = rt.recv_packed >= 0
-    ids = jnp.where(valid, rt.recv_packed, m_loc * rt.spp)
-    return jnp.zeros((m_loc * rt.spp,), jnp.float32).at[ids].add(
-        recv_c.astype(jnp.float32), mode="drop")
+def _hashjoin_send(rt: _Routing, lay, coeff: Array, beta_local: Array,
+                   payload_dtype, interpret: bool) -> Array:
+    """Route pack: per-point contributions -> (n_shards, cap[, k]) payload.
+
+    One flat scatter-add through ``pt_cell`` (flat-XLA fallback) or one
+    Pallas route-pack kernel call (``rt.plan``) — the per-bucket segment
+    sum happens inside the cell accumulation, so the old per-iteration
+    vmap'd ``segment_sum`` + cell scatter pair collapses into one op.
+    Cast to the wire dtype happens once, after the f32 accumulation."""
+    multi = beta_local.ndim == 2
+    tail = beta_local.shape[1:]
+    nb = rt.recv_ids.shape[0]
+    n_shards = nb // rt.cap
+    if rt.plan is None:
+        contrib = (coeff[:, :, None] * beta_local[None] if multi
+                   else coeff * beta_local[None, :])
+        # dropped/overflow points carry the sentinel cell id nb — out of
+        # bounds for the (nb,) buffer, so mode="drop" discards them without
+        # the extra sentinel row + [:nb] slice pass over the wire buffer
+        send = jnp.zeros((nb,) + tail, jnp.float32).at[
+            rt.pt_cell.reshape(-1)].add(
+            contrib.reshape((-1,) + tail), mode="drop")
+    else:
+        from ..kernels.binning import route_pack_pallas
+        sched = rt.plan.sched
+        # lay.src sentinel (== n_loc) is out of bounds -> pad rows read 0
+        beta_lay = jnp.asarray(beta_local, jnp.float32).at[
+            lay.src].get(mode="fill", fill_value=0)
+        if multi:
+            beta_lay = jnp.swapaxes(beta_lay, 1, 2)            # (m, k, L)
+            contrib_lay = lay.coeff_lay[:, None, :] * beta_lay
+        else:
+            contrib_lay = lay.coeff_lay * beta_lay
+        packed = route_pack_pallas(
+            sched.p_inst, sched.p_block, sched.p_tile, sched.p_flag,
+            rt.plan.cell_lay, contrib_lay,
+            num_cell_tiles=sched.num_cell_tiles, block_n=lay.block_n,
+            block_t=sched.block_t, interpret=interpret)
+        send = packed[:, :nb].T if multi else packed[0, :nb]
+    return send.astype(payload_dtype).reshape((n_shards, rt.cap) + tail)
+
+
+def _hashjoin_loads(rt: _Routing, lay, coeff: Array, beta_local: Array,
+                    data_axes, m_loc: int, payload_dtype,
+                    interpret: bool) -> Array:
+    """Pack + all_to_all + owner scatter-add: MY (m_loc·spp[, k]) f32 table
+    shard.  One wire value per distinct (instance, slot) pair; empty cells
+    carry the sentinel id and are dropped by the scatter."""
+    tail = beta_local.shape[1:]
+    nb = rt.recv_ids.shape[0]
+    send = _hashjoin_send(rt, lay, coeff, beta_local, payload_dtype,
+                          interpret)
+    recv = jax.lax.all_to_all(send, data_axes, 0, 0, tiled=True)
+    return jnp.zeros((m_loc * rt.spp,) + tail, jnp.float32).at[
+        rt.recv_ids].add(recv.reshape((nb,) + tail).astype(jnp.float32),
+                         mode="drop")
+
+
+def _hashjoin_readout(rt: _Routing, lay, coeff: Array, table: Array,
+                      data_axes, model_axis, m_total: int, payload_dtype,
+                      interpret: bool) -> Array:
+    """Serve the fixed slot requests from my table shard, all_to_all the
+    values back, and unpack (``_hashjoin_return``).  This is the
+    materialized-table path — prediction against a stored shard."""
+    # recv_ids sentinel (== m_loc·spp) is out of bounds -> empty wire cells
+    # serve 0, with no per-iteration sentinel-row concat over the table
+    served = table.at[rt.recv_ids].get(mode="fill", fill_value=0)
+    return _hashjoin_return(rt, lay, coeff, served, data_axes, model_axis,
+                            m_total, payload_dtype, interpret)
+
+
+def _hashjoin_return(rt: _Routing, lay, coeff: Array, served: Array,
+                     data_axes, model_axis, m_total: int, payload_dtype,
+                     interpret: bool) -> Array:
+    """all_to_all the served (NB[, k]) wire-cell values back and unpack:
+    out = psum_model(sum_s coeff · back[pt_cell]) / m.  The unpack is one
+    flat gather + coeff reduce (flat-XLA) or one Pallas route-unpack kernel
+    call; dropped cells gather 0 both ways."""
+    multi = served.ndim == 2
+    tail = served.shape[1:]
+    nb = rt.recv_ids.shape[0]
+    n_shards = nb // rt.cap
+    m_loc = coeff.shape[0]
+    back = jax.lax.all_to_all(
+        served.astype(payload_dtype).reshape((n_shards, rt.cap) + tail),
+        data_axes, 0, 0, tiled=True)
+    back_flat = back.reshape((nb,) + tail).astype(jnp.float32)
+    if rt.plan is None:
+        # pt_cell sentinel (== nb) out of bounds -> dropped points read 0
+        vals = back_flat.at[rt.pt_cell].get(
+            mode="fill", fill_value=0)                         # (m, n[, k])
+        contrib = coeff[:, :, None] * vals if multi else coeff * vals
+        out = jnp.sum(contrib, axis=0)
+    else:
+        from ..kernels.binning import route_unpack_pallas
+        sched = rt.plan.sched
+        cbbt = sched.num_cell_tiles * sched.block_t
+        buf = jnp.pad(back_flat, ((0, cbbt - nb),) + ((0, 0),) * len(tail))
+        buf = buf.T if multi else buf[None]                    # (1|k, CBbt)
+        out_lay = route_unpack_pallas(
+            sched.u_block, sched.u_tile, sched.u_flag, rt.plan.cell_lay,
+            lay.coeff_lay, buf, block_n=lay.block_n, block_t=sched.block_t,
+            interpret=interpret)
+        rows = jnp.arange(m_loc, dtype=jnp.int32)[:, None]
+        if multi:
+            if out_lay.ndim == 2:                              # k == 1
+                out_lay = out_lay[:, None, :]
+            out = jnp.swapaxes(out_lay, 1, 2)[rows, lay.inv_pos].sum(axis=0)
+        else:
+            out = out_lay[rows, lay.inv_pos].sum(axis=0)
+    return jax.lax.psum(out, model_axis) / m_total
 
 
 def _hashjoin_matvec(rt: _Routing, lay, coeff: Array, m_total: int,
-                     m_loc: int, data_axes, model_axis, beta_local: Array,
-                     payload_dtype=jnp.float32):
-    """payload_dtype=bfloat16 halves the wire bytes; the per-bucket segment
-    sums are computed in f32 and rounded once at the a2a boundary (each
-    way), and the owner's cross-shard scatter-add still accumulates in f32
-    — so the noise is one bf16 rounding per distinct (instance, slot) per
-    hop, not per point (CG tolerates it; tests pin the accuracy).
-    ``coeff`` is the index's precomputed weight·sign (m_loc, n_loc); ``lay``
-    the slot-blocked layout whose sort/segments route one value per
-    distinct bucket each way."""
-    n_shards = rt.recv_packed.shape[0] // rt.cap
-    n_loc = coeff.shape[1]
-    table = _hashjoin_loads(rt, lay, m_loc, n_loc, data_axes, beta_local,
-                            payload_dtype)
-    # serve the (fixed) readout requests and route values back
-    valid = rt.recv_packed >= 0
-    vals_serve = jnp.where(valid, table[jnp.clip(rt.recv_packed, 0)],
-                           0.0).astype(payload_dtype)
-    back = jax.lax.all_to_all(vals_serve.reshape(n_shards, rt.cap), data_axes,
-                              0, 0, tiled=True).reshape(-1)
-    # one value per distinct bucket, broadcast to its points via seg_pt
-    uval = jnp.zeros((coeff.size,), jnp.float32).at[rt.usidx].set(
-        back.astype(jnp.float32), mode="drop").reshape(m_loc, n_loc)
-    vals = jnp.take_along_axis(uval, lay.seg_pt, axis=1)
-    out = jnp.sum(vals * coeff, axis=0)
-    return jax.lax.psum(out, model_axis) / m_total
+                     data_axes, model_axis, beta_local: Array,
+                     payload_dtype, interpret: bool):
+    """One hash-join K~ matvec: pack -> a2a -> serve -> a2a -> unpack ->
+    model psum.  The serve never materializes the owner's table: each wire
+    cell's aggregate is the cross-run segment-sum of the received payloads,
+    read through the precomputed ``serve_map`` as s vectorized gathers
+    (the table scatter-add runs ONCE per solve, for the returned prediction
+    table — not per iteration).  payload_dtype=bfloat16 halves the wire
+    bytes; contributions accumulate in f32 and round ONCE at each a2a
+    boundary — noise is one bf16 rounding per distinct (instance, slot) per
+    hop, not per point (CG tolerates it; tests pin the accuracy).  ``coeff``
+    is the index's precomputed weight·sign (m_loc, n_loc)."""
+    tail = beta_local.shape[1:]
+    nb = rt.recv_ids.shape[0]
+    send = _hashjoin_send(rt, lay, coeff, beta_local, payload_dtype,
+                          interpret)
+    recv = jax.lax.all_to_all(send, data_axes, 0, 0, tiled=True)
+    recv_flat = recv.reshape((nb,) + tail).astype(jnp.float32)
+    served = recv_flat.at[rt.serve_map[0]].get(mode="fill", fill_value=0)
+    for r in range(1, rt.serve_map.shape[0]):
+        served = served + recv_flat.at[rt.serve_map[r]].get(
+            mode="fill", fill_value=0)
+    return _hashjoin_return(rt, lay, coeff, served, data_axes, model_axis,
+                            m_total, payload_dtype, interpret)
+
+
+def _hashjoin_layout_parts(backend: str) -> str:
+    """The routing build consumes the layout's reference group; the route
+    kernels additionally need the pallas group (src/coeff_lay/inv_pos)."""
+    return "both" if backend == "pallas" else "reference"
 
 
 def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
                            cap_factor: float = 2.0,
-                           payload_dtype=jnp.float32):
+                           payload_dtype=jnp.bfloat16):
     """Hash-join variant of make_krr_step (same signature; returns
-    (beta, resnorm, table_shard) with the table left SHARDED over data).
+    (beta, resnorm, table_shard) with the table SHARDED over data:
+    out spec P(model_axis, data_axes), so the assembled global table is the
+    standard (m, B[, k]) prediction structure with owner s holding slots
+    [s·spp, (s+1)·spp) — ``make_krr_predict_hashjoin`` consumes it without
+    ever gathering it to one shard).
 
     The routing is derived from the slot-blocked layout's per-instance slot
     sort (owner grouping and per-bucket dedup fall out of the sorted order —
-    no second sort; `tests/test_blocked_split.py` pins the op count), and
-    the all_to_all payloads carry one float per distinct (instance, slot)
-    pair each way.
+    no second sort; `tests/test_blocked_split.py` pins the op count).  Per
+    CG iteration the apply is ONE route-pack (flat scatter-add through the
+    precomputed point->cell map — or the Pallas route-pack kernel on that
+    backend), two all_to_alls, an s-gather cross-run serve (the owner table
+    is never materialized inside the loop; see ``_hashjoin_matvec``), and
+    ONE route-unpack — the old vmap'd per-bucket segment_sum and the three
+    intermediate scatter/gather hops are gone.
 
-    Single-RHS, unpreconditioned only: its scatter routes one contribution
-    stream per entry, and a silently-dropped cfg.precond would leave the
-    fixed cg_iters under-converged — so unsupported configs are rejected
-    up front rather than ignored.
+    ``y`` may be (n,) or an (n, k) RHS block: the k columns ride
+    (cells, k) all_to_all payloads, so one routing build and two
+    collectives per iteration amortize over all columns (PR 3's multi-RHS
+    contract).  ``cfg.precond='jacobi'`` is supported — the diagonal is a
+    model-axis psum and the apply shard-local, adding no per-iteration
+    collectives; 'nystrom' still raises (its pivot columns need global
+    matvecs).  The wire payload defaults to bfloat16 (accuracy pinned by
+    tests); pass ``payload_dtype=jnp.float32`` for exact psum parity.  The
+    final prediction table is always built with an f32 wire — it is one
+    extra exchange per solve and serves every future prediction.
     """
-    if cfg.precond not in ("none", None):
-        raise ValueError("make_krr_step_hashjoin does not support "
-                         "preconditioning; use make_krr_step or "
-                         "precond='none'")
-    n_shards = 1
-    for a in cfg.data_axes:
-        n_shards *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    if cfg.precond == "nystrom":
+        raise ValueError(
+            "precond='nystrom' needs global matvecs for its pivot columns; "
+            "the hash-join step supports 'jacobi' (shard-local apply)")
+    if cfg.precond not in ("none", None, "jacobi"):
+        raise ValueError(f"unknown preconditioner {cfg.precond!r}; "
+                         f"expected one of {PRECOND_NAMES}")
+    n_shards = _data_shard_count(mesh, cfg)
+    if cfg.table_size % n_shards:
+        raise ValueError("hash-join needs table_size divisible by the data "
+                         f"shard count ({cfg.table_size} % {n_shards})")
+    backend = resolve_backend(cfg.backend)
+    use_kernels = backend == "pallas"
     data_spec = P(cfg.data_axes)
     in_specs = (P(cfg.data_axes, None), data_spec,
                 LSHParams(w=P(cfg.model_axis, None), z=P(cfg.model_axis, None),
@@ -459,25 +649,69 @@ def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
     @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs)
     def step(x_local, y_local, lsh_local):
-        if y_local.ndim != 1:
-            raise ValueError("hash-join step is single-RHS; use "
-                             "make_krr_step for (n, k) target blocks")
-        op = _shard_operator(cfg, f, lsh_local)
-        idx = op.build_index(op.featurize(x_local), blocked=False)
-        m_loc, n_loc = idx.slot.shape
-        # the routing rides the slot-blocked layout's stable slot sort —
-        # the ONLY sort in the step (the old path re-sorted by owner shard)
-        lay = build_blocked_layout(idx.slot, idx.coeff, cfg.table_size,
-                                   parts="reference")
+        op = _shard_operator(cfg, f, lsh_local, fused=False)
+        # blocked=True rides the layout's stable slot sort — the ONLY sort
+        # in the step; parts='both' adds the route-kernel arrays on pallas
+        idx = op.build_index(op.featurize(x_local), blocked=True,
+                             parts=_hashjoin_layout_parts(backend))
+        lay = idx.blocked
+        m_loc = idx.slot.shape[0]
         rt = _build_routing(idx.slot, lay, n_shards, cfg.table_size,
-                            cfg.data_axes, cap_factor)
+                            cfg.data_axes, cap_factor, kernels=use_kernels)
+        interp = default_interpret()
         mv = lambda v: _hashjoin_matvec(rt, lay, idx.coeff, cfg.m,
-                                        m_loc, cfg.data_axes, cfg.model_axis,
-                                        v, payload_dtype)
-        beta_local, resnorm = cg_iterations(mv, y_local, cfg)
-        # final sharded prediction table for the solved beta
-        table = _hashjoin_loads(rt, lay, m_loc, n_loc, cfg.data_axes,
-                                beta_local)
-        return beta_local, resnorm, table.reshape(m_loc, rt.spp)
+                                        cfg.data_axes, cfg.model_axis, v,
+                                        payload_dtype, interp)
+        pre = _shard_preconditioner(cfg, None, idx)
+        beta_local, resnorm = cg_iterations(mv, y_local, cfg,
+                                            precond_apply=pre)
+        # final sharded prediction table for the solved beta (f32 wire)
+        table = _hashjoin_loads(rt, lay, idx.coeff, beta_local,
+                                cfg.data_axes, m_loc, jnp.float32, interp)
+        return beta_local, resnorm, table.reshape(
+            (m_loc, rt.spp) + table.shape[1:])
 
     return step
+
+
+def make_krr_predict_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
+                              cap_factor: float = 2.0,
+                              payload_dtype=jnp.bfloat16):
+    """predict(x_test, lsh, table) -> yhat against a DATA-SHARDED table.
+
+    ``table`` is the (m, B[, k]) structure assembled from
+    ``make_krr_step_hashjoin``'s third output (spec
+    P(model_axis, data_axes): shard s owns slots [s·spp, (s+1)·spp)).  Test
+    points are data-sharded; each shard routes its points' deduplicated
+    slot requests to the owner shards (the readout half of the training
+    routing: one request all_to_all at trace of the fixed query set, one
+    value exchange), so the table the step already left sharded is finally
+    consumable without a gather.  Returns (n_test,) or (n_test, k)
+    predictions sharded P(data_axes)."""
+    n_shards = _data_shard_count(mesh, cfg)
+    if cfg.table_size % n_shards:
+        raise ValueError("hash-join needs table_size divisible by the data "
+                         f"shard count ({cfg.table_size} % {n_shards})")
+    backend = resolve_backend(cfg.backend)
+    use_kernels = backend == "pallas"
+    in_specs = (P(cfg.data_axes, None),
+                LSHParams(w=P(cfg.model_axis, None), z=P(cfg.model_axis, None),
+                          r1=P(cfg.model_axis, None), r2=P(cfg.model_axis, None)),
+                P(cfg.model_axis, cfg.data_axes))
+    out_specs = P(cfg.data_axes)
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs)
+    def predict(x_local, lsh_local, table_local):
+        op = _shard_operator(cfg, f, lsh_local, fused=False)
+        idx = op.build_index(op.featurize(x_local), blocked=True,
+                             parts=_hashjoin_layout_parts(backend))
+        rt = _build_routing(idx.slot, idx.blocked, n_shards, cfg.table_size,
+                            cfg.data_axes, cap_factor, kernels=use_kernels)
+        # flatten my (m_loc, spp[, k]) slice to the served id space
+        table_flat = table_local.reshape((-1,) + table_local.shape[2:])
+        return _hashjoin_readout(rt, idx.blocked, idx.coeff, table_flat,
+                                 cfg.data_axes, cfg.model_axis, cfg.m,
+                                 payload_dtype, default_interpret())
+
+    return predict

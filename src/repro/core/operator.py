@@ -82,7 +82,8 @@ class WLSHOperator(NamedTuple):
     # -- index construction -------------------------------------------------
 
     def build_index(self, feats: Features, mode: str = "table", *,
-                    blocked: bool | None = None) -> Index:
+                    blocked: bool | None = None,
+                    parts: str | None = None) -> Index:
         """'table' -> CountSketch TableIndex (both backends); 'exact' ->
         sorted-bucket ExactIndex (reference-only validation path).
 
@@ -93,7 +94,11 @@ class WLSHOperator(NamedTuple):
         psum path schedules only real collisions while keeping the
         (m, B[, k]) tables in HBM).  ``None`` follows the operator's
         ``fused`` flag.  Readout-only consumers (prediction) pass
-        ``blocked=False`` to skip the sort.
+        ``blocked=False`` to skip the sort.  ``parts`` overrides which
+        layout array group is materialized (default: this backend's own) —
+        the hash-join step passes 'both' on the pallas backend because its
+        routing build consumes the reference group (perm/segments) while
+        its route kernels consume the pallas group (src/coeff_lay).
         """
         if mode == "table":
             idx = build_table_index(feats, self.table_size)
@@ -109,7 +114,8 @@ class WLSHOperator(NamedTuple):
                 bt = BLOCKED_SPLIT_T if split_only else BLOCKED_T
                 idx = idx._replace(blocked=build_blocked_layout(
                     idx.slot, idx.coeff, self.table_size,
-                    block_n=bn, block_t=bt, parts=self.backend))
+                    block_n=bn, block_t=bt,
+                    parts=self.backend if parts is None else parts))
             return idx
         if mode == "exact":
             return build_exact_index(feats)

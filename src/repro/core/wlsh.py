@@ -318,6 +318,124 @@ def build_blocked_layout(slot: Array, coeff: Array, table_size: int, *,
                          block_n=bn, block_t=bt, num_tiles=num_tiles)
 
 
+class RouteSchedule(NamedTuple):
+    """Visit schedules for the hash-join route kernels (kernels/binning).
+
+    Built by ``build_route_schedule`` from a per-instance monotone "cell"
+    array laid out along the slot-blocked layout — for the hash join the
+    cell is a point's destination slot in the flat all_to_all wire buffer.
+
+    * Pack (contributions -> shared wire buffer): the output buffer is
+      shared by every instance, so the schedule is FLAT and segmented by
+      destination-cell tile — ``p_inst/p_block/p_tile/p_flag`` (V,) visits
+      with each tile's segment contiguous, opened by a mandatory zero visit
+      (flag 1), followed by every (instance, layout block) that reaches the
+      tile (flag 0), with trailing no-ops (flag 2) re-targeting the last
+      tile.  Consecutive same-tile visits keep the HBM output tile resident
+      (the standard Pallas revisiting contract).
+    * Unpack (wire buffer -> per-instance layout): per-instance lists
+      ``u_block/u_tile/u_flag`` (m, VB) — every layout block visited at
+      least once (blocks with no real cells gather zero against tile 0, so
+      the output block is still written), blocks in order, one visit per
+      cell tile a block spans, padding flagged 2.
+
+    V = T + m·VB and VB = L/bn + T static (T = num_cell_tiles): per-instance
+    cell ranges ascend block to block, so a block spans at most one tile
+    boundary more than its predecessor — the same O(n/bn + B/bt) counting
+    as the split visit lists.
+    """
+
+    p_inst: Array     # (V,) int32 — flat pack schedule: instance,
+    p_block: Array    #   layout block,
+    p_tile: Array     #   destination cell tile,
+    p_flag: Array     #   0 = accumulate, 1 = zero the tile, 2 = no-op
+    u_block: Array    # (m, VB) int32 — per-instance unpack schedule
+    u_tile: Array
+    u_flag: Array     #   0 = compute, 2 = no-op padding
+    num_cell_tiles: int
+    block_t: int      # cell tile width
+
+
+def build_route_schedule(cell_lay: Array, *, num_cell_tiles: int,
+                         block_n: int, block_t: int) -> RouteSchedule:
+    """Pure-jnp (NO sort) construction of both route-kernel schedules.
+
+    ``cell_lay`` (m, L) int32: destination cell per slot-blocked layout
+    position, with real cells NON-DECREASING along each instance's layout
+    (guaranteed when cells follow the layout's slot sort — the hash-join
+    routing's owner·cap + rank cells do) and the out-of-range sentinel
+    ``num_cell_tiles·block_t`` on dropped/padding positions (sentinels may
+    be interspersed anywhere; they produce all-zero one-hot rows in the
+    kernels and are excluded from the tile-range bookkeeping here).
+    """
+    m, layout_len = cell_lay.shape
+    bn, bt = int(block_n), int(block_t)
+    lb = layout_len // bn                       # layout blocks per instance
+    cb = int(num_cell_tiles)
+    sentinel = cb * bt
+    cells = cell_lay.reshape(m, lb, bn)
+    real = cells < sentinel
+    any_real = jnp.any(real, axis=2)                          # (m, LB)
+    lo = jnp.min(jnp.where(real, cells, sentinel), axis=2) // bt
+    hi = jnp.max(jnp.where(real, cells, -1), axis=2) // bt    # -1 if empty
+    c = jnp.where(any_real, hi - lo + 1, 0).astype(jnp.int32)  # tiles/block
+    lo = jnp.where(any_real, lo, 0).astype(jnp.int32)
+    vb = lb + cb                                # static visits per instance
+    rows = jnp.arange(m, dtype=jnp.int32)[:, None]
+
+    def enumerate_visits(c_row, lo_row):
+        """(block, tile, valid) of each visit: block b gets c_row[b]
+        consecutive visits covering tiles [lo[b], lo[b] + c[b])."""
+        start = jnp.cumsum(c_row) - c_row                     # exclusive
+        total = start[-1] + c_row[-1]
+        v = jnp.arange(vb, dtype=jnp.int32)
+        b = jnp.clip(jnp.searchsorted(start, v, side="right") - 1,
+                     0, lb - 1).astype(jnp.int32)
+        t = (lo_row[b] + v - start[b]).astype(jnp.int32)
+        return b, t, v < total
+
+    # -- pack: flat schedule segmented by destination tile ------------------
+    pb, pt, pvalid = jax.vmap(enumerate_visits)(c, lo)
+    pt = jnp.where(pvalid, pt, cb - 1)          # pads sort after real tiles
+    # rank of a visit among its instance's visits to the same tile: visit
+    # tiles are non-decreasing per instance, so first occurrences come from
+    # searchsorted against the row itself
+    first = jax.vmap(lambda t_row: jnp.searchsorted(t_row, t_row,
+                                                    side="left"))(pt)
+    prank = jnp.arange(vb, dtype=jnp.int32)[None, :] - first.astype(jnp.int32)
+    cnt = jnp.zeros((m, cb), jnp.int32).at[rows, pt].add(
+        pvalid.astype(jnp.int32))
+    tot = jnp.sum(cnt, axis=0)                                # (T,)
+    seg_size = 1 + tot                          # zero slot + real visits
+    seg_start = jnp.cumsum(seg_size) - seg_size
+    inst_off = jnp.cumsum(cnt, axis=0) - cnt                  # (m, T)
+    v_cap = cb + m * vb
+    fp = jnp.where(pvalid,
+                   seg_start[pt] + 1 + inst_off[rows, pt] + prank, v_cap)
+    flat = fp.reshape(-1)
+    p_inst = jnp.zeros((v_cap,), jnp.int32).at[flat].set(
+        jnp.broadcast_to(rows, (m, vb)).reshape(-1), mode="drop")
+    p_block = jnp.zeros((v_cap,), jnp.int32).at[flat].set(
+        pb.reshape(-1), mode="drop")
+    # defaults place the trailing no-ops on the last tile (idempotent)
+    p_tile = jnp.full((v_cap,), cb - 1, jnp.int32).at[flat].set(
+        pt.reshape(-1), mode="drop")
+    p_flag = jnp.full((v_cap,), 2, jnp.int32).at[flat].set(0, mode="drop")
+    p_tile = p_tile.at[seg_start].set(jnp.arange(cb, dtype=jnp.int32))
+    p_flag = p_flag.at[seg_start].set(1)
+
+    # -- unpack: per-instance, every block visited at least once ------------
+    cu = jnp.maximum(c, 1)
+    ub, ut, uvalid = jax.vmap(enumerate_visits)(cu, lo)
+    last_t = (lo[:, -1] + cu[:, -1] - 1).astype(jnp.int32)
+    ub = jnp.where(uvalid, ub, lb - 1).astype(jnp.int32)
+    ut = jnp.where(uvalid, ut, last_t[:, None]).astype(jnp.int32)
+    u_flag = jnp.where(uvalid, 0, 2).astype(jnp.int32)
+    return RouteSchedule(p_inst=p_inst, p_block=p_block, p_tile=p_tile,
+                         p_flag=p_flag, u_block=ub, u_tile=ut, u_flag=u_flag,
+                         num_cell_tiles=cb, block_t=bt)
+
+
 def table_loads(index: TableIndex, beta: Array) -> Array:
     """Bucket-load tables for all m instances: (m, B) for beta (n,), or
     (m, B, k) for a (n, k) RHS block (one scatter, k stacked columns)."""

@@ -371,6 +371,152 @@ def bin_gather_blocked_pallas(vg_tile, slot_lay, tables, *, block_n: int,
     )(vg_tile, slot_lay, tables)
 
 
+def _route_pack_body(inst_ref, blk_ref, tile_ref, flag_ref, cell_ref,
+                     contrib_ref, out_ref, *, multi: bool):
+    """One visit of the hash-join route-pack schedule (flat grid).
+
+    The output is the flat all_to_all send buffer — ONE buffer shared by
+    every instance, so the schedule is segmented by destination-cell tile
+    rather than per instance: visits to a tile are contiguous in grid order,
+    each tile's segment opens with a mandatory zero visit (flag 1), real
+    visits (flag 0) accumulate one layout block's per-point contributions
+    into the tile via the one-hot MXU product (duplicate (instance, slot)
+    points hit the same cell row — the bucket segment-sum happens inside the
+    dot), and trailing no-ops (flag 2) re-target the last tile so the final
+    writebacks are idempotent.  Dropped / padding layout positions carry the
+    out-of-range sentinel cell and produce all-zero one-hot rows.
+    """
+    j = pl.program_id(0)
+    flag = flag_ref[j]
+
+    @pl.when(flag == 1)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(flag == 0)
+    def _add():
+        onehot = _tile_onehot(cell_ref, tile_ref[j], out_ref.shape[-1])
+        contrib = contrib_ref[...][0] if multi else contrib_ref[...]
+        out_ref[...] += jax.lax.dot_general(
+            contrib, onehot, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+def _route_unpack_body(blk_ref, tile_ref, flag_ref, cell_ref, coeff_ref,
+                       back_ref, out_ref, *, multi: bool):
+    """One visit of the hash-join route-unpack schedule (per-instance grid).
+
+    Reads the received wire values back through each layout block's cell
+    tile: out_lay[..., p] = coeff_lay[p] · back[cell_lay[p]].  The output is
+    per-instance, so the schedule is the familiar per-instance visit list —
+    a block spanning several cell tiles gets consecutive visits (zeroed on
+    the first), every block is visited at least once (empty blocks against
+    tile 0: all-sentinel cells gather zero), and per-instance padding visits
+    (flag 2) repeat the last block so the writeback is idempotent.
+    """
+    i, j = pl.program_id(0), pl.program_id(1)
+    flag = flag_ref[i, j]
+    first = (j == 0) | (blk_ref[i, j] != blk_ref[i, jnp.maximum(j - 1, 0)])
+
+    @pl.when((flag == 0) & first)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(flag == 0)
+    def _acc():
+        onehot = _tile_onehot(cell_ref, tile_ref[i, j], back_ref.shape[-1])
+        vals = jax.lax.dot_general(                  # (1|k, bn)
+            back_ref[...], onehot, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        upd = coeff_ref[...] * vals
+        out_ref[...] += upd[None] if multi else upd
+
+
+@functools.partial(jax.jit, static_argnames=("num_cell_tiles", "block_n",
+                                             "block_t", "interpret"))
+def route_pack_pallas(p_inst, p_block, p_tile, p_flag, cell_lay, contrib_lay,
+                      *, num_cell_tiles: int, block_n: int, block_t: int,
+                      interpret: bool = True):
+    """Hash-join route pack: per-point contributions -> flat send cells.
+
+    p_inst/p_block/p_tile/p_flag (V,) int32 — the flat tile-segmented
+    schedule (scalar-prefetched; see ``_route_pack_body``).  cell_lay (m, L)
+    int32 destination cells along the slot-blocked layout (sentinel
+    ``num_cell_tiles·block_t`` for dropped/padding positions); contrib_lay
+    (m, L) f32 — or (m, k, L) for a k-column RHS block.  Returns the send
+    buffer (1, num_cell_tiles·block_t) — or (k, ·) — with
+    buffer[..., c] = sum over layout positions p with cell_lay[p] == c.
+    """
+    multi = contrib_lay.ndim == 3
+    lay_spec = pl.BlockSpec((1, block_n),
+                            lambda j, pi, pb, pt, pf: (pi[j], pb[j]))
+    if multi:
+        k = contrib_lay.shape[1]
+        contrib_spec = pl.BlockSpec(
+            (1, k, block_n), lambda j, pi, pb, pt, pf: (pi[j], 0, pb[j]))
+        out_rows = k
+    else:
+        contrib_spec = lay_spec
+        out_rows = 1
+    out_spec = pl.BlockSpec((out_rows, block_t),
+                            lambda j, pi, pb, pt, pf: (0, pt[j]))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(p_inst.shape[0],),
+        in_specs=[lay_spec, contrib_spec],
+        out_specs=out_spec,
+    )
+    return pl.pallas_call(
+        functools.partial(_route_pack_body, multi=multi),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((out_rows, num_cell_tiles * block_t),
+                                       jnp.float32),
+        interpret=interpret,
+    )(p_inst, p_block, p_tile, p_flag, cell_lay, contrib_lay)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_t",
+                                             "interpret"))
+def route_unpack_pallas(u_block, u_tile, u_flag, cell_lay, coeff_lay, back, *,
+                        block_n: int, block_t: int, interpret: bool = True):
+    """Hash-join route unpack: received wire values -> coeff-weighted layout.
+
+    u_block/u_tile/u_flag (m, VB) int32 — the per-instance visit schedule;
+    cell_lay (m, L) as in ``route_pack_pallas``; coeff_lay (m, L); ``back``
+    is the padded receive buffer (1, T·block_t) f32 — or (k, T·block_t) for
+    a k-column block.  Returns out_lay (m, L) — or (m, k, L) — with
+    out_lay[s, ..., p] = coeff_lay[s, p] · back[..., cell_lay[s, p]]
+    (sentinel cells gather 0).
+    """
+    m = cell_lay.shape[0]
+    n_vis = u_block.shape[1]
+    multi = back.shape[0] > 1
+    lay_spec = pl.BlockSpec((1, block_n),
+                            lambda i, j, ub, ut, uf: (i, ub[i, j]))
+    back_spec = pl.BlockSpec((back.shape[0], block_t),
+                             lambda i, j, ub, ut, uf: (0, ut[i, j]))
+    if multi:
+        k = back.shape[0]
+        out_spec = pl.BlockSpec((1, k, block_n),
+                                lambda i, j, ub, ut, uf: (i, 0, ub[i, j]))
+        out_shape = (m, k, cell_lay.shape[1])
+    else:
+        out_spec = lay_spec
+        out_shape = (m, cell_lay.shape[1])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(m, n_vis),
+        in_specs=[lay_spec, lay_spec, back_spec],
+        out_specs=out_spec,
+    )
+    return pl.pallas_call(
+        functools.partial(_route_unpack_body, multi=multi),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+        interpret=interpret,
+    )(u_block, u_tile, u_flag, cell_lay, coeff_lay, back)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "block_n", "block_t"))
 def bin_gather_pallas(slot, tables, *, interpret: bool = True,
                       block_n: int = BLOCK_N, block_t: int = BLOCK_T):

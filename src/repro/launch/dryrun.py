@@ -129,8 +129,11 @@ def lower_krr_cell(shape_name: str, mesh, variant: str = "psum"):
     f = get_bucket_fn(KRR_CONFIG.bucket)
     # cap_factor 1.25: at krr_4m the per-destination load is 65536 +- 248
     # (binomial), so 1.25x mean is a +66-sigma overflow margin — free traffic
-    # reduction vs the conservative 2.0 default
-    step = (make_krr_step_hashjoin(mesh, cfg, f, cap_factor=1.25)
+    # reduction vs the conservative 2.0 default.  Wire dtype follows the
+    # config ('bf16' default halves the all_to_all bytes again).
+    wire = jnp.bfloat16 if KRR_CONFIG.wire_dtype == "bf16" else jnp.float32
+    step = (make_krr_step_hashjoin(mesh, cfg, f, cap_factor=1.25,
+                                   payload_dtype=wire)
             if variant == "hashjoin" else make_krr_step(mesh, cfg, f))
     lsh = LSHParams(w=SDS((m, d), jnp.float32), z=SDS((m, d), jnp.float32),
                     r1=SDS((m, d), jnp.uint32), r2=SDS((m, d), jnp.uint32))

@@ -18,11 +18,15 @@ import jax.numpy as jnp
 
 from ..core.bucket_fns import get_bucket_fn
 from ..core.distributed import (KRRStepConfig, make_krr_predict,
-                                make_krr_step, sample_sharded_lsh)
+                                make_krr_predict_hashjoin, make_krr_step,
+                                make_krr_step_hashjoin, sample_sharded_lsh)
 from ..core.precond import DEFAULT_NYSTROM_RANK
 from ..core.lsh import GammaPDF
 from ..data import make_regression_dataset
 from .mesh import make_host_mesh
+
+# hashjoin all_to_all payload dtypes (configs.wlsh_krr.wire_dtype mirrors)
+WIRE_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
 
 
 def _pad_to(x, mult):
@@ -71,6 +75,22 @@ def main() -> int:
                          "(small --lam) iteration counts by >3x")
     ap.add_argument("--precond-rank", type=int, default=DEFAULT_NYSTROM_RANK,
                     help="Nyström pivot rank (ignored by none/jacobi)")
+    ap.add_argument("--table-mode", default="psum",
+                    choices=["psum", "hashjoin"],
+                    help="bucket-table merge strategy: psum keeps the dense "
+                         "(m, B) tables (paper-faithful); hashjoin shards "
+                         "the table over the data axes and all_to_all-routes "
+                         "only the nonzeros (DESIGN.md §6) — prediction "
+                         "consumes the sharded table directly")
+    ap.add_argument("--cap-factor", type=float, default=2.0,
+                    help="hashjoin per-destination routing capacity factor "
+                         "(cap ~ cap_factor·e/n_shards; overflow buckets "
+                         "are dropped — tests pin the behavior)")
+    ap.add_argument("--wire-dtype", default="bf16",
+                    choices=sorted(WIRE_DTYPES),
+                    help="hashjoin all_to_all payload dtype: bf16 halves "
+                         "the wire bytes (f32 accumulate, accuracy pinned); "
+                         "f32 gives exact psum parity")
     ap.add_argument("--num-rhs", type=int, default=1,
                     help="solve an (n, k) RHS block: column 0 is y, the "
                          "rest are unit-normal probes — demonstrates the "
@@ -106,8 +126,15 @@ def main() -> int:
                                    (ytr.shape[0], args.num_rhs - 1))
         ytr = jnp.concatenate([ytr[:, None], probes], axis=1)
 
-    step = jax.jit(make_krr_step(mesh, cfg, f))
-    predict = jax.jit(make_krr_predict(mesh, cfg, f))
+    if args.table_mode == "hashjoin":
+        wire = WIRE_DTYPES[args.wire_dtype]
+        step = jax.jit(make_krr_step_hashjoin(
+            mesh, cfg, f, cap_factor=args.cap_factor, payload_dtype=wire))
+        predict = jax.jit(make_krr_predict_hashjoin(
+            mesh, cfg, f, cap_factor=args.cap_factor, payload_dtype=wire))
+    else:
+        step = jax.jit(make_krr_step(mesh, cfg, f))
+        predict = jax.jit(make_krr_predict(mesh, cfg, f))
 
     t0 = time.time()
     beta, resnorm, tables = step(xtr, ytr, lsh)
@@ -119,7 +146,8 @@ def main() -> int:
     rmse = float(jnp.sqrt(jnp.mean((yhat - yte) ** 2)))
     print(f"[krr] {args.dataset} scale={args.scale}: n={n_tr} d={d} "
           f"m={args.m} B={table} backend={args.backend} fused={args.fused} "
-          f"precond={args.precond} num_rhs={args.num_rhs}")
+          f"precond={args.precond} num_rhs={args.num_rhs} "
+          f"table_mode={args.table_mode} wire={args.wire_dtype}")
     print(f"[krr] fit {t_fit:.2f}s on {n_shards} shard(s); "
           f"CG residual {float(resnorm):.2e}; test RMSE {rmse:.4f} "
           f"(label std = 1.0)")

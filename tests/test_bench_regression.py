@@ -26,6 +26,23 @@ def test_matvec_perf_no_regression():
     assert not failures, "\n".join(failures)
 
 
+def test_hashjoin_distributed_no_regression():
+    """Acceptance pin (PR 6): rerun the distributed benchmark section at the
+    committed (n, shards) cells and fail when ``hashjoin_iter_us`` regresses
+    >2x, when it is not >= 2x below the carried-forward pre-fusion routing
+    cost (``hashjoin_prefuse_iter_us``), or when the k=8 multi-RHS block
+    costs >= 2x a single-RHS iteration per column.  Spawns fake-CPU-mesh
+    subprocesses — minutes-scale, hence slow-marked."""
+    from benchmarks.check_regression import (DEFAULT_BASELINE,
+                                             check_distributed)
+    assert DEFAULT_BASELINE.exists(), "committed BENCH_matvec.json missing"
+    failures, fresh = check_distributed()
+    if not fresh:
+        pytest.skip("no comparable distributed baseline (platform differs "
+                    "or section absent)")
+    assert not failures, "\n".join(failures)
+
+
 def test_serving_latency_no_regression():
     from benchmarks.check_regression import (DEFAULT_SERVING_BASELINE,
                                              check_serving)
