@@ -48,6 +48,13 @@ def main():
     ap.add_argument("--num-rhs", type=int, default=1,
                     help="K > 1 adds K-1 pathwise GP posterior samples to "
                          "the solve as extra RHS columns (one batched fit)")
+    ap.add_argument("--solve-checkpoint-dir", default=None, metavar="DIR",
+                    help="persist the PCG SolveState under DIR during the "
+                         "fit; re-running after a preemption resumes the "
+                         "solve from the last saved chunk")
+    ap.add_argument("--solve-checkpoint-every", type=int, default=0,
+                    help="iterations between SolveState saves (0 with a "
+                         "dir set = maxiter//10)")
     ap.add_argument("--export", default=None, metavar="DIR",
                     help="write the fitted WLSH model as a serving artifact")
     ap.add_argument("--serve", default=None, metavar="DIR",
@@ -90,7 +97,9 @@ def main():
     model = wlsh_krr_fit(jax.random.fold_in(key, 1), xtr, target, spec,
                          m=400, lam=lam, backend=args.backend,
                          fused=args.fused, precond=args.precond,
-                         precond_rank=args.precond_rank)
+                         precond_rank=args.precond_rank,
+                         solve_checkpoint_dir=args.solve_checkpoint_dir,
+                         solve_checkpoint_every=args.solve_checkpoint_every)
     # batch_size streams the test set in fixed memory (O(batch * m) peak)
     pred_wlsh = wlsh_krr_predict(model, xte, batch_size=128)
     t_wlsh = time.time() - t0

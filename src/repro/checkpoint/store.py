@@ -26,6 +26,13 @@ import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
+# Test-injection point (repro.testing.faults.killed_checkpoint_writer): when
+# set, called with the tmp path after arrays.npz is written but before the
+# atomic rename — raising here simulates a writer killed mid-save.  The tmp
+# dir is left behind exactly as a SIGKILL would leave it: full payload,
+# invisible to latest_step, swept later by CheckpointManager._gc.
+_crash_mid_save = None
+
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -59,6 +66,8 @@ def save_checkpoint(directory: str, step: int, state: Any,
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     np.savez(os.path.join(tmp, "arrays.npz"), **_flatten(state))
+    if _crash_mid_save is not None:
+        _crash_mid_save(tmp)
     with open(os.path.join(tmp, "meta.json"), "w") as fh:
         json.dump({"step": step, **(meta or {})}, fh)
     if os.path.exists(final):

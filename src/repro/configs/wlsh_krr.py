@@ -44,6 +44,13 @@ class WLSHKRRConfig:
     wire_dtype: str = "bf16"      # hashjoin all_to_all payload dtype:
                                   # bf16 (half the bytes, f32 accumulate,
                                   # accuracy pinned by tests) | f32 (exact)
+    overflow: str = "warn"        # hashjoin capacity-overflow policy
+                                  # (DESIGN.md §9): raise | warn | allow —
+                                  # dropped-bucket counts are always
+                                  # accounted, never silent
+    solve_checkpoint_every: int = 0  # persist PCG SolveState every N
+                                  # iterations (0 = off); a preempted fit
+                                  # resumes from the last saved chunk
     notes: str = "paper's technique; data-sharded PCG step over the mesh"
 
 

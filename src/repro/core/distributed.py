@@ -25,14 +25,19 @@ collectives; no host-side communication.
 from __future__ import annotations
 
 import functools
+import logging
+import warnings
 from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..backend import default_interpret, resolve_backend
 from ..compat import shard_map
+from ..errors import SolveDivergedError, WireOverflowError
+from ..testing.faults import FaultPlan, apply_wire_fault, maybe_stall
 from .bucket_fns import BucketFn
 from .lsh import GammaPDF, LSHParams, sample_lsh_params
 from .operator import WLSHOperator
@@ -58,6 +63,10 @@ class KRRStepConfig(NamedTuple):
     precond: str = "none"  # 'none' | 'jacobi' (any mesh) | 'nystrom'
                            # (unsharded data axes only — see make_krr_step)
     precond_rank: int = DEFAULT_NYSTROM_RANK
+    overflow: str = "warn"  # hashjoin capacity-overflow policy, enforced by
+                            # check_step_stats: 'raise' | 'warn' | 'allow'
+    fault_plan: FaultPlan | None = None  # test-only deterministic fault
+                                         # injection (repro.testing.faults)
 
 
 def _shard_operator(cfg: KRRStepConfig, f: BucketFn, lsh_local: LSHParams,
@@ -129,6 +138,11 @@ def _bcast(c: Array, v: Array) -> Array:
     return c * v if v.ndim == 1 else c[None, :] * v
 
 
+def _colmask(c: Array, v: Array) -> Array:
+    """Shape a per-column bool mask for a where() over v (n,) or (n, k)."""
+    return c if v.ndim == 1 else c[None, :]
+
+
 def cg_iterations(matvec, y_local: Array, cfg: KRRStepConfig,
                   precond_apply=None):
     """Fixed-iteration PCG on (K~ + lam I) beta = y, vectors data-sharded.
@@ -137,7 +151,14 @@ def cg_iterations(matvec, y_local: Array, cfg: KRRStepConfig,
     sharing each matvec and collective.  ``precond_apply`` (z = P⁻¹ r on
     local shards, e.g. the Jacobi diagonal from ``make_krr_step``) defaults
     to identity, which reduces exactly to plain CG.  Returns
-    (beta_local, resnorm) with resnorm per column for a block."""
+    (beta_local, resnorm) with resnorm per column for a block.
+
+    Non-finite sentinel: a poisoned step (NaN/Inf wire cell reaching the
+    matvec, non-finite target column) deactivates its column BEFORE the bad
+    update lands — (x, r) freeze at the last finite iterate and the column's
+    resnorm reports NaN.  The host-side runner (``run_krr_step_resilient``)
+    turns that sentinel into a bf16→f32 wire retry or a structured
+    ``SolveDivergedError`` instead of silently-garbage betas."""
     lam = jnp.asarray(cfg.lam, jnp.float32)
     identity = precond_apply is None
     psolve = (lambda r: r) if identity else precond_apply
@@ -155,23 +176,36 @@ def cg_iterations(matvec, y_local: Array, cfg: KRRStepConfig,
     x = jnp.zeros_like(y_local)
     r = y_local - amv(x)
     z = psolve(r)
-    p = z
     rho, rs = residual_dots(r, z)
+    dead = ~(jnp.isfinite(rho) & jnp.isfinite(rs))
+    p = jnp.where(_colmask(~dead, z), z, 0.0)
 
     def body(_, state):
-        x, r, p, rho, rs = state
+        x, r, p, rho, rs, dead = state
         ap = amv(p)
         alpha = rho / jnp.maximum(_sharded_dot(p, ap, cfg.data_axes), 1e-30)
-        x = x + _bcast(alpha, p)
-        r = r - _bcast(alpha, ap)
+        # sentinel: a non-finite step deactivates its column for good — the
+        # where() both forces the step to 0 AND blocks 0·NaN from reaching x
+        ok = jnp.isfinite(alpha) & ~dead
+        dead = dead | ~jnp.isfinite(alpha)
+        okb = _colmask(ok, p)
+        alpha = jnp.where(ok, alpha, 0.0)
+        x = x + jnp.where(okb, _bcast(alpha, p), 0.0)
+        r = r - jnp.where(okb, _bcast(alpha, ap), 0.0)
         z = psolve(r)
         rho_new, rs_new = residual_dots(r, z)
-        p = z + _bcast(rho_new / jnp.maximum(rho, 1e-30), p)
-        return x, r, p, rho_new, rs_new
+        bad = ~(jnp.isfinite(rho_new) & jnp.isfinite(rs_new))
+        dead = dead | bad
+        live = ~dead
+        beta = jnp.where(live, rho_new / jnp.maximum(rho, 1e-30), 0.0)
+        p = jnp.where(_colmask(live, p), z + _bcast(beta, p), 0.0)
+        rho = jnp.where(live, rho_new, rho)
+        rs = jnp.where(live, rs_new, rs)
+        return x, r, p, rho, rs, dead
 
-    x, r, p, rho, rs = jax.lax.fori_loop(0, cfg.cg_iters, body,
-                                         (x, r, p, rho, rs))
-    return x, jnp.sqrt(rs)
+    x, r, p, rho, rs, dead = jax.lax.fori_loop(0, cfg.cg_iters, body,
+                                               (x, r, p, rho, rs, dead))
+    return x, jnp.where(dead, jnp.nan, jnp.sqrt(rs))
 
 
 def _shard_preconditioner(cfg: KRRStepConfig, mv, idx):
@@ -341,6 +375,8 @@ class _Routing(NamedTuple):
                        #   through this map instead of a table scatter+gather
     spp: int           # slots per shard
     cap: int           # bucket capacity per destination shard
+    dropped: Array     # scalar int32 — distinct buckets past capacity on
+                       #   THIS shard (overflow accounting, same pack pass)
     plan: _RoutePlan | None = None   # pallas backends only
 
 
@@ -378,6 +414,12 @@ def _routing_maps(slot: Array, lay, n_shards: int, table_size: int,
     rank = lay.seg_id - first_seg[inst, owner]
     pos = off[inst, owner] + rank
     keep = is_first & (pos < cap)
+    # overflow accounting rides the SAME pack pass: every distinct bucket
+    # whose in-owner rank fell past the capacity is a dropped contribution
+    dropped = jnp.sum(is_first & (pos >= cap), dtype=jnp.int32)
+    # build-time load observability: distinct cells bound for each owner
+    # (summed over my local instances) — max vs cap is the headroom signal
+    owner_max = jnp.max(jnp.sum(ucount, axis=0)).astype(jnp.int32)
     cell = jnp.where(keep, owner * cap + pos, nb)              # (m, n)
     flat_seg = inst * n_loc + lay.seg_id                       # (m, n)
     useg_cell = jnp.full((e,), nb, jnp.int32).at[
@@ -391,12 +433,22 @@ def _routing_maps(slot: Array, lay, n_shards: int, table_size: int,
     packed = inst * spp + (ss % spp).astype(jnp.int32)
     send_packed = jnp.full((nb,), -1, jnp.int32).at[cell.reshape(-1)].set(
         packed.reshape(-1), mode="drop").reshape(n_shards, cap)
-    return pt_cell, send_packed, spp, cap
+    return pt_cell, send_packed, spp, cap, dropped, owner_max
 
 
 # destination-cell tile width for the route kernels (matches the table tile
 # width of the binning kernels; cells are wire positions, not table slots)
 ROUTE_BLOCK_T = 512
+
+_LOG = logging.getLogger("repro.distributed")
+
+
+def _log_routing_build(owner_max, *, cap: int, n_shards: int) -> None:
+    over = int(owner_max) > cap
+    _LOG.log(logging.WARNING if over else logging.INFO,
+             "hashjoin routing: max %d cells/owner vs capacity %d "
+             "(%d shard(s))%s", int(owner_max), cap, n_shards,
+             " — OVERFLOW, distinct buckets will be dropped" if over else "")
 
 
 def _make_route_plan(pt_cell: Array, lay, nb: int) -> _RoutePlan:
@@ -424,9 +476,15 @@ def _build_routing(slot: Array, lay, n_shards: int, table_size: int,
     """Precompute the point <-> wire-cell maps and exchange slot requests.
     slot (m_loc, n_loc); ``lay`` is the slot-blocked layout (reference
     group; plus the pallas group when ``kernels`` asks for the route-kernel
-    schedules).  Runs once per CG solve (slots are fixed)."""
-    pt_cell, send_packed, spp, cap = _routing_maps(
+    schedules).  Runs once per CG solve (slots are fixed).
+
+    The max observed cells-per-owner is logged at build time (INFO on the
+    ``repro.distributed`` logger) — the headroom signal for ``cap_factor``
+    tuning, surfaced BEFORE any overflow silently drops mass."""
+    pt_cell, send_packed, spp, cap, dropped, owner_max = _routing_maps(
         slot, lay, n_shards, table_size, cap_factor)
+    jax.debug.callback(functools.partial(_log_routing_build, cap=cap,
+                                         n_shards=n_shards), owner_max)
     recv_packed = jax.lax.all_to_all(send_packed, data_axes, 0, 0,
                                      tiled=True).reshape(-1)
     m_loc = slot.shape[0]
@@ -447,18 +505,21 @@ def _build_routing(slot: Array, lay, n_shards: int, table_size: int,
         hit, jnp.arange(n_shards, dtype=jnp.int32)[:, None] * cap + pos, nb)
     plan = _make_route_plan(pt_cell, lay, nb) if kernels else None
     return _Routing(pt_cell=pt_cell, recv_ids=recv_ids, serve_map=serve_map,
-                    spp=spp, cap=cap, plan=plan)
+                    spp=spp, cap=cap, dropped=dropped, plan=plan)
 
 
 def _hashjoin_send(rt: _Routing, lay, coeff: Array, beta_local: Array,
-                   payload_dtype, interpret: bool) -> Array:
+                   payload_dtype, interpret: bool,
+                   plan: FaultPlan | None = None) -> Array:
     """Route pack: per-point contributions -> (n_shards, cap[, k]) payload.
 
     One flat scatter-add through ``pt_cell`` (flat-XLA fallback) or one
     Pallas route-pack kernel call (``rt.plan``) — the per-bucket segment
     sum happens inside the cell accumulation, so the old per-iteration
     vmap'd ``segment_sum`` + cell scatter pair collapses into one op.
-    Cast to the wire dtype happens once, after the f32 accumulation."""
+    Cast to the wire dtype happens once, after the f32 accumulation.
+    ``plan`` (tests only) drops/poisons wire cells AFTER the cast — the
+    fault rides the all_to_all exactly as a flaky link would inject it."""
     multi = beta_local.ndim == 2
     tail = beta_local.shape[1:]
     nb = rt.recv_ids.shape[0]
@@ -489,54 +550,79 @@ def _hashjoin_send(rt: _Routing, lay, coeff: Array, beta_local: Array,
             num_cell_tiles=sched.num_cell_tiles, block_n=lay.block_n,
             block_t=sched.block_t, interpret=interpret)
         send = packed[:, :nb].T if multi else packed[0, :nb]
-    return send.astype(payload_dtype).reshape((n_shards, rt.cap) + tail)
+    wire = send.astype(payload_dtype).reshape((n_shards, rt.cap) + tail)
+    return apply_wire_fault(plan, wire)
 
 
 def _hashjoin_loads(rt: _Routing, lay, coeff: Array, beta_local: Array,
                     data_axes, m_loc: int, payload_dtype,
-                    interpret: bool) -> Array:
+                    interpret: bool,
+                    plan: FaultPlan | None = None) -> tuple[Array, Array]:
     """Pack + all_to_all + owner scatter-add: MY (m_loc·spp[, k]) f32 table
     shard.  One wire value per distinct (instance, slot) pair; empty cells
-    carry the sentinel id and are dropped by the scatter."""
+    carry the sentinel id and are dropped by the scatter.
+
+    Returns ``(table, nonfinite)``: non-finite received cells are ZEROED
+    before they can poison a table slot (a NaN slot would NaN every future
+    prediction touching it) and counted — the count feeds ``StepStats`` so
+    the policy layer can warn/raise instead of serving silently-wrong
+    loads."""
     tail = beta_local.shape[1:]
     nb = rt.recv_ids.shape[0]
     send = _hashjoin_send(rt, lay, coeff, beta_local, payload_dtype,
-                          interpret)
+                          interpret, plan)
     recv = jax.lax.all_to_all(send, data_axes, 0, 0, tiled=True)
-    return jnp.zeros((m_loc * rt.spp,) + tail, jnp.float32).at[
-        rt.recv_ids].add(recv.reshape((nb,) + tail).astype(jnp.float32),
-                         mode="drop")
+    recv_flat = recv.reshape((nb,) + tail).astype(jnp.float32)
+    finite = jnp.isfinite(recv_flat)
+    nonfinite = jnp.sum(~finite, dtype=jnp.int32)
+    recv_flat = jnp.where(finite, recv_flat, 0.0)
+    table = jnp.zeros((m_loc * rt.spp,) + tail, jnp.float32).at[
+        rt.recv_ids].add(recv_flat, mode="drop")
+    return table, nonfinite
 
 
 def _hashjoin_readout(rt: _Routing, lay, coeff: Array, table: Array,
                       data_axes, model_axis, m_total: int, payload_dtype,
-                      interpret: bool) -> Array:
+                      interpret: bool,
+                      plan: FaultPlan | None = None) -> Array:
     """Serve the fixed slot requests from my table shard, all_to_all the
     values back, and unpack (``_hashjoin_return``).  This is the
-    materialized-table path — prediction against a stored shard."""
+    materialized-table path — prediction against a stored shard.  The
+    return hop sanitizes non-finite wire cells (``sanitize=True``): a
+    poisoned prediction exchange degrades to dropped bucket mass, it never
+    emits a NaN prediction."""
     # recv_ids sentinel (== m_loc·spp) is out of bounds -> empty wire cells
     # serve 0, with no per-iteration sentinel-row concat over the table
     served = table.at[rt.recv_ids].get(mode="fill", fill_value=0)
     return _hashjoin_return(rt, lay, coeff, served, data_axes, model_axis,
-                            m_total, payload_dtype, interpret)
+                            m_total, payload_dtype, interpret, plan=plan,
+                            sanitize=True)
 
 
 def _hashjoin_return(rt: _Routing, lay, coeff: Array, served: Array,
                      data_axes, model_axis, m_total: int, payload_dtype,
-                     interpret: bool) -> Array:
+                     interpret: bool, plan: FaultPlan | None = None,
+                     sanitize: bool = False) -> Array:
     """all_to_all the served (NB[, k]) wire-cell values back and unpack:
     out = psum_model(sum_s coeff · back[pt_cell]) / m.  The unpack is one
     flat gather + coeff reduce (flat-XLA) or one Pallas route-unpack kernel
-    call; dropped cells gather 0 both ways."""
+    call; dropped cells gather 0 both ways.
+
+    ``sanitize`` zeroes non-finite received cells (prediction path: a fault
+    degrades to dropped mass).  The CG matvec path leaves them in — the
+    solver's residual sentinel is the detection signal there, and zeroing
+    would hide the divergence."""
     multi = served.ndim == 2
     tail = served.shape[1:]
     nb = rt.recv_ids.shape[0]
     n_shards = nb // rt.cap
     m_loc = coeff.shape[0]
-    back = jax.lax.all_to_all(
-        served.astype(payload_dtype).reshape((n_shards, rt.cap) + tail),
-        data_axes, 0, 0, tiled=True)
+    wire = apply_wire_fault(
+        plan, served.astype(payload_dtype).reshape((n_shards, rt.cap) + tail))
+    back = jax.lax.all_to_all(wire, data_axes, 0, 0, tiled=True)
     back_flat = back.reshape((nb,) + tail).astype(jnp.float32)
+    if sanitize:
+        back_flat = jnp.where(jnp.isfinite(back_flat), back_flat, 0.0)
     if rt.plan is None:
         # pt_cell sentinel (== nb) out of bounds -> dropped points read 0
         vals = back_flat.at[rt.pt_cell].get(
@@ -565,7 +651,8 @@ def _hashjoin_return(rt: _Routing, lay, coeff: Array, served: Array,
 
 def _hashjoin_matvec(rt: _Routing, lay, coeff: Array, m_total: int,
                      data_axes, model_axis, beta_local: Array,
-                     payload_dtype, interpret: bool):
+                     payload_dtype, interpret: bool,
+                     plan: FaultPlan | None = None):
     """One hash-join K~ matvec: pack -> a2a -> serve -> a2a -> unpack ->
     model psum.  The serve never materializes the owner's table: each wire
     cell's aggregate is the cross-run segment-sum of the received payloads,
@@ -579,7 +666,7 @@ def _hashjoin_matvec(rt: _Routing, lay, coeff: Array, m_total: int,
     tail = beta_local.shape[1:]
     nb = rt.recv_ids.shape[0]
     send = _hashjoin_send(rt, lay, coeff, beta_local, payload_dtype,
-                          interpret)
+                          interpret, plan)
     recv = jax.lax.all_to_all(send, data_axes, 0, 0, tiled=True)
     recv_flat = recv.reshape((nb,) + tail).astype(jnp.float32)
     served = recv_flat.at[rt.serve_map[0]].get(mode="fill", fill_value=0)
@@ -596,11 +683,90 @@ def _hashjoin_layout_parts(backend: str) -> str:
     return "both" if backend == "pallas" else "reference"
 
 
+class StepStats(NamedTuple):
+    """Global fault counters from one hash-join step, psum'd over every mesh
+    axis (replicated — tiny int32 scalars).  ``check_step_stats`` turns them
+    into the configured policy action on the host."""
+
+    overflow_dropped: Array   # distinct buckets dropped past routing capacity
+    wire_nonfinite: Array     # non-finite wire cells zeroed in the final
+                              # (f32) table exchange
+
+
+OVERFLOW_POLICIES = ("raise", "warn", "allow")
+
+
+def check_step_stats(stats: StepStats, *, overflow: str = "warn") -> None:
+    """Host-side policy gate for a completed hash-join step (raising inside
+    the traced step is impossible — the counters come out as outputs).
+
+    overflow='raise' turns dropped buckets OR zeroed non-finite wire cells
+    into a structured ``WireOverflowError``; 'warn' warns once per call;
+    'allow' documents that dropped mass is acceptable (the estimator stays
+    unbiased in sign expectation — see the hash-join module comment)."""
+    if overflow not in OVERFLOW_POLICIES:
+        raise ValueError(f"overflow must be one of {OVERFLOW_POLICIES}, "
+                         f"got {overflow!r}")
+    dropped = int(np.asarray(stats.overflow_dropped))
+    nonfinite = int(np.asarray(stats.wire_nonfinite))
+    if dropped == 0 and nonfinite == 0:
+        return
+    msg = (f"hashjoin step dropped {dropped} distinct bucket(s) past the "
+           f"routing capacity and zeroed {nonfinite} non-finite wire "
+           f"cell(s); raise cap_factor or investigate the payload")
+    if overflow == "raise":
+        raise WireOverflowError(msg, dropped=dropped)
+    if overflow == "warn":
+        warnings.warn(msg, RuntimeWarning, stacklevel=2)
+
+
+def run_krr_step_resilient(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn,
+                           x, y, lsh, *, cap_factor: float = 2.0,
+                           payload_dtype=jnp.bfloat16):
+    """Run the hash-join step with the full recovery ladder (DESIGN.md §9):
+
+    1. execute with the configured wire dtype,
+    2. apply the ``cfg.overflow`` policy to the step's fault counters,
+    3. on a non-finite solve (NaN resnorm sentinel from ``cg_iterations``)
+       retry ONCE with an f32 wire — bf16's coarser grid is the usual
+       suspect and the retry costs one extra step execution,
+    4. still non-finite → structured ``SolveDivergedError`` (never return
+       silently-garbage betas).
+
+    Returns (beta, resnorm, table, stats) like ``make_krr_step_hashjoin``.
+    Host-side by construction (the policy check syncs the counters), so use
+    it from drivers — not inside jit."""
+    step = jax.jit(make_krr_step_hashjoin(mesh, cfg, f,
+                                          cap_factor=cap_factor,
+                                          payload_dtype=payload_dtype))
+    beta, resnorm, table, stats = step(x, y, lsh)
+    check_step_stats(stats, overflow=cfg.overflow)
+    retried = False
+    if not bool(jnp.all(jnp.isfinite(resnorm))):
+        if payload_dtype == jnp.bfloat16:
+            warnings.warn("non-finite CG residual on the bf16 wire; "
+                          "retrying once with an f32 wire",
+                          RuntimeWarning, stacklevel=2)
+            retried = True
+            step32 = jax.jit(make_krr_step_hashjoin(
+                mesh, cfg, f, cap_factor=cap_factor,
+                payload_dtype=jnp.float32))
+            beta, resnorm, table, stats = step32(x, y, lsh)
+            check_step_stats(stats, overflow=cfg.overflow)
+        if not bool(jnp.all(jnp.isfinite(resnorm))):
+            raise SolveDivergedError(
+                "distributed CG residual non-finite"
+                + (" (f32 wire retry included)" if retried else ""),
+                resnorm=np.asarray(resnorm),
+                fallbacks=("wire:bf16->f32",) if retried else ())
+    return beta, resnorm, table, stats
+
+
 def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
                            cap_factor: float = 2.0,
                            payload_dtype=jnp.bfloat16):
     """Hash-join variant of make_krr_step (same signature; returns
-    (beta, resnorm, table_shard) with the table SHARDED over data:
+    (beta, resnorm, table_shard, stats) with the table SHARDED over data:
     out spec P(model_axis, data_axes), so the assembled global table is the
     standard (m, B[, k]) prediction structure with owner s holding slots
     [s·spp, (s+1)·spp) — ``make_krr_predict_hashjoin`` consumes it without
@@ -626,6 +792,13 @@ def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
     tests); pass ``payload_dtype=jnp.float32`` for exact psum parity.  The
     final prediction table is always built with an f32 wire — it is one
     extra exchange per solve and serves every future prediction.
+
+    The fourth output is a ``StepStats`` (replicated int32 counters):
+    distinct buckets dropped past the routing capacity, plus non-finite
+    wire cells zeroed in the final table exchange.  Feed it to
+    ``check_step_stats`` (or use ``run_krr_step_resilient``) to enforce
+    ``cfg.overflow``; ``cfg.fault_plan`` (tests) injects wire faults and
+    shard stalls into the compiled step.
     """
     if cfg.precond == "nystrom":
         raise ValueError(
@@ -644,11 +817,14 @@ def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
     in_specs = (P(cfg.data_axes, None), data_spec,
                 LSHParams(w=P(cfg.model_axis, None), z=P(cfg.model_axis, None),
                           r1=P(cfg.model_axis, None), r2=P(cfg.model_axis, None)))
-    out_specs = (data_spec, P(), P(cfg.model_axis, cfg.data_axes))
+    all_axes = tuple(cfg.data_axes) + (cfg.model_axis,)
+    out_specs = (data_spec, P(), P(cfg.model_axis, cfg.data_axes),
+                 StepStats(P(), P()))
 
     @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs)
     def step(x_local, y_local, lsh_local):
+        maybe_stall(cfg.fault_plan, cfg.data_axes)
         op = _shard_operator(cfg, f, lsh_local, fused=False)
         # blocked=True rides the layout's stable slot sort — the ONLY sort
         # in the step; parts='both' adds the route-kernel arrays on pallas
@@ -661,15 +837,20 @@ def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
         interp = default_interpret()
         mv = lambda v: _hashjoin_matvec(rt, lay, idx.coeff, cfg.m,
                                         cfg.data_axes, cfg.model_axis, v,
-                                        payload_dtype, interp)
+                                        payload_dtype, interp,
+                                        cfg.fault_plan)
         pre = _shard_preconditioner(cfg, None, idx)
         beta_local, resnorm = cg_iterations(mv, y_local, cfg,
                                             precond_apply=pre)
         # final sharded prediction table for the solved beta (f32 wire)
-        table = _hashjoin_loads(rt, lay, idx.coeff, beta_local,
-                                cfg.data_axes, m_loc, jnp.float32, interp)
+        table, wire_nf = _hashjoin_loads(rt, lay, idx.coeff, beta_local,
+                                         cfg.data_axes, m_loc, jnp.float32,
+                                         interp, cfg.fault_plan)
+        stats = StepStats(
+            overflow_dropped=jax.lax.psum(rt.dropped, all_axes),
+            wire_nonfinite=jax.lax.psum(wire_nf, all_axes))
         return beta_local, resnorm, table.reshape(
-            (m_loc, rt.spp) + table.shape[1:])
+            (m_loc, rt.spp) + table.shape[1:]), stats
 
     return step
 
@@ -712,6 +893,7 @@ def make_krr_predict_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
         table_flat = table_local.reshape((-1,) + table_local.shape[2:])
         return _hashjoin_readout(rt, idx.blocked, idx.coeff, table_flat,
                                  cfg.data_axes, cfg.model_axis, cfg.m,
-                                 payload_dtype, default_interpret())
+                                 payload_dtype, default_interpret(),
+                                 plan=cfg.fault_plan)
 
     return predict

@@ -20,11 +20,14 @@ same solver drives the jnp reference backend, the fused Pallas kernels
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ..errors import NonFiniteError, SolveDivergedError
 from .bucket_fns import get_bucket_fn
 from .kernels import WLSHKernelSpec
 from .lsh import LSHParams, sample_lsh_params
@@ -49,10 +52,53 @@ class PCGResult(NamedTuple):
     resnorm: Array    # (k,) f32 — final per-column ||r||
 
 
+class SolveState(NamedTuple):
+    """Serializable PCG state — everything ``pcg_solve`` needs to continue a
+    solve from iteration ``it`` exactly where it left off.  Internals are
+    always the 2-D block form ((n, k) even for a 1-D ``b``), so a persisted
+    state round-trips through ``checkpoint/store.py`` (npz is bitwise for
+    f32/int32/bool) and resumes on either calling convention."""
+
+    x: Array          # (n, k) current iterates
+    r: Array          # (n, k) residuals
+    p: Array          # (n, k) search directions
+    rs: Array         # (k,) ||r||² (NaN = column deactivated by a sentinel)
+    rho: Array        # (k,) M⁻¹-inner products
+    active: Array     # (k,) bool — still iterating
+    it: Array         # scalar int32 — iterations completed
+    col_iters: Array  # (k,) int32 — per-column convergence iteration
+
+
+def solve_state_template(b: Array) -> SolveState:
+    """Zero-filled ``SolveState`` shaped for RHS ``b`` — the restore template
+    for ``checkpoint.restore_checkpoint``."""
+    n = b.shape[0]
+    k = 1 if b.ndim == 1 else b.shape[1]
+    zk = np.zeros((k,), np.float32)
+    znk = np.zeros((n, k), np.float32)
+    return SolveState(x=znk, r=znk.copy(), p=znk.copy(), rs=zk,
+                      rho=zk.copy(), active=np.zeros((k,), bool),
+                      it=np.zeros((), np.int32),
+                      col_iters=np.zeros((k,), np.int32))
+
+
+def load_solve_state(directory: str, b: Array) -> SolveState | None:
+    """Latest persisted ``SolveState`` under ``directory`` (None when the
+    directory holds no complete checkpoint — a fresh solve)."""
+    from ..checkpoint.store import latest_step, restore_checkpoint
+    if latest_step(directory) is None:
+        return None
+    state, _, _ = restore_checkpoint(directory, solve_state_template(b))
+    return jax.tree.map(jnp.asarray, state)
+
+
 def pcg_solve(matvec: MatVec, b: Array, lam: float, *,
               precond: Preconditioner | None = None, tol: float = 1e-6,
               atol: float = 1e-12, maxiter: int = 200,
-              x0: Array | None = None) -> PCGResult:
+              x0: Array | None = None, state: SolveState | None = None,
+              checkpoint_every: int = 0,
+              on_checkpoint: Callable[[SolveState], None] | None = None,
+              ) -> PCGResult:
     """Solve (A + lam I) X = B with preconditioned conjugate gradients.
 
     ``b`` is (n,) for one system or (n, k) for a RHS block; with a block the
@@ -75,45 +121,71 @@ def pcg_solve(matvec: MatVec, b: Array, lam: float, *,
     For a 1-D ``b`` the user matvec is only ever called with 1-D vectors
     (the block machinery runs on a width-1 column internally), so existing
     single-RHS matvec closures keep working unchanged.
+
+    A column whose step goes non-finite (poisoned matvec, preconditioner
+    breakdown) is deactivated BEFORE the bad update lands — its (x, r)
+    freeze at the last finite iterate and its resnorm reports NaN, so the
+    caller sees a sentinel instead of silent garbage while the healthy
+    columns converge untouched.
+
+    ``checkpoint_every > 0`` runs the loop in chunks of that many iterations
+    and calls ``on_checkpoint(SolveState)`` after each chunk (eager mode
+    only: the host loop syncs the iteration counter).  Pass a persisted
+    ``state`` to resume — the trajectory continues bitwise where the saved
+    chunk ended, so a preempted solve finishes within float tolerance of an
+    uninterrupted one.  ``checkpoint_every = 0`` keeps the historical single
+    while_loop (fully jittable).
     """
     vec = b.ndim == 1
     inner_mv = (lambda v: matvec(v[:, 0])[:, None]) if vec else matvec
     b2 = b[:, None] if vec else b
-    k = b2.shape[1]
     lam = jnp.asarray(lam, b2.dtype)
     eps = jnp.asarray(1e-30, b2.dtype)           # breakdown guard, hoisted
-    maxiter = jnp.asarray(maxiter, jnp.int32)
+    maxiter = int(maxiter)
+    maxiter_a = jnp.asarray(maxiter, jnp.int32)
     psolve = (identity_precond() if precond is None else precond).apply
 
     def amv(v):
         return inner_mv(v) + lam * v
 
-    if x0 is None:
-        x = jnp.zeros_like(b2)
-    else:
-        x = x0[:, None] if vec else x0
-    r = b2 - amv(x)
-    z = psolve(r)
-    rs = jnp.sum(r * r, axis=0)                  # (k,) true residual norms²
-    rho = jnp.sum(r * z, axis=0)                 # (k,) M⁻¹-inner products
     bnorm = jnp.sqrt(jnp.sum(b2 * b2, axis=0))
     thresh = jnp.maximum(tol * bnorm, jnp.asarray(atol, b2.dtype)) ** 2
-    active = rs > thresh
-    p = jnp.where(active[None, :], z, 0.0)
-    col_iters = jnp.where(active, maxiter, 0).astype(jnp.int32)
 
-    def cond(state):
-        _, _, _, _, _, active, it, _ = state
-        return jnp.any(active) & (it < maxiter)
+    if state is None:
+        if x0 is None:
+            x = jnp.zeros_like(b2)
+        else:
+            x = x0[:, None] if vec else x0
+        r = b2 - amv(x)
+        z = psolve(r)
+        rs = jnp.sum(r * r, axis=0)              # (k,) true residual norms²
+        rho = jnp.sum(r * z, axis=0)             # (k,) M⁻¹-inner products
+        active = rs > thresh
+        p = jnp.where(active[None, :], z, 0.0)
+        col_iters = jnp.where(active, maxiter_a, 0).astype(jnp.int32)
+        state = SolveState(x=x, r=r, p=p, rs=rs, rho=rho, active=active,
+                           it=jnp.asarray(0, jnp.int32),
+                           col_iters=col_iters)
+    chunk = int(checkpoint_every) if checkpoint_every > 0 else maxiter
 
-    def body(state):
-        x, r, p, rs, rho, active, it, col_iters = state
+    def cond(carry):
+        steps, st = carry
+        return jnp.any(st.active) & (st.it < maxiter_a) & (steps < chunk)
+
+    def body(carry):
+        steps, st = carry
+        x, r, p, rs, rho, active, it, col_iters = st
         ap = amv(p)
         denom = jnp.sum(p * ap, axis=0)
-        alpha = jnp.where(active, rho / jnp.maximum(denom, eps), 0.0)
-        x = x + alpha[None, :] * p
-        r = r - alpha[None, :] * ap
+        alpha = rho / jnp.maximum(denom, eps)
+        # non-finite sentinel: a NaN/Inf step (poisoned ap, broken psolve)
+        # never lands on (x, r) — the column deactivates with rs = NaN
+        ok = active & jnp.isfinite(alpha)
+        alpha = jnp.where(ok, alpha, 0.0)
+        x = x + jnp.where(ok[None, :], alpha[None, :] * p, 0.0)
+        r = r - jnp.where(ok[None, :], alpha[None, :] * ap, 0.0)
         rs = jnp.sum(r * r, axis=0)
+        rs = jnp.where(active & ~ok, jnp.nan, rs)
         # a column whose residual goes non-finite (preconditioner breakdown
         # at extreme conditioning) is deactivated instead of burning the
         # remaining iterations on NaNs; its resnorm reports the failure
@@ -126,15 +198,28 @@ def pcg_solve(matvec: MatVec, b: Array, lam: float, *,
         # deflation: converged columns get p = 0, so alpha·p and alpha·ap
         # vanish and their (x, r) are frozen from here on
         p = jnp.where(active[None, :], z + beta[None, :] * p, 0.0)
-        return x, r, p, rs, rho_new, active, it + 1, col_iters
+        return steps + 1, SolveState(x, r, p, rs, rho_new, active, it + 1,
+                                     col_iters)
 
-    x, r, p, rs, rho, active, it, col_iters = jax.lax.while_loop(
-        cond, body,
-        (x, r, p, rs, rho, active, jnp.asarray(0, jnp.int32), col_iters))
+    def run_chunk(st: SolveState) -> SolveState:
+        return jax.lax.while_loop(cond, body,
+                                  (jnp.asarray(0, jnp.int32), st))[1]
+
+    if chunk >= maxiter:                         # historical one-shot path
+        state = run_chunk(state)
+        if on_checkpoint is not None:
+            on_checkpoint(state)
+    else:
+        while True:                              # eager chunked/checkpointed
+            state = run_chunk(state)
+            if on_checkpoint is not None:
+                on_checkpoint(state)             # may raise (preemption)
+            if int(state.it) >= maxiter or not bool(jnp.any(state.active)):
+                break
     # columns still active at maxiter report maxiter (their init value)
-    resnorm = jnp.sqrt(rs)
-    return PCGResult(x=x[:, 0] if vec else x, iters=it,
-                     col_iters=col_iters, resnorm=resnorm)
+    resnorm = jnp.sqrt(state.rs)
+    return PCGResult(x=state.x[:, 0] if vec else state.x, iters=state.it,
+                     col_iters=state.col_iters, resnorm=resnorm)
 
 
 def cg_solve(matvec: MatVec, b: Array, lam: float, *, tol: float = 1e-6,
@@ -180,6 +265,8 @@ class WLSHKRRModel(NamedTuple):
     backend: str = "reference"   # concrete backend the model was fit with
     precond: str = "none"        # preconditioner the solve used
     cg_col_iters: Array | None = None  # (k,) per-column iteration counts
+    solve_fallback: str = ""     # nonempty when a one-shot fallback ran
+                                 # (e.g. "precond:jacobi->identity")
 
 
 def model_operator(model: WLSHKRRModel, *,
@@ -197,7 +284,11 @@ def wlsh_krr_fit(key: jax.Array, x: Array, y: Array, spec: WLSHKernelSpec, *,
                  tol: float = 1e-5, atol: float = 1e-12, maxiter: int = 400,
                  backend: str | None = "auto", fused: bool = True,
                  precond: str = "none",
-                 precond_rank: int = DEFAULT_NYSTROM_RANK) -> WLSHKRRModel:
+                 precond_rank: int = DEFAULT_NYSTROM_RANK,
+                 nonfinite_targets: str = "raise",
+                 solve_checkpoint_dir: str | None = None,
+                 solve_checkpoint_every: int = 0,
+                 on_solve_checkpoint=None) -> WLSHKRRModel:
     """``fused`` selects the one-pass slot-blocked matvec for the CG solve
     (default); ``fused=False`` keeps the split scatter→gather path reachable
     for A/B runs.  The fitted model (beta, tables) is identical either way —
@@ -212,7 +303,36 @@ def wlsh_krr_fit(key: jax.Array, x: Array, y: Array, spec: WLSHKernelSpec, *,
     'nystrom', see core/precond.py); 'nystrom' builds its rank-
     ``precond_rank`` pivoted factorization with one extra multi-RHS matvec
     before the solve and typically cuts ill-conditioned (small-lam)
-    iteration counts by well over 3x."""
+    iteration counts by well over 3x.
+
+    Resilience (DESIGN.md §9): ``nonfinite_targets`` controls what a NaN/Inf
+    in ``x``/``y`` does — 'raise' (default) rejects the fit with a structured
+    ``NonFiniteError`` before any compute; 'deactivate' lets the solver's
+    sentinel logic freeze the poisoned columns (their resnorm reports NaN,
+    beta stays finite).  A non-finite PCG residual under a non-identity
+    preconditioner triggers ONE restart with the identity preconditioner
+    (recorded in ``model.solve_fallback``); if beta is still non-finite the
+    fit raises ``SolveDivergedError`` rather than return garbage.
+
+    ``solve_checkpoint_dir`` persists the solver's ``SolveState`` every
+    ``solve_checkpoint_every`` iterations (default maxiter//10) through
+    ``checkpoint/store.py`` and RESUMES from the newest complete state in
+    that directory — a preempted fit restarted with the same arguments
+    continues where it left off.  ``on_solve_checkpoint`` (called after each
+    persisted state) is the test hook that simulates the preemption."""
+    if nonfinite_targets not in ("raise", "deactivate"):
+        raise ValueError(f"nonfinite_targets must be 'raise' or "
+                         f"'deactivate', got {nonfinite_targets!r}")
+    if nonfinite_targets == "raise":
+        for name, arr in (("x", x), ("y", y)):
+            if isinstance(arr, jax.core.Tracer):
+                continue                   # traced fit: host check impossible
+            bad = int(jnp.sum(~jnp.isfinite(arr)))
+            if bad:
+                raise NonFiniteError(
+                    f"{bad} non-finite value(s) in training {name}; clean "
+                    f"the data or pass nonfinite_targets='deactivate'",
+                    where=name, count=bad)
     n, d = x.shape
     if table_size <= 0:
         # heuristic: ~4x points per instance keeps same-slot collisions rare
@@ -241,8 +361,43 @@ def wlsh_krr_fit(key: jax.Array, x: Array, y: Array, spec: WLSHKernelSpec, *,
     pre = make_preconditioner(precond, matvec=mv, diag=diag, lam=lam,
                               rank=precond_rank)
 
+    state = None
+    every = int(solve_checkpoint_every)
+    on_ck = on_solve_checkpoint if every > 0 else None
+    if solve_checkpoint_dir:
+        from ..checkpoint.store import CheckpointManager
+        if every <= 0:
+            every = max(1, maxiter // 10)
+        mgr = CheckpointManager(solve_checkpoint_dir, keep=2)
+        state = load_solve_state(solve_checkpoint_dir, y)
+
+        def on_ck(st):
+            # persist FIRST, then fire the test hook: a preemption injected
+            # by the hook leaves this chunk's state already on disk
+            mgr.save(int(st.it), st, blocking=True)
+            if on_solve_checkpoint is not None:
+                on_solve_checkpoint(st)
+
     res = pcg_solve(mv, y, lam, precond=pre, tol=tol, atol=atol,
-                    maxiter=maxiter)
+                    maxiter=maxiter, state=state, checkpoint_every=every,
+                    on_checkpoint=on_ck)
+    fallback = ""
+    eager = not isinstance(res.resnorm, jax.core.Tracer)
+    if eager and precond not in ("none", None) \
+            and not bool(jnp.all(jnp.isfinite(res.resnorm))):
+        # one-shot fallback: a diverged preconditioned solve restarts once
+        # with the identity preconditioner before giving up
+        warnings.warn(f"PCG with precond={precond!r} went non-finite; "
+                      f"restarting once with the identity preconditioner",
+                      RuntimeWarning, stacklevel=2)
+        fallback = f"precond:{precond}->identity"
+        res = pcg_solve(mv, y, lam, precond=None, tol=tol, atol=atol,
+                        maxiter=maxiter)
+    if eager and not bool(jnp.all(jnp.isfinite(res.x))):
+        raise SolveDivergedError(
+            "PCG iterates are non-finite after all fallbacks",
+            resnorm=np.asarray(res.resnorm),
+            fallbacks=(fallback,) if fallback else ())
     tables = op.loads(tidx, res.x)
     squeeze = y.ndim == 1
     return WLSHKRRModel(lsh=lsh, bucket_name=spec.bucket.name, beta=res.x,
@@ -251,7 +406,8 @@ def wlsh_krr_fit(key: jax.Array, x: Array, y: Array, spec: WLSHKernelSpec, *,
                         cg_resnorm=res.resnorm[0] if squeeze
                         else res.resnorm,
                         backend=op.backend, precond=precond,
-                        cg_col_iters=res.col_iters)
+                        cg_col_iters=res.col_iters,
+                        solve_fallback=fallback)
 
 
 def wlsh_krr_predict(model: WLSHKRRModel, x_test: Array, *,

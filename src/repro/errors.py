@@ -1,0 +1,86 @@
+"""Structured error taxonomy for the resilience layer (DESIGN.md §9).
+
+Every fault the system can hit — numerical divergence, wire overflow, serving
+overload, a crashed worker, an injected test fault — surfaces as one of these
+types, so callers can catch precisely (shed vs crash vs retry) instead of
+string-matching RuntimeError messages.  The serving errors carry the queue
+state they were raised under; the solver errors carry the residuals.
+"""
+from __future__ import annotations
+
+
+class ReproError(Exception):
+    """Base class for all structured repro errors."""
+
+
+# -- numerical ---------------------------------------------------------------
+
+class NonFiniteError(ReproError, ValueError):
+    """Non-finite values where finite ones are required (NaN training
+    target, Inf query row, poisoned table).  ``where`` names the array."""
+
+    def __init__(self, message: str, *, where: str = "", count: int = 0):
+        super().__init__(message)
+        self.where = where
+        self.count = int(count)
+
+
+class SolveDivergedError(ReproError, ArithmeticError):
+    """A solve ended with non-finite iterates/residuals after every
+    configured fallback (precond→identity restart, bf16→f32 wire retry)."""
+
+    def __init__(self, message: str, *, resnorm=None, fallbacks=()):
+        super().__init__(message)
+        self.resnorm = resnorm
+        self.fallbacks = tuple(fallbacks)
+
+
+class WireOverflowError(ReproError, RuntimeError):
+    """Hash-join routing dropped distinct buckets past the per-destination
+    capacity and the step ran with ``overflow='raise'``."""
+
+    def __init__(self, message: str, *, dropped: int = 0):
+        super().__init__(message)
+        self.dropped = int(dropped)
+
+
+# -- serving -----------------------------------------------------------------
+
+class ServingError(ReproError):
+    """Base class for request-path failures."""
+
+
+class Overloaded(ServingError):
+    """Request shed by queue-depth load shedding — a structured result the
+    client can back off on, never a hang."""
+
+    def __init__(self, message: str = "request shed: queue full", *,
+                 queue_depth: int = 0):
+        super().__init__(message)
+        self.queue_depth = int(queue_depth)
+
+
+class DeadlineExceeded(ServingError):
+    """The request's deadline budget elapsed before its batch ran."""
+
+    def __init__(self, message: str = "deadline exceeded", *,
+                 waited_s: float = 0.0):
+        super().__init__(message)
+        self.waited_s = float(waited_s)
+
+
+class WorkerCrashed(ServingError):
+    """The batcher worker thread died; all in-flight futures fail with this
+    and subsequent submits fail fast instead of hanging forever."""
+
+
+class InvalidRequest(ServingError, ValueError):
+    """Malformed request rejected before it reaches the model (non-finite
+    query row, wrong dimensionality)."""
+
+
+# -- test harness ------------------------------------------------------------
+
+class FaultInjected(ReproError):
+    """Raised by repro.testing.faults when an armed fault fires — only ever
+    seen under test control."""

@@ -24,7 +24,8 @@ import time
 
 import numpy as np
 
-from ..serve import MicroBatcher, Predictor, bucket_sizes
+from ..serve import (DeadlineExceeded, MicroBatcher, Overloaded, Predictor,
+                     bucket_sizes)
 
 
 def _synthetic_stream(d: int, n_requests: int, dup_frac: float,
@@ -49,14 +50,20 @@ def _synthetic_stream(d: int, n_requests: int, dup_frac: float,
 
 def serve_stream(predictor: Predictor, stream: np.ndarray, *,
                  max_batch: int, max_wait_us: int,
-                 target_qps: float = 0.0) -> dict:
+                 target_qps: float = 0.0, max_queue: int = 0,
+                 deadline_us: int | None = None) -> dict:
     """Push every row of ``stream`` through a MicroBatcher; returns the
     batcher stats plus end-to-end wall clock.  ``target_qps`` paces the
-    offered load (0 = as fast as the submit loop goes)."""
+    offered load (0 = as fast as the submit loop goes).  Shed (Overloaded)
+    and expired (DeadlineExceeded) requests are counted in
+    ``stats['rejected']`` — degraded mode answers structurally, it never
+    hangs or crashes the driver."""
     gap = 1.0 / target_qps if target_qps > 0 else 0.0
     with MicroBatcher(lambda xb: predictor.predict(xb),
                       max_batch=max_batch, max_wait_us=max_wait_us,
-                      dim=stream.shape[1]) as mb:
+                      dim=stream.shape[1], max_queue=max_queue,
+                      deadline_us=deadline_us) as mb:
+        predictor.attach_batcher(mb)
         t0 = time.perf_counter()
         futures = []
         for i, row in enumerate(stream):
@@ -69,12 +76,19 @@ def serve_stream(predictor: Predictor, stream: np.ndarray, *,
                         break
                     time.sleep(min(rem, 5e-4))
             futures.append(mb.submit(row))
-        results = np.stack([f.result(timeout=60.0) for f in futures])
+        rows, rejected = [], 0
+        for f in futures:
+            try:
+                rows.append(f.result(timeout=60.0))
+            except (Overloaded, DeadlineExceeded):
+                rejected += 1
         wall = time.perf_counter() - t0
         stats = mb.stats()
     stats["wall_s"] = wall
     stats["offered_qps"] = target_qps or float("inf")
-    stats["results"] = results
+    stats["results"] = (np.stack(rows) if rows
+                        else np.zeros((0,), np.float32))
+    stats["rejected"] = rejected
     return stats
 
 
@@ -163,6 +177,13 @@ def main(argv=None) -> int:
                     help="paced offered load; 0 = unthrottled")
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-wait-us", type=int, default=2000)
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="load shedding: submits past this queue depth fail "
+                         "fast with Overloaded (0 = unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline budget; a request still "
+                         "queued past it fails with DeadlineExceeded "
+                         "(0 = no deadline)")
     ap.add_argument("--cache-entries", type=int, default=65536,
                     help="bucket-exact cache size; 0 disables")
     ap.add_argument("--seed", type=int, default=0)
@@ -206,7 +227,10 @@ def _serve_main(predictor: Predictor, aid: str, args) -> int:
 
     stats = serve_stream(predictor, stream, max_batch=args.max_batch,
                          max_wait_us=args.max_wait_us,
-                         target_qps=args.target_qps)
+                         target_qps=args.target_qps,
+                         max_queue=args.max_queue,
+                         deadline_us=(int(args.deadline_ms * 1000)
+                                      if args.deadline_ms > 0 else None))
     print(f"[krr_serve] {stats['served']} requests in {stats['wall_s']:.2f}s "
           f"-> {stats['qps']:.0f} QPS achieved "
           f"({stats['batches']} batches, mean {stats['mean_batch']:.1f} "
@@ -214,11 +238,19 @@ def _serve_main(predictor: Predictor, aid: str, args) -> int:
     print(f"[krr_serve] latency p50 {stats['p50_us']:.0f}us  "
           f"p99 {stats['p99_us']:.0f}us  (max_batch={args.max_batch}, "
           f"max_wait={args.max_wait_us}us)")
+    if stats["rejected"]:
+        print(f"[krr_serve] degraded mode: {stats['shed']} shed, "
+              f"{stats['deadline_expired']} deadline-expired "
+              f"({stats['rejected']} rejected total, shed rate "
+              f"{stats['shed_rate']:.2f})")
     cache = predictor.cache_stats(artifact_id=aid)
     if cache is not None:
         print(f"[krr_serve] cache: {cache['entries']} entries, "
               f"hit rate {cache['hit_rate']:.2f} "
               f"({cache['hits']} hits / {cache['misses']} misses)")
+    health = predictor.health()
+    print(f"[krr_serve] health: ok={health['ok']} "
+          f"requests={health['requests']} errors={health['errors']}")
     return 0
 
 

@@ -17,9 +17,10 @@ import jax
 import jax.numpy as jnp
 
 from ..core.bucket_fns import get_bucket_fn
-from ..core.distributed import (KRRStepConfig, make_krr_predict,
-                                make_krr_predict_hashjoin, make_krr_step,
-                                make_krr_step_hashjoin, sample_sharded_lsh)
+from ..core.distributed import (KRRStepConfig, OVERFLOW_POLICIES,
+                                make_krr_predict, make_krr_predict_hashjoin,
+                                make_krr_step, run_krr_step_resilient,
+                                sample_sharded_lsh)
 from ..core.precond import DEFAULT_NYSTROM_RANK
 from ..core.lsh import GammaPDF
 from ..data import make_regression_dataset
@@ -86,6 +87,12 @@ def main() -> int:
                     help="hashjoin per-destination routing capacity factor "
                          "(cap ~ cap_factor·e/n_shards; overflow buckets "
                          "are dropped — tests pin the behavior)")
+    ap.add_argument("--overflow", default="warn",
+                    choices=list(OVERFLOW_POLICIES),
+                    help="hashjoin capacity-overflow policy (DESIGN.md §9): "
+                         "raise = fail the step with WireOverflowError, "
+                         "warn = log and continue, allow = silent but still "
+                         "counted")
     ap.add_argument("--wire-dtype", default="bf16",
                     choices=sorted(WIRE_DTYPES),
                     help="hashjoin all_to_all payload dtype: bf16 halves "
@@ -114,7 +121,8 @@ def main() -> int:
                         model_axis="model", backend=args.backend,
                         fused=args.fused, blocked_split=args.blocked_split,
                         precond=args.precond,
-                        precond_rank=args.precond_rank)
+                        precond_rank=args.precond_rank,
+                        overflow=args.overflow)
     f = get_bucket_fn(args.bucket)
     lsh = sample_sharded_lsh(jax.random.PRNGKey(args.seed + 1), args.m, d,
                              GammaPDF(2.0, 1.0), args.lengthscale)
@@ -127,19 +135,28 @@ def main() -> int:
         ytr = jnp.concatenate([ytr[:, None], probes], axis=1)
 
     if args.table_mode == "hashjoin":
+        # the resilient runner applies --overflow to the step's fault
+        # counters and retries a non-finite solve once on an f32 wire
         wire = WIRE_DTYPES[args.wire_dtype]
-        step = jax.jit(make_krr_step_hashjoin(
-            mesh, cfg, f, cap_factor=args.cap_factor, payload_dtype=wire))
         predict = jax.jit(make_krr_predict_hashjoin(
             mesh, cfg, f, cap_factor=args.cap_factor, payload_dtype=wire))
+        t0 = time.time()
+        beta, resnorm, tables, stats = run_krr_step_resilient(
+            mesh, cfg, f, xtr, ytr, lsh, cap_factor=args.cap_factor,
+            payload_dtype=wire)
+        jax.block_until_ready(beta)
+        t_fit = time.time() - t0
+        dropped = int(stats.overflow_dropped)
+        if dropped:
+            print(f"[krr] hashjoin dropped {dropped} bucket(s) past "
+                  f"capacity (policy={args.overflow})")
     else:
         step = jax.jit(make_krr_step(mesh, cfg, f))
         predict = jax.jit(make_krr_predict(mesh, cfg, f))
-
-    t0 = time.time()
-    beta, resnorm, tables = step(xtr, ytr, lsh)
-    jax.block_until_ready(beta)
-    t_fit = time.time() - t0
+        t0 = time.time()
+        beta, resnorm, tables = step(xtr, ytr, lsh)
+        jax.block_until_ready(beta)
+        t_fit = time.time() - t0
     yhat = predict(xte_p, lsh, tables)[:n_te]
     if args.num_rhs > 1:
         yhat, resnorm = yhat[:, 0], resnorm[0]

@@ -2,8 +2,12 @@
 
 Layered as artifact (disk format) -> predictor (warm jit path + bucket-exact
 cache) -> batcher (request coalescing); ``repro.launch.krr_serve`` is the
-driver that strings them together.
+driver that strings them together.  Degraded-mode behavior (shedding,
+deadlines, worker-crash propagation, health) is in DESIGN.md §9; the
+structured serving errors re-export here for callers.
 """
+from ..errors import (DeadlineExceeded, InvalidRequest, Overloaded,
+                      ServingError, WorkerCrashed)
 from .artifact import (ARTIFACT_FORMAT, LoadedArtifact, Normalization,
                        export_artifact, load_artifact)
 from .batcher import MicroBatcher

@@ -140,6 +140,11 @@ def _validate(meta: dict, arrays: dict[str, np.ndarray]) -> None:
     if beta.shape[1:] != tables.shape[2:]:
         raise ValueError(f"beta RHS block {beta.shape} vs tables "
                          f"{tables.shape}: column counts differ")
+    if not np.isfinite(tables).all():
+        bad = int(np.sum(~np.isfinite(tables)))
+        raise ValueError(f"tables contain {bad} non-finite entries — a "
+                         f"poisoned artifact must be rejected at load, not "
+                         f"served as silent NaN predictions")
     if meta.get("has_norm"):
         for name in ("x_mean", "x_std", "y_mean", "y_std"):
             if name not in arrays:
@@ -150,7 +155,8 @@ def _validate(meta: dict, arrays: dict[str, np.ndarray]) -> None:
 
 
 def load_artifact(directory: str, *, backend: str | None = None,
-                  artifact_id: str | None = None) -> LoadedArtifact:
+                  artifact_id: str | None = None, retries: int = 0,
+                  retry_backoff_s: float = 0.05) -> LoadedArtifact:
     """Load + validate an artifact and rebuild its operator.
 
     ``backend`` overrides the recorded fit backend ('reference' | 'pallas' |
@@ -158,7 +164,28 @@ def load_artifact(directory: str, *, backend: str | None = None,
     serves from a CPU replica unchanged.  Raises ``ValueError`` on any
     shape/metadata inconsistency and on artifact formats newer than this
     build understands.
+
+    ``retries`` retries TRANSIENT failures only — OSError / short-read zip
+    corruption from a racing writer or flaky filesystem, with exponential
+    backoff starting at ``retry_backoff_s``.  Validation failures raise
+    immediately: re-reading a malformed artifact cannot fix it.
     """
+    import time
+    import zipfile
+    attempt = 0
+    while True:
+        try:
+            return _load_artifact_once(directory, backend=backend,
+                                       artifact_id=artifact_id)
+        except (OSError, zipfile.BadZipFile) as e:
+            if attempt >= retries:
+                raise
+            time.sleep(retry_backoff_s * (2 ** attempt))
+            attempt += 1
+
+
+def _load_artifact_once(directory: str, *, backend: str | None = None,
+                        artifact_id: str | None = None) -> LoadedArtifact:
     step = latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no artifact under {directory}")

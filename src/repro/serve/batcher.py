@@ -19,6 +19,15 @@ Each request costs its queue wait plus a 1/batch share of one warm-path call
 blocks unless it asks for ``.result()``.  Stats are collected continuously
 (served counts, batch-size histogram summary, latency percentiles over a
 sliding window, queue depth) and read with ``stats()``.
+
+Degraded-mode contract (DESIGN.md §9): every failure is a STRUCTURED result
+on the request's future, never a hang —
+
+* queue full (``max_queue``)      -> ``Overloaded``, failed at submit
+* deadline elapsed in queue       -> ``DeadlineExceeded``, failed at flush
+* predict_fn raised               -> that exception, batch-wide
+* worker thread died              -> ``WorkerCrashed`` on every in-flight and
+                                     queued future; later submits fail fast
 """
 from __future__ import annotations
 
@@ -31,14 +40,18 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from ..errors import DeadlineExceeded, Overloaded, WorkerCrashed
+
 
 class _Request:
-    __slots__ = ("x", "future", "t_submit")
+    __slots__ = ("x", "future", "t_submit", "deadline")
 
-    def __init__(self, x: np.ndarray):
+    def __init__(self, x: np.ndarray, deadline: float | None = None):
         self.x = x
         self.future: Future = Future()
         self.t_submit = time.perf_counter()
+        # absolute perf_counter time after which serving is pointless
+        self.deadline = deadline
 
 
 def percentile(sorted_vals, q: float) -> float:
@@ -62,11 +75,22 @@ class MicroBatcher:
 
     def __init__(self, predict_fn, *, max_batch: int = 64,
                  max_wait_us: int = 2000, latency_window: int = 4096,
-                 dim: int | None = None):
+                 dim: int | None = None, max_queue: int = 0,
+                 deadline_us: int | None = None):
         if max_batch <= 0:
             raise ValueError("max_batch must be positive")
+        if max_queue < 0:
+            raise ValueError("max_queue must be >= 0 (0 = unbounded)")
         self.predict_fn = predict_fn
         self.max_batch = int(max_batch)
+        # load shedding: submits past this queue depth fail with Overloaded
+        # instead of growing an unbounded backlog (0 disables)
+        self.max_queue = int(max_queue)
+        # default per-request deadline budget; a request still queued when
+        # its budget elapses fails with DeadlineExceeded at flush time
+        # (before predict — an expired request never costs model work)
+        self.deadline_s = (None if deadline_us is None
+                           else max(int(deadline_us), 0) * 1e-6)
         # one batcher fronts one model, so every row must share one d —
         # checked at submit() so a malformed request is rejected at ITS
         # call site instead of blowing up np.stack in _flush and failing
@@ -83,22 +107,39 @@ class MicroBatcher:
         self._batch_rows = 0
         self._t_first: float | None = None
         self._t_last: float | None = None
+        self._n_shed = 0
+        self._n_expired = 0
+        self._last_error: str | None = None
         self._closed = False
+        self._crashed: BaseException | None = None
+        self._inflight: list[_Request] | None = None
+        self._fault_hook = None         # test injection (faults.crash_worker)
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="microbatcher")
         self._worker.start()
 
     # -- client side --------------------------------------------------------
 
-    def submit(self, x_row) -> Future:
-        """Enqueue one d-dimensional point; resolves to its prediction."""
+    def submit(self, x_row, *, deadline_us: int | None = None) -> Future:
+        """Enqueue one d-dimensional point; resolves to its prediction.
+
+        ``deadline_us`` overrides the batcher's default budget for this
+        request.  A shed/expired/crashed request still gets a future — one
+        already failed with the structured error."""
         req = _Request(np.asarray(x_row, np.float32).reshape(-1))
+        budget = (deadline_us * 1e-6 if deadline_us is not None
+                  else self.deadline_s)
+        if budget is not None:
+            req.deadline = req.t_submit + budget
         # the closed-check and the enqueue are one atomic step: close() flips
         # the flag and enqueues its sentinel under the same lock, so either
         # this request lands BEFORE the sentinel (and is served/drained) or
         # the submit raises — a request can never slip in behind the drain
         # and leave its future forever unresolved
         with self._lock:
+            if self._crashed is not None:
+                raise WorkerCrashed(
+                    f"batcher worker died: {self._crashed!r}")
             if self._closed:
                 raise RuntimeError("batcher is closed")
             if self._dim is None:
@@ -107,10 +148,24 @@ class MicroBatcher:
                 raise ValueError(f"request has {req.x.shape[0]} features, "
                                  f"batcher serves d={self._dim}")
             self._n_requests += 1
+            if self.max_queue and self._queue.qsize() >= self.max_queue:
+                self._n_shed += 1
+                depth = self._queue.qsize()
+                req.future.set_exception(Overloaded(
+                    f"request shed: queue depth {depth} >= "
+                    f"max_queue {self.max_queue}", queue_depth=depth))
+                return req.future
             self._queue.put(req)
         return req.future
 
-    def close(self) -> None:
+    def predict(self, x_row, *, timeout: float | None = None,
+                deadline_us: int | None = None):
+        """Synchronous submit + wait.  ``timeout`` bounds the caller's wait
+        (``concurrent.futures.TimeoutError``); structured serving errors
+        (Overloaded, DeadlineExceeded, WorkerCrashed) re-raise here."""
+        return self.submit(x_row, deadline_us=deadline_us).result(timeout)
+
+    def close(self, timeout: float | None = None) -> None:
         """Stop the worker.  Everything already submitted is served first:
         submit() and close() serialize on one lock, so every accepted
         request sits FIFO-ahead of the stop sentinel and the worker flushes
@@ -120,7 +175,7 @@ class MicroBatcher:
                 return
             self._closed = True
             self._queue.put(None)                   # wake + stop sentinel
-        self._worker.join()
+        self._worker.join(timeout)
 
     def __enter__(self):
         return self
@@ -131,57 +186,118 @@ class MicroBatcher:
     # -- worker side --------------------------------------------------------
 
     def _run(self) -> None:
-        while True:
-            req = self._queue.get()                 # IDLE
-            if req is None:
-                return
-            batch = [req]                           # FILLING
-            deadline = time.perf_counter() + self.max_wait_s
-            while len(batch) < self.max_batch:
-                try:
-                    # anything ALREADY queued joins the batch immediately —
-                    # under backlog the deadline never delays (or starves)
-                    # coalescing, it only bounds the wait for new arrivals
-                    nxt = self._queue.get_nowait()
-                except queue.Empty:
-                    timeout = deadline - time.perf_counter()
-                    if timeout <= 0:
-                        break
-                    try:
-                        nxt = self._queue.get(timeout=timeout)
-                    except queue.Empty:
-                        break
-                if nxt is None:
-                    self._flush(batch)
+        try:
+            while True:
+                req = self._queue.get()             # IDLE
+                if req is None:
                     return
-                batch.append(nxt)
-            self._flush(batch)                      # FLUSH -> IDLE
+                batch = [req]                       # FILLING
+                deadline = time.perf_counter() + self.max_wait_s
+                stop = False
+                while len(batch) < self.max_batch:
+                    try:
+                        # anything ALREADY queued joins the batch at once —
+                        # under backlog the deadline never delays (or
+                        # starves) coalescing, it only bounds the wait for
+                        # new arrivals
+                        nxt = self._queue.get_nowait()
+                    except queue.Empty:
+                        timeout = deadline - time.perf_counter()
+                        if timeout <= 0:
+                            break
+                        try:
+                            nxt = self._queue.get(timeout=timeout)
+                        except queue.Empty:
+                            break
+                    if nxt is None:
+                        stop = True
+                        break
+                    batch.append(nxt)
+                self._dispatch(batch)               # FLUSH -> IDLE
+                if stop:
+                    return
+        except BaseException as e:
+            # a genuine worker death (not a predict_fn error — _flush
+            # already contains those batch-wide): fail everything, fast
+            self._crash(e)
+
+    def _dispatch(self, batch: list[_Request]) -> None:
+        # _inflight is what _crash fails if anything below dies; the fault
+        # hook fires OUTSIDE _flush's predict try/except on purpose — it
+        # simulates the worker thread itself dying, not a model error
+        self._inflight = batch
+        hook = self._fault_hook
+        if hook is not None:
+            hook(batch)
+        self._flush(batch)
+        self._inflight = None
+
+    def _crash(self, e: BaseException) -> None:
+        with self._lock:
+            self._crashed = e
+            self._closed = True
+            self._last_error = repr(e)
+        err = WorkerCrashed(f"batcher worker died: {e!r}")
+        err.__cause__ = e
+        for r in self._inflight or []:
+            if not r.future.done():
+                r.future.set_exception(err)
+        # drain everything queued behind the death; submit() checks
+        # _crashed under the same lock BEFORE enqueueing, so nothing can
+        # land after this drain and hang forever
+        while True:
+            try:
+                nxt = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if nxt is not None and not nxt.future.done():
+                nxt.future.set_exception(err)
 
     def _flush(self, batch: list[_Request]) -> None:
+        now = time.perf_counter()
+        live = []
+        expired = 0
+        for r in batch:
+            if r.deadline is not None and now > r.deadline:
+                waited = now - r.t_submit
+                r.future.set_exception(DeadlineExceeded(
+                    f"deadline elapsed after {waited * 1e6:.0f}us in queue",
+                    waited_s=waited))
+                expired += 1
+            else:
+                live.append(r)
+        if expired:
+            with self._lock:
+                self._n_expired += expired
+        if not live:
+            return
         try:
-            out = self.predict_fn(np.stack([r.x for r in batch]))
+            out = self.predict_fn(np.stack([r.x for r in live]))
         except BaseException as e:
-            for r in batch:
+            with self._lock:
+                self._last_error = repr(e)
+            for r in live:
                 r.future.set_exception(e)
             return
         now = time.perf_counter()
         with self._lock:
             if self._t_first is None:
-                self._t_first = batch[0].t_submit
+                self._t_first = live[0].t_submit
             self._t_last = now
             self._n_batches += 1
-            self._batch_rows += len(batch)
-            self._n_served += len(batch)
-            for r in batch:
+            self._batch_rows += len(live)
+            self._n_served += len(live)
+            for r in live:
                 self._latencies.append(now - r.t_submit)
-        for r, row in zip(batch, np.asarray(out)):
+        for r, row in zip(live, np.asarray(out)):
             r.future.set_result(row)
 
     # -- observability ------------------------------------------------------
 
     def stats(self) -> dict:
         """Snapshot: served/batch counts, mean coalesced batch size, sliding-
-        window latency percentiles (us), achieved QPS, live queue depth."""
+        window latency percentiles (us), achieved QPS, live queue depth, plus
+        the degraded-mode counters (shed, deadline-expired, crash state)."""
         with self._lock:
             lat = sorted(self._latencies)
             span = (self._t_last - self._t_first) \
@@ -197,4 +313,10 @@ class MicroBatcher:
                 "p50_us": percentile(lat, 50) * 1e6,
                 "p99_us": percentile(lat, 99) * 1e6,
                 "qps": self._n_served / span if span > 0 else 0.0,
+                "shed": self._n_shed,
+                "shed_rate": (self._n_shed / self._n_requests
+                              if self._n_requests else 0.0),
+                "deadline_expired": self._n_expired,
+                "crashed": self._crashed is not None,
+                "last_error": self._last_error,
             }

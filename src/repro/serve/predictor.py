@@ -26,6 +26,8 @@ import numpy as np
 
 from .artifact import LoadedArtifact, load_artifact
 from ..core.bucket_fns import get_bucket_fn
+from ..errors import InvalidRequest
+from ..testing.faults import FaultPlan, serve_fault
 from .cache import BucketKeyFn, PredictionCache
 
 DEFAULT_MAX_BATCH = 1024
@@ -68,23 +70,37 @@ class Predictor:
 
     def __init__(self, *, backend: str | None = None,
                  max_batch: int = DEFAULT_MAX_BATCH,
-                 cache_entries: int = 0):
+                 cache_entries: int = 0,
+                 fault_plan: FaultPlan | None = None):
         if max_batch & (max_batch - 1) or max_batch <= 0:
             raise ValueError(f"max_batch must be a power of two, "
                              f"got {max_batch}")
         self.backend = backend
         self.max_batch = int(max_batch)
         self.cache_entries = int(cache_entries)
+        self.fault_plan = fault_plan    # chaos tests: warm-path stall/fail
         self._models: dict[str, _HostedModel] = {}
         self._default_id: str | None = None
         self._lock = threading.Lock()
+        self._n_predicts = 0            # warm-path calls (drives serve_fault)
+        self._n_requests = 0
+        self._n_errors = 0
+        self._last_error: str | None = None
+        self._batcher = None            # attached MicroBatcher, for health()
 
     # -- model hosting ------------------------------------------------------
 
-    def load(self, directory: str, *, artifact_id: str | None = None) -> str:
-        """Load an artifact from disk and host it; returns its id."""
+    def load(self, directory: str, *, artifact_id: str | None = None,
+             retries: int = 0, retry_backoff_s: float = 0.05) -> str:
+        """Load an artifact from disk and host it; returns its id.
+
+        ``retries`` re-attempts transient I/O failures (flaky NFS, an
+        exporter's rename racing the read) with exponential backoff —
+        validation errors are never retried, a malformed artifact stays
+        malformed."""
         loaded = load_artifact(directory, backend=self.backend,
-                               artifact_id=artifact_id)
+                               artifact_id=artifact_id, retries=retries,
+                               retry_backoff_s=retry_backoff_s)
         return self.add_model(loaded)
 
     def add_model(self, loaded: LoadedArtifact) -> str:
@@ -139,17 +155,44 @@ class Predictor:
         return np.asarray(out)[:b]
 
     def _predict_warm(self, hosted: _HostedModel, x: np.ndarray):
+        with self._lock:
+            self._n_predicts += 1
+            call_idx = self._n_predicts
+        serve_fault(self.fault_plan, call_idx)
         chunks = [self._predict_padded(hosted, x[i:i + self.max_batch])
                   for i in range(0, x.shape[0], self.max_batch)]
         return chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
 
     def predict(self, x, *, artifact_id: str | None = None,
-                use_cache: bool = True) -> np.ndarray:
+                use_cache: bool = True, validate: bool = True) -> np.ndarray:
+        """Serve a (d,) point or (b, d) batch.
+
+        ``validate`` rejects non-finite query rows with ``InvalidRequest``
+        BEFORE they reach the model — a NaN query must surface as a
+        structured error, never as a silently-NaN prediction (and never as a
+        poisoned cache entry served to later callers)."""
+        try:
+            return self._predict(x, artifact_id=artifact_id,
+                                 use_cache=use_cache, validate=validate)
+        except BaseException as e:
+            with self._lock:
+                self._n_errors += 1
+                self._last_error = repr(e)
+            raise
+
+    def _predict(self, x, *, artifact_id, use_cache, validate) -> np.ndarray:
         hosted = self._hosted(artifact_id)
+        with self._lock:
+            self._n_requests += 1
         x = np.asarray(x, np.float32)
         single = x.ndim == 1
         if single:
             x = x[None, :]
+        if validate and not np.isfinite(x).all():
+            bad = np.flatnonzero(~np.isfinite(x).all(axis=1))
+            raise InvalidRequest(
+                f"non-finite query row(s) {bad[:8].tolist()} "
+                f"({len(bad)} of {x.shape[0]})")
         if hosted.cache is None or not use_cache:
             out = self._predict_warm(hosted, x)
             return out[0] if single else out
@@ -233,3 +276,32 @@ class Predictor:
             hosted.cache.clear()
         if hosted.keymemo is not None:
             hosted.keymemo.clear()
+
+    # -- health -------------------------------------------------------------
+
+    def attach_batcher(self, batcher) -> None:
+        """Fold an attached MicroBatcher's stats into ``health()``."""
+        self._batcher = batcher
+
+    def health(self) -> dict:
+        """One-call serving health snapshot: hosted models, request/error
+        counters, last error, and — when a batcher is attached — its queue
+        depth, shed rate, p99 and crash state.  Cheap enough to poll."""
+        with self._lock:
+            snap = {
+                "models": sorted(self._models),
+                "requests": self._n_requests,
+                "warm_calls": self._n_predicts,
+                "errors": self._n_errors,
+                "last_error": self._last_error,
+            }
+        batcher = self._batcher
+        if batcher is not None:
+            b = batcher.stats()
+            snap["batcher"] = {k: b[k] for k in
+                               ("queue_depth", "shed", "shed_rate",
+                                "deadline_expired", "p99_us", "crashed",
+                                "last_error")}
+        snap["ok"] = bool(snap["models"]) and not (
+            batcher is not None and snap["batcher"]["crashed"])
+        return snap

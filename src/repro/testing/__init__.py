@@ -1,0 +1,8 @@
+"""Deterministic fault-injection harness (chaos testing — DESIGN.md §9)."""
+from .faults import (FaultPlan, apply_wire_fault, crash_worker,
+                     killed_checkpoint_writer, maybe_stall, poison_matvec,
+                     preempt_after, serve_fault)
+
+__all__ = ["FaultPlan", "apply_wire_fault", "crash_worker",
+           "killed_checkpoint_writer", "maybe_stall", "poison_matvec",
+           "preempt_after", "serve_fault"]

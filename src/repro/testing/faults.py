@@ -1,0 +1,186 @@
+"""Deterministic fault injection for the resilience layer (DESIGN.md §9).
+
+A ``FaultPlan`` is a hashable NamedTuple threaded through ``KRRStepConfig``
+and ``Predictor`` — trace-time static, so the injected faults are part of the
+compiled program and every run with the same plan (and seed) poisons the same
+wire cells.  That determinism is the whole point: the chaos tests assert
+*exact* recovery behavior, not flaky coin flips.
+
+Injection points:
+
+* wire cells       — ``apply_wire_fault`` in ``_hashjoin_send`` drops or
+                     NaN-poisons all_to_all payload cells (Bernoulli masks
+                     from a fixed PRNG key, identical on every shard).
+* shard stall      — ``maybe_stall`` sleeps inside one shard's step via
+                     ``jax.debug.callback`` (detected by wall-clock timeout:
+                     the collective can't complete until the straggler does).
+* checkpoint write — ``killed_checkpoint_writer`` arms a hook in
+                     ``checkpoint.store.save_checkpoint`` that raises between
+                     the array write and the atomic rename — the crash window
+                     a real SIGKILL would hit.
+* batcher worker   — ``crash_worker`` arms the MicroBatcher's fault hook so
+                     the worker thread dies OUTSIDE the predict try/except
+                     (a predict_fn exception is already handled; a genuine
+                     worker crash is not simulable through it).
+* solver matvec    — ``poison_matvec`` wraps a matvec to NaN one column.
+* predictor        — ``serve_fault`` stalls or fails warm-path calls per the
+                     plan (drives load-shedding/deadline tests with real
+                     latency, no monkeypatching).
+
+Host-side faults raise ``repro.errors.FaultInjected`` so tests can tell an
+injected fault from a genuine bug.
+"""
+from __future__ import annotations
+
+import contextlib
+import itertools
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..errors import FaultInjected
+
+Array = jnp.ndarray
+
+
+class FaultPlan(NamedTuple):
+    """Static description of the faults to inject.  All fields default to
+    'off'; a plan is hashable so it can ride a NamedTuple config through
+    trace-time closures."""
+
+    wire_drop_frac: float = 0.0    # fraction of wire cells zeroed (lost mass)
+    wire_nan_frac: float = 0.0     # fraction of wire cells NaN-poisoned
+    wire_nan_bf16_only: bool = False  # poison only bf16 payloads — the
+                                      # f32-wire retry then runs clean
+    seed: int = 0                  # PRNG key for the cell masks
+    stall_shard: int = -1          # data-shard index to stall (-1 = off)
+    stall_s: float = 0.0           # stall duration (host sleep per step call)
+    serve_delay_s: float = 0.0     # predictor warm-path stall per call
+    serve_fail_every: int = 0      # raise FaultInjected every Nth warm call
+
+    @property
+    def wants_wire(self) -> bool:
+        return self.wire_drop_frac > 0.0 or self.wire_nan_frac > 0.0
+
+
+def apply_wire_fault(plan: FaultPlan | None, payload: Array) -> Array:
+    """Drop/poison cells of an all_to_all payload (n_shards, cap[, k]).
+
+    The Bernoulli masks come from ``plan.seed`` only — every shard (and every
+    retry with the same plan) poisons the same (destination, cell) pairs, so
+    a test can pin exactly what the recovery path must absorb.  NaN poisoning
+    can be restricted to bf16 payloads (``wire_nan_bf16_only``) to exercise
+    the bf16→f32 wire retry: the retry's f32 exchange runs clean.
+    """
+    if plan is None or not plan.wants_wire:
+        return payload
+    nan_frac = plan.wire_nan_frac
+    if plan.wire_nan_bf16_only and payload.dtype != jnp.bfloat16:
+        nan_frac = 0.0
+    if plan.wire_drop_frac <= 0.0 and nan_frac <= 0.0:
+        return payload
+    cells = payload.shape[:2]
+    kd, kn = jax.random.split(jax.random.PRNGKey(plan.seed))
+    drop = jax.random.bernoulli(kd, plan.wire_drop_frac, cells)
+    nan = jax.random.bernoulli(kn, nan_frac, cells)
+    if payload.ndim == 3:
+        drop, nan = drop[..., None], nan[..., None]
+    out = jnp.where(drop, jnp.zeros((), payload.dtype), payload)
+    return jnp.where(nan, jnp.asarray(jnp.nan, payload.dtype), out)
+
+
+def _stall_cb(shard_idx, *, shard: int, secs: float) -> None:
+    if int(shard_idx) == shard:
+        time.sleep(secs)
+
+
+def maybe_stall(plan: FaultPlan | None, data_axes) -> None:
+    """Inside shard_map: sleep ``plan.stall_s`` on data shard
+    ``plan.stall_shard``.  The straggler holds up every collective it
+    participates in — the detection signal is wall-clock (pytest-timeout in
+    CI), the recovery is the scheduler's, not ours."""
+    if plan is None or plan.stall_s <= 0.0 or plan.stall_shard < 0:
+        return
+    import functools
+    sid = jax.lax.axis_index(data_axes[-1])
+    jax.debug.callback(functools.partial(_stall_cb, shard=plan.stall_shard,
+                                         secs=plan.stall_s), sid)
+
+
+@contextlib.contextmanager
+def killed_checkpoint_writer(after_saves: int = 0):
+    """Arm ``checkpoint.store``'s crash hook: the save that lands after
+    ``after_saves`` clean ones raises ``FaultInjected`` between writing
+    arrays.npz and the atomic rename — exactly the window a SIGKILL'd writer
+    leaves a ``step_N.tmp`` dir with a full payload but no visibility to
+    ``latest_step``."""
+    from ..checkpoint import store
+    counter = itertools.count()
+
+    def boom(tmp_path: str) -> None:
+        if next(counter) >= after_saves:
+            raise FaultInjected(
+                f"checkpoint writer killed mid-save in {tmp_path}")
+
+    prev = store._crash_mid_save
+    store._crash_mid_save = boom
+    try:
+        yield
+    finally:
+        store._crash_mid_save = prev
+
+
+def preempt_after(n_checkpoints: int):
+    """Returns an ``on_solve_checkpoint`` callback that raises
+    ``FaultInjected`` after ``n_checkpoints`` successful checkpoint saves —
+    simulates a preemption mid-solve (the state for the last completed
+    chunk is already on disk, so the next fit resumes from it)."""
+    counter = itertools.count(1)
+
+    def hook(state) -> None:
+        if next(counter) >= n_checkpoints:
+            raise FaultInjected(
+                f"solve preempted after checkpoint at it={int(state.it)}")
+
+    return hook
+
+
+def crash_worker(batcher, exc: BaseException | None = None) -> None:
+    """Arm the MicroBatcher's fault hook so the NEXT batch kills the worker
+    thread itself (outside the predict try/except — a real crash, not a
+    predict error).  In-flight and queued futures must fail with
+    ``WorkerCrashed``; subsequent submits must fail fast."""
+    err = exc if exc is not None else FaultInjected("worker thread killed")
+
+    def hook(batch) -> None:
+        raise err
+
+    batcher._fault_hook = hook
+
+
+def serve_fault(plan: FaultPlan | None, call_idx: int) -> None:
+    """Predictor warm-path injection: stall ``serve_delay_s`` per call and
+    raise ``FaultInjected`` every ``serve_fail_every``-th call (1-based)."""
+    if plan is None:
+        return
+    if plan.serve_delay_s > 0.0:
+        time.sleep(plan.serve_delay_s)
+    if plan.serve_fail_every > 0 and (call_idx % plan.serve_fail_every) == 0:
+        raise FaultInjected(f"injected predict failure (call {call_idx})")
+
+
+def poison_matvec(matvec, column: int = 0):
+    """Wrap a (n,)/(n, k) matvec so ``column`` of its output is NaN — the
+    single-host analogue of a poisoned wire cell.  ``pcg_solve`` must
+    deactivate that column (NaN resnorm sentinel) while the others converge
+    untouched."""
+
+    def wrapped(v):
+        out = matvec(v)
+        if out.ndim == 1:
+            return out + jnp.nan if column == 0 else out
+        return out.at[:, column].set(jnp.nan)
+
+    return wrapped

@@ -207,7 +207,7 @@ def test_hashjoin_step_single_device_matches_psum_and_single_sort():
     b_ref, _, _ = jax.jit(make_krr_step(mesh, cfg, f))(x, y, lsh)
     hj = jax.jit(make_krr_step_hashjoin(mesh, cfg, f,
                                         payload_dtype=jnp.float32))
-    b_hj, _, _ = hj(x, y, lsh)
+    b_hj, _, _, _ = hj(x, y, lsh)
     np.testing.assert_allclose(np.asarray(b_hj), np.asarray(b_ref),
                                atol=1e-5)
     hlo = hj.lower(x, y, lsh).compile().as_text()
@@ -227,8 +227,8 @@ def _route_setup(m=3, n=200, table_size=1024, n_shards=2, cap_factor=2.0,
     lay = build_blocked_layout(slot, coeff, table_size,
                                block_n=BLOCKED_SPLIT_N,
                                block_t=BLOCKED_SPLIT_T, parts="both")
-    pt_cell, _, spp, cap = _routing_maps(slot, lay, n_shards, table_size,
-                                         cap_factor)
+    pt_cell, _, spp, cap, _, _ = _routing_maps(slot, lay, n_shards,
+                                               table_size, cap_factor)
     nb = n_shards * cap
     plan = _make_route_plan(pt_cell, lay, nb)
     return lay, pt_cell, plan, nb, coeff
@@ -310,7 +310,8 @@ def test_route_schedule_contains_no_sort():
 
     def plan_fn(s):
         # lay closed over (its block geometry fields are static ints)
-        pt_cell, _, _, cap = _routing_maps(s, lay, n_shards, table_size, 2.0)
+        pt_cell, _, _, cap, _, _ = _routing_maps(s, lay, n_shards,
+                                                 table_size, 2.0)
         return _make_route_plan(pt_cell, lay, n_shards * cap)
 
     hlo = jax.jit(plan_fn).lower(slot).compile().as_text()

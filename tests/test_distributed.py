@@ -253,13 +253,13 @@ f = get_bucket_fn("rect")
 cfg = KRRStepConfig(m=m, table_size=B, lam=0.5, cg_iters=25,
                     data_axes=("pod", "data"), model_axis="model")
 b1, r1, _ = jax.jit(make_krr_step(mesh, cfg, f))(x, y, lsh)
-b2, r2, _ = jax.jit(make_krr_step_hashjoin(mesh, cfg, f, cap_factor=8.0,
-                                           payload_dtype=jnp.float32))(
+b2, r2, _, _ = jax.jit(make_krr_step_hashjoin(mesh, cfg, f, cap_factor=8.0,
+                                              payload_dtype=jnp.float32))(
     x, y, lsh)
 err = float(jnp.max(jnp.abs(jax.device_get(b1) - jax.device_get(b2))))
 assert err < 1e-4, f"hashjoin != psum: {err}"
 # the default bf16 wire stays within the pinned accuracy band of the f32 run
-b3, _, _ = jax.jit(make_krr_step_hashjoin(mesh, cfg, f, cap_factor=8.0))(
+b3, _, _, _ = jax.jit(make_krr_step_hashjoin(mesh, cfg, f, cap_factor=8.0))(
     x, y, lsh)
 b2h, b3h = jax.device_get(b2), jax.device_get(b3)
 rel = float(jnp.linalg.norm(b3h - b2h) / jnp.linalg.norm(b2h))
@@ -297,9 +297,10 @@ def test_hashjoin_bf16_wire_accuracy_pinned():
     from repro.core.distributed import make_krr_step_hashjoin
     x, y, lsh, f = _hj_problem()
     mesh, cfg = _mesh_1(), _hj_cfg()
-    b_f32, _, _ = jax.jit(make_krr_step_hashjoin(
+    b_f32, _, _, _ = jax.jit(make_krr_step_hashjoin(
         mesh, cfg, f, payload_dtype=jnp.float32))(x, y, lsh)
-    b_bf16, _, _ = jax.jit(make_krr_step_hashjoin(mesh, cfg, f))(x, y, lsh)
+    b_bf16, _, _, _ = jax.jit(make_krr_step_hashjoin(mesh, cfg, f))(x, y,
+                                                                    lsh)
     rel = float(jnp.linalg.norm(b_bf16 - b_f32) / jnp.linalg.norm(b_f32))
     assert rel < 1e-2, rel
     assert rel > 0.0          # the wire really is bf16, not silently f32
@@ -314,12 +315,43 @@ def test_hashjoin_capacity_overflow_drops_stay_finite():
     x, y, lsh, f = _hj_problem()
     mesh, cfg = _mesh_1(), _hj_cfg()
     b_ps, _, _ = jax.jit(make_krr_step(mesh, cfg, f))(x, y, lsh)
-    b_ov, res, _ = jax.jit(make_krr_step_hashjoin(
+    b_ov, res, _, stats = jax.jit(make_krr_step_hashjoin(
         mesh, cfg, f, cap_factor=0.05, payload_dtype=jnp.float32))(x, y, lsh)
     assert bool(jnp.isfinite(b_ov).all())
     assert bool(jnp.isfinite(res).all())
+    # the drops are ACCOUNTED, not silent: the same pack pass that routes
+    # cells counts the ones past capacity
+    assert int(stats.overflow_dropped) > 0
     rel = float(jnp.linalg.norm(b_ov - b_ps) / jnp.linalg.norm(b_ps))
     assert rel < 0.5, rel     # degraded, but still the same system
+
+
+def test_hashjoin_overflow_counter_zero_at_ample_capacity():
+    """At cap_factor=1.25 the per-destination capacity exceeds the max
+    possible distinct cells per owner on this problem — the overflow counter
+    must be EXACTLY zero (the accounting has no false positives)."""
+    from repro.core.distributed import make_krr_step_hashjoin
+    x, y, lsh, f = _hj_problem()
+    mesh, cfg = _mesh_1(), _hj_cfg()
+    _, _, _, stats = jax.jit(make_krr_step_hashjoin(
+        mesh, cfg, f, cap_factor=1.25, payload_dtype=jnp.float32))(x, y, lsh)
+    assert int(stats.overflow_dropped) == 0
+    assert int(stats.wire_nonfinite) == 0
+
+
+def test_hashjoin_nan_wire_cell_detected_never_silent():
+    """A NaN-poisoned wire cell must surface as a NaN resnorm sentinel (the
+    CG loop propagates it into detection) — never as a silently-finite,
+    silently-wrong beta next to an all-clean residual report."""
+    from repro.core.distributed import make_krr_step_hashjoin
+    from repro.testing import FaultPlan
+    x, y, lsh, f = _hj_problem()
+    mesh = _mesh_1()
+    cfg = _hj_cfg(fault_plan=FaultPlan(wire_nan_frac=0.3, seed=7))
+    b, res, _, stats = jax.jit(make_krr_step_hashjoin(
+        mesh, cfg, f, payload_dtype=jnp.float32))(x, y, lsh)
+    assert not bool(jnp.isfinite(res).all())   # sentinel fired
+    assert int(stats.wire_nonfinite) > 0       # and the wire count saw it
 
 
 def test_hashjoin_multi_rhs_matches_psum_block():
@@ -331,7 +363,7 @@ def test_hashjoin_multi_rhs_matches_psum_block():
     yk = jax.random.normal(jax.random.PRNGKey(11), (x.shape[0], 3))
     mesh, cfg = _mesh_1(), _hj_cfg()
     bk_ps, _, t_ps = jax.jit(make_krr_step(mesh, cfg, f))(x, yk, lsh)
-    bk_hj, _, t_hj = jax.jit(make_krr_step_hashjoin(
+    bk_hj, _, t_hj, _ = jax.jit(make_krr_step_hashjoin(
         mesh, cfg, f, payload_dtype=jnp.float32))(x, yk, lsh)
     np.testing.assert_allclose(np.asarray(bk_hj), np.asarray(bk_ps),
                                atol=1e-5)
@@ -345,7 +377,7 @@ def test_hashjoin_jacobi_matches_psum_jacobi():
     x, y, lsh, f = _hj_problem()
     mesh, cfg = _mesh_1(), _hj_cfg(precond="jacobi")
     b_ps, _, _ = jax.jit(make_krr_step(mesh, cfg, f))(x, y, lsh)
-    b_hj, _, _ = jax.jit(make_krr_step_hashjoin(
+    b_hj, _, _, _ = jax.jit(make_krr_step_hashjoin(
         mesh, cfg, f, payload_dtype=jnp.float32))(x, y, lsh)
     np.testing.assert_allclose(np.asarray(b_hj), np.asarray(b_ps), atol=1e-5)
 
@@ -369,7 +401,7 @@ def test_hashjoin_predict_sharded_table_matches_psum_predict():
     xt = jax.random.uniform(jax.random.PRNGKey(13), (64, x.shape[1])) * 2.0
     mesh, cfg = _mesh_1(), _hj_cfg()
     _, _, t_ps = jax.jit(make_krr_step(mesh, cfg, f))(x, y, lsh)
-    _, _, t_hj = jax.jit(make_krr_step_hashjoin(
+    _, _, t_hj, _ = jax.jit(make_krr_step_hashjoin(
         mesh, cfg, f, payload_dtype=jnp.float32))(x, y, lsh)
     p_ps = jax.jit(make_krr_predict(mesh, cfg, f))(xt, lsh, t_ps)
     p_hj = jax.jit(make_krr_predict_hashjoin(
@@ -388,7 +420,7 @@ def test_hashjoin_step_4shards_matches_psum_in_process():
     mesh = make_mesh((1, 4, 1), ("pod", "data", "model"))
     cfg = _hj_cfg(table_size=1024)
     b_ps, _, _ = jax.jit(make_krr_step(mesh, cfg, f))(x, y, lsh)
-    b_hj, _, _ = jax.jit(make_krr_step_hashjoin(
+    b_hj, _, _, _ = jax.jit(make_krr_step_hashjoin(
         mesh, cfg, f, cap_factor=4.0, payload_dtype=jnp.float32))(x, y, lsh)
     err = float(jnp.max(jnp.abs(b_hj - b_ps)))
     assert err <= 1e-4, err

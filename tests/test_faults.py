@@ -1,0 +1,358 @@
+"""Chaos suite: every injected fault ends in a documented recovery or a
+structured error — never a hang, never a silently-wrong result.
+
+The injection harness is src/repro/testing/faults.py; the recovery ladder it
+exercises is DESIGN.md §9.  Everything here is DETERMINISTIC: FaultPlan masks
+come from fixed PRNG seeds, preemptions fire after exact checkpoint counts,
+and the assertions pin exact recovery behavior (counter values, error types,
+resume tolerances), not coin flips.
+
+CI runs this file both in the default single-device job and nightly under a
+4-device mesh (XLA_FLAGS=--xla_force_host_platform_device_count=4) — the
+chaos job in .github/workflows/ci.yml.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import WLSHKernelSpec, get_bucket_fn, wlsh_krr_fit
+from repro.core.krr import pcg_solve
+from repro.errors import (FaultInjected, NonFiniteError, SolveDivergedError,
+                          WireOverflowError)
+from repro.testing import (FaultPlan, killed_checkpoint_writer, poison_matvec,
+                           preempt_after)
+
+
+# ---------------------------------------------------------------------------
+# problem factories
+# ---------------------------------------------------------------------------
+
+def _spd_problem(n=64, k=3, seed=0):
+    """Small SPD system for direct pcg_solve tests."""
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (n, n))
+    a = a @ a.T / n + jnp.eye(n)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n, k))
+    return (lambda v: a @ v), a, b
+
+
+def _fit_problem(n=384, d=3, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    y = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"))
+    return key, x, y, spec
+
+
+def _hj_setup(**cfg_kw):
+    from repro.compat import make_mesh
+    from repro.core import GammaPDF, sample_lsh_params
+    from repro.core.distributed import KRRStepConfig
+    key = jax.random.PRNGKey(6)
+    x = jax.random.uniform(key, (192, 3)) * 2.0
+    y = jax.random.normal(jax.random.fold_in(key, 1), (192,))
+    lsh = sample_lsh_params(jax.random.fold_in(key, 2), 4, 3,
+                            GammaPDF(2.0, 1.0))
+    f = get_bucket_fn("rect")
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
+    cfg = KRRStepConfig(m=4, table_size=512, lam=0.5, cg_iters=15,
+                        data_axes=("pod", "data"), model_axis="model",
+                        backend="reference", **cfg_kw)
+    return mesh, cfg, f, x, y, lsh
+
+
+# ---------------------------------------------------------------------------
+# solver sentinels: poisoned matvec, NaN targets, chunked-loop parity
+# ---------------------------------------------------------------------------
+
+def test_poisoned_matvec_deactivates_column_others_converge():
+    """NaN in one matvec output column: that column freezes at its last
+    finite iterate with a NaN resnorm SENTINEL; the healthy columns converge
+    exactly as they would alone."""
+    mv, a, b = _spd_problem()
+    clean = pcg_solve(mv, b, 0.5, tol=1e-8, maxiter=100)
+    res = pcg_solve(poison_matvec(mv, column=1), b, 0.5, tol=1e-8,
+                    maxiter=100)
+    assert bool(jnp.isfinite(res.x).all())          # never garbage iterates
+    assert not bool(jnp.isfinite(res.resnorm[1]))   # sentinel on the column
+    for j in (0, 2):                                # healthy columns clean
+        assert bool(jnp.isfinite(res.resnorm[j]))
+        np.testing.assert_allclose(np.asarray(res.x[:, j]),
+                                   np.asarray(clean.x[:, j]), atol=1e-6)
+
+
+def test_pcg_chunked_checkpointing_matches_single_shot():
+    """checkpoint_every chunks the while_loop on the host; the math must be
+    IDENTICAL to the historical single while_loop — same body, same order."""
+    mv, a, b = _spd_problem()
+    one = pcg_solve(mv, b, 0.5, tol=1e-8, maxiter=60)
+    seen = []
+    chunked = pcg_solve(mv, b, 0.5, tol=1e-8, maxiter=60,
+                        checkpoint_every=7, on_checkpoint=seen.append)
+    np.testing.assert_array_equal(np.asarray(one.x), np.asarray(chunked.x))
+    np.testing.assert_array_equal(np.asarray(one.resnorm),
+                                  np.asarray(chunked.resnorm))
+    assert len(seen) >= 2                           # it really chunked
+    assert int(seen[0].it) == 7
+
+
+def test_nan_training_target_raises_structured():
+    key, x, y, spec = _fit_problem()
+    y = y.at[5].set(jnp.nan)
+    with pytest.raises(NonFiniteError) as ei:
+        wlsh_krr_fit(key, x, y, spec, m=32, lam=0.5, backend="reference")
+    assert ei.value.where == "y"
+    assert ei.value.count == 1
+
+
+def test_nan_target_deactivate_mode_freezes_column():
+    """nonfinite_targets='deactivate': the poisoned column reports a NaN
+    resnorm, beta stays finite, the clean column matches a clean fit."""
+    key, x, y, spec = _fit_problem()
+    yk = jnp.stack([y, y], axis=1).at[5, 1].set(jnp.nan)
+    model = wlsh_krr_fit(key, x, yk, spec, m=32, lam=0.5,
+                         backend="reference", maxiter=40,
+                         nonfinite_targets="deactivate")
+    assert bool(jnp.isfinite(model.beta).all())
+    assert bool(jnp.isfinite(model.cg_resnorm[0]))
+    assert not bool(jnp.isfinite(model.cg_resnorm[1]))
+    clean = wlsh_krr_fit(key, x, y, spec, m=32, lam=0.5,
+                         backend="reference", maxiter=40)
+    # block matvec regroups sums vs the single-RHS path; ulps amplify over
+    # 40 CG iterations (same band the multi-RHS parity tests pin)
+    np.testing.assert_allclose(np.asarray(model.beta[:, 0]),
+                               np.asarray(clean.beta), atol=1e-4)
+
+
+def test_broken_preconditioner_falls_back_to_identity(monkeypatch):
+    """A preconditioner whose apply returns NaN diverges the first solve;
+    the fit restarts ONCE with the identity preconditioner, records the
+    fallback on the model, and matches an unpreconditioned fit."""
+    import repro.core.krr as krr_mod
+
+    class _Poisoned:
+        def apply(self, r):
+            return r * jnp.nan
+
+    key, x, y, spec = _fit_problem()
+    clean = wlsh_krr_fit(key, x, y, spec, m=32, lam=0.5,
+                         backend="reference", maxiter=40)
+    monkeypatch.setattr(krr_mod, "make_preconditioner",
+                        lambda *a, **kw: _Poisoned())
+    with pytest.warns(RuntimeWarning, match="identity"):
+        model = wlsh_krr_fit(key, x, y, spec, m=32, lam=0.5,
+                             backend="reference", maxiter=40,
+                             precond="jacobi")
+    assert model.solve_fallback == "precond:jacobi->identity"
+    assert bool(jnp.isfinite(model.beta).all())
+    np.testing.assert_allclose(np.asarray(model.beta),
+                               np.asarray(clean.beta), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# PCG checkpoint / resume (acceptance: preempted fit resumes within 1e-6)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_preempted_fit_resumes_within_tolerance(backend, tmp_path):
+    """ACCEPTANCE: a fit killed at a checkpoint boundary, re-run with the
+    same arguments, resumes from the persisted SolveState and lands within
+    1e-6 relative L2 of the uninterrupted solve — on both backends."""
+    key, x, y, spec = _fit_problem()
+    kw = dict(m=32, lam=0.5, backend=backend, maxiter=40, tol=1e-10)
+    clean = wlsh_krr_fit(key, x, y, spec, **kw)
+    ckdir = str(tmp_path / "solve_ck")
+    with pytest.raises(FaultInjected):
+        wlsh_krr_fit(key, x, y, spec, **kw, solve_checkpoint_dir=ckdir,
+                     solve_checkpoint_every=5,
+                     on_solve_checkpoint=preempt_after(2))
+    # the kill left a usable state on disk, partway through the solve
+    from repro.checkpoint.store import latest_step
+    it_saved = latest_step(ckdir)
+    assert it_saved is not None and 0 < it_saved < 40
+    resumed = wlsh_krr_fit(key, x, y, spec, **kw,
+                           solve_checkpoint_dir=ckdir,
+                           solve_checkpoint_every=5)
+    ref = np.asarray(clean.beta)
+    got = np.asarray(resumed.beta)
+    rel = float(np.linalg.norm(got - ref) / np.linalg.norm(ref))
+    assert rel <= 1e-6, f"resume drifted {rel} from uninterrupted solve"
+
+
+def test_killed_checkpoint_writer_leaves_no_half_checkpoint(tmp_path):
+    """A writer killed between arrays.npz and the rename leaves a .tmp dir
+    that latest_step ignores; the NEXT save lands cleanly and restore reads
+    it — the crash window can delay progress but never corrupt it."""
+    from repro.checkpoint.store import (latest_step, restore_checkpoint,
+                                        save_checkpoint)
+    state = {"a": np.arange(6, dtype=np.float32)}
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 1, state)
+    with killed_checkpoint_writer():
+        with pytest.raises(FaultInjected):
+            save_checkpoint(d, 2, {"a": np.zeros(6, np.float32)})
+    assert os.path.isdir(os.path.join(d, "step_2.tmp"))   # SIGKILL debris
+    assert latest_step(d) == 1                  # half-save is invisible
+    save_checkpoint(d, 2, {"a": np.full(6, 7.0, np.float32)})
+    got, step, _ = restore_checkpoint(d, {"a": np.zeros(6, np.float32)})
+    assert step == 2
+    np.testing.assert_array_equal(got["a"], np.full(6, 7.0, np.float32))
+
+
+def test_preemption_mid_save_resumes_from_previous_chunk(tmp_path):
+    """Composition: the checkpoint WRITER dies mid-save during a fit.  The
+    fit surfaces the failure (CheckpointManager re-raises on blocking saves);
+    the re-run resumes from the last COMPLETE chunk, not the torn one."""
+    key, x, y, spec = _fit_problem()
+    kw = dict(m=32, lam=0.5, backend="reference", maxiter=40, tol=1e-10)
+    ckdir = str(tmp_path / "solve_ck")
+    with killed_checkpoint_writer(after_saves=2):
+        with pytest.raises(FaultInjected):
+            wlsh_krr_fit(key, x, y, spec, **kw, solve_checkpoint_dir=ckdir,
+                         solve_checkpoint_every=5)
+    from repro.checkpoint.store import latest_step
+    assert latest_step(ckdir) == 10             # two complete chunks of 5
+    clean = wlsh_krr_fit(key, x, y, spec, **kw)
+    resumed = wlsh_krr_fit(key, x, y, spec, **kw,
+                           solve_checkpoint_dir=ckdir,
+                           solve_checkpoint_every=5)
+    rel = float(np.linalg.norm(np.asarray(resumed.beta - clean.beta))
+                / np.linalg.norm(np.asarray(clean.beta)))
+    assert rel <= 1e-6
+
+
+# ---------------------------------------------------------------------------
+# hash-join wire faults: drops, NaN poisoning, the bf16->f32 retry ladder
+# ---------------------------------------------------------------------------
+
+def test_wire_drop_stays_finite_and_close():
+    """Dropped wire cells lose mass (like capacity overflow) but can never
+    destabilize the solve: beta stays finite and near the clean solve."""
+    from repro.core.distributed import make_krr_step_hashjoin
+    mesh, cfg, f, x, y, lsh = _hj_setup()
+    b0, _, _, _ = jax.jit(make_krr_step_hashjoin(
+        mesh, cfg, f, payload_dtype=jnp.float32))(x, y, lsh)
+    cfg_drop = cfg._replace(fault_plan=FaultPlan(wire_drop_frac=0.05,
+                                                 seed=3))
+    b1, r1, _, _ = jax.jit(make_krr_step_hashjoin(
+        mesh, cfg_drop, f, payload_dtype=jnp.float32))(x, y, lsh)
+    assert bool(jnp.isfinite(b1).all())
+    assert bool(jnp.isfinite(r1).all())
+    rel = float(jnp.linalg.norm(b1 - b0) / jnp.linalg.norm(b0))
+    assert 0.0 < rel < 0.5                      # perturbed, not destroyed
+
+
+def test_bf16_poison_recovers_via_f32_wire_retry():
+    """RECOVERY: NaN poisoning restricted to bf16 payloads diverges the
+    default wire; run_krr_step_resilient detects the NaN resnorm sentinel,
+    retries once on an f32 wire, and returns a finite solve."""
+    from repro.core.distributed import (make_krr_step_hashjoin,
+                                        run_krr_step_resilient)
+    mesh, cfg, f, x, y, lsh = _hj_setup(
+        fault_plan=FaultPlan(wire_nan_frac=0.2, wire_nan_bf16_only=True,
+                             seed=5))
+    # the bf16 wire really is poisoned...
+    _, r_bf16, _, _ = jax.jit(make_krr_step_hashjoin(mesh, cfg, f))(x, y,
+                                                                    lsh)
+    assert not bool(jnp.isfinite(r_bf16).all())
+    # ...and the resilient runner climbs to f32 and lands finite
+    with pytest.warns(RuntimeWarning, match="f32"):
+        beta, resnorm, tables, stats = run_krr_step_resilient(
+            mesh, cfg, f, x, y, lsh)
+    assert bool(jnp.isfinite(beta).all())
+    assert bool(jnp.isfinite(resnorm).all())
+    assert bool(jnp.isfinite(tables).all())
+
+
+def test_unrecoverable_wire_poison_raises_structured():
+    """NaN poisoning on EVERY wire dtype exhausts the ladder: the runner
+    raises SolveDivergedError naming the fallback it tried — a structured
+    error, never a silently-NaN beta."""
+    from repro.core.distributed import run_krr_step_resilient
+    mesh, cfg, f, x, y, lsh = _hj_setup(
+        fault_plan=FaultPlan(wire_nan_frac=0.2, seed=5))
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(SolveDivergedError) as ei:
+            run_krr_step_resilient(mesh, cfg, f, x, y, lsh)
+    assert "wire:bf16->f32" in ei.value.fallbacks
+
+
+def test_overflow_policy_raise_warn_allow():
+    """cap_factor=0.05 forces drops; the SAME counters drive all three
+    policies: raise -> WireOverflowError with the count, warn -> RuntimeWarning,
+    allow -> silent (but still counted)."""
+    from repro.core.distributed import run_krr_step_resilient
+    mesh, cfg, f, x, y, lsh = _hj_setup()
+    with pytest.raises(WireOverflowError) as ei:
+        run_krr_step_resilient(mesh, cfg._replace(overflow="raise"), f,
+                               x, y, lsh, cap_factor=0.05,
+                               payload_dtype=jnp.float32)
+    assert ei.value.dropped > 0
+    with pytest.warns(RuntimeWarning, match="dropped"):
+        _, _, _, stats = run_krr_step_resilient(
+            mesh, cfg._replace(overflow="warn"), f, x, y, lsh,
+            cap_factor=0.05, payload_dtype=jnp.float32)
+    assert int(stats.overflow_dropped) == ei.value.dropped  # deterministic
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")                # allow must stay silent
+        _, _, _, stats2 = run_krr_step_resilient(
+            mesh, cfg._replace(overflow="allow"), f, x, y, lsh,
+            cap_factor=0.05, payload_dtype=jnp.float32)
+    assert int(stats2.overflow_dropped) == ei.value.dropped
+
+
+def test_overflow_policy_rejects_unknown():
+    from repro.core.distributed import StepStats, check_step_stats
+    stats = StepStats(overflow_dropped=np.int32(0),
+                      wire_nonfinite=np.int32(0))
+    with pytest.raises(ValueError, match="overflow"):
+        check_step_stats(stats, overflow="panic")
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices (CI chaos job sets "
+                           "XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+def test_wire_poison_recovery_on_real_mesh():
+    """The bf16->f32 retry ladder over REAL all_to_alls (2-way data mesh):
+    the same FaultPlan poisons the same cells on every shard, the sentinel
+    fires globally (psum'd counters), and the f32 retry lands finite."""
+    from repro.compat import make_mesh
+    from repro.core import GammaPDF, sample_lsh_params
+    from repro.core.distributed import KRRStepConfig, run_krr_step_resilient
+    key = jax.random.PRNGKey(6)
+    x = jax.random.uniform(key, (256, 3)) * 2.0
+    y = jax.random.normal(jax.random.fold_in(key, 1), (256,))
+    lsh = sample_lsh_params(jax.random.fold_in(key, 2), 4, 3,
+                            GammaPDF(2.0, 1.0))
+    mesh = make_mesh((1, 2, 1), ("pod", "data", "model"))
+    cfg = KRRStepConfig(m=4, table_size=1024, lam=0.5, cg_iters=15,
+                        data_axes=("pod", "data"), model_axis="model",
+                        backend="reference",
+                        fault_plan=FaultPlan(wire_nan_frac=0.2,
+                                             wire_nan_bf16_only=True,
+                                             seed=5))
+    with pytest.warns(RuntimeWarning, match="f32"):
+        beta, resnorm, tables, stats = run_krr_step_resilient(
+            mesh, cfg, get_bucket_fn("rect"), x, y, lsh, cap_factor=4.0)
+    assert bool(jnp.isfinite(beta).all())
+    assert bool(jnp.isfinite(resnorm).all())
+
+
+def test_stalled_shard_holds_up_the_step_wall_clock():
+    """A stalled shard delays every collective it participates in: the step
+    with a 0.4s stall takes >= 0.4s wall clock.  The detection signal in CI
+    is pytest-timeout on the chaos job; here we pin the injection works."""
+    import time
+    from repro.core.distributed import make_krr_step_hashjoin
+    mesh, cfg, f, x, y, lsh = _hj_setup(
+        fault_plan=FaultPlan(stall_shard=0, stall_s=0.4))
+    step = jax.jit(make_krr_step_hashjoin(mesh, cfg, f,
+                                          payload_dtype=jnp.float32))
+    jax.block_until_ready(step(x, y, lsh))      # compile outside the clock
+    t0 = time.perf_counter()
+    jax.block_until_ready(step(x, y, lsh))
+    assert time.perf_counter() - t0 >= 0.4

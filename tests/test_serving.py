@@ -10,6 +10,7 @@ Exactness pins (acceptance criteria):
   recompile (pinned via the jit cache size).
 """
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -473,3 +474,180 @@ def test_batcher_threaded_submitters(fitted, tmp_path):
         for t in threads:
             t.join()
     assert not errs
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode serving (DESIGN.md §9): crash, shed, deadlines, health
+# ---------------------------------------------------------------------------
+
+def test_batcher_worker_crash_fails_all_futures_and_fast_fails_submit():
+    """A worker-thread death (injected OUTSIDE the predict try/except) must
+    fail every in-flight and queued future with WorkerCrashed and make later
+    submits raise immediately — nobody ever hangs on a dead worker."""
+    from repro.serve import WorkerCrashed
+    from repro.testing import crash_worker
+    gate = threading.Event()
+
+    def slow_predict(xb):
+        gate.wait(5.0)
+        return np.zeros((xb.shape[0],), np.float32)
+
+    mb = MicroBatcher(slow_predict, max_batch=4, max_wait_us=500, dim=2)
+    crash_worker(mb)
+    futs = [mb.submit(np.zeros(2, np.float32)) for _ in range(6)]
+    gate.set()
+    for f in futs:
+        with pytest.raises(WorkerCrashed):
+            f.result(timeout=10.0)
+    assert mb.stats()["crashed"]
+    with pytest.raises(WorkerCrashed):       # fail-fast, not a queue hang
+        mb.submit(np.zeros(2, np.float32))
+    mb.close()                               # idempotent after a crash
+
+
+def test_batcher_load_shedding_returns_overloaded():
+    """Submits past max_queue fail at once with Overloaded carrying the
+    queue depth; accepted requests still serve correctly afterwards."""
+    from repro.serve import Overloaded
+    gate = threading.Event()
+
+    def gated_predict(xb):
+        gate.wait(10.0)
+        return np.arange(xb.shape[0]).astype(np.float32)
+
+    with MicroBatcher(gated_predict, max_batch=1, max_wait_us=100,
+                      dim=2, max_queue=2) as mb:
+        futs = [mb.submit(np.zeros(2, np.float32)) for _ in range(12)]
+        shed = [f for f in futs if f.done()
+                and isinstance(f.exception(), Overloaded)]
+        assert shed, "nothing shed at queue depth 2 under a blocked worker"
+        assert shed[0].exception().queue_depth >= 2
+        gate.set()
+        served = 0
+        for f in futs:
+            if f in shed:
+                continue
+            assert f.result(timeout=10.0) is not None
+            served += 1
+        stats = mb.stats()
+    assert stats["shed"] == len(shed)
+    assert stats["shed_rate"] == pytest.approx(len(shed) / 12)
+    assert served == 12 - len(shed)
+
+
+def test_batcher_deadline_expires_queued_requests():
+    """A request whose deadline budget elapses while queued fails with
+    DeadlineExceeded at flush time, BEFORE costing a predict call."""
+    from repro.serve import DeadlineExceeded
+    gate = threading.Event()
+    calls = []
+
+    def gated_predict(xb):
+        calls.append(xb.shape[0])
+        gate.wait(10.0)
+        return np.zeros((xb.shape[0],), np.float32)
+
+    with MicroBatcher(gated_predict, max_batch=1, max_wait_us=100,
+                      dim=2) as mb:
+        f1 = mb.submit(np.zeros(2, np.float32))          # occupies worker
+        f2 = mb.submit(np.ones(2, np.float32), deadline_us=10_000)
+        time.sleep(0.1)                                  # budget burns out
+        gate.set()
+        assert f1.result(timeout=10.0) is not None
+        with pytest.raises(DeadlineExceeded) as ei:
+            f2.result(timeout=10.0)
+        assert ei.value.waited_s >= 0.01
+        stats = mb.stats()
+    assert stats["deadline_expired"] == 1
+    assert calls.count(1) == 1      # the expired request never ran predict
+
+
+def test_predictor_rejects_nan_query_structured(fitted, tmp_path):
+    """A NaN/Inf query row surfaces as InvalidRequest — never a silently-NaN
+    prediction, and never a poisoned cache entry replayed to later calls."""
+    from repro.serve import InvalidRequest
+    model, x = fitted
+    export_artifact(str(tmp_path / "art"), model)
+    pred = Predictor(cache_entries=64)
+    pred.load(str(tmp_path / "art"))
+    bad = np.asarray(x[:4], np.float32).copy()
+    bad[2, 0] = np.nan
+    with pytest.raises(InvalidRequest, match=r"\[2\]"):
+        pred.predict(bad)
+    with pytest.raises(InvalidRequest):
+        pred.predict(np.full((3,), np.inf, np.float32))
+    # the clean rows still serve, and health recorded the rejections
+    out = pred.predict(np.asarray(x[:4], np.float32))
+    assert np.isfinite(out).all()
+    h = pred.health()
+    assert h["errors"] == 2 and "InvalidRequest" in h["last_error"]
+
+
+def test_predictor_health_snapshot_with_batcher(fitted, tmp_path):
+    model, x = fitted
+    export_artifact(str(tmp_path / "art"), model)
+    pred = Predictor()
+    aid = pred.load(str(tmp_path / "art"))
+    with MicroBatcher(lambda xb: pred.predict(xb), max_batch=8,
+                      max_wait_us=500) as mb:
+        pred.attach_batcher(mb)
+        for row in np.asarray(x[:8], np.float32):
+            mb.submit(row).result(timeout=10.0)
+        h = pred.health()
+    assert h["ok"] and h["models"] == [aid]
+    assert h["requests"] >= 1 and h["errors"] == 0
+    assert h["batcher"]["queue_depth"] == 0
+    assert not h["batcher"]["crashed"]
+
+
+def test_predictor_fault_plan_drives_serve_failures(fitted, tmp_path):
+    """FaultPlan(serve_fail_every=N) fails every Nth warm call with
+    FaultInjected — the hook the shed/deadline stress tests hang load on."""
+    from repro.errors import FaultInjected
+    from repro.testing import FaultPlan
+    model, x = fitted
+    export_artifact(str(tmp_path / "art"), model)
+    pred = Predictor(fault_plan=FaultPlan(serve_fail_every=2))
+    pred.load(str(tmp_path / "art"))
+    xq = np.asarray(x[:2], np.float32)
+    assert np.isfinite(pred.predict(xq)).all()           # call 1 clean
+    with pytest.raises(FaultInjected):                   # call 2 injected
+        pred.predict(xq)
+    assert np.isfinite(pred.predict(xq)).all()           # call 3 clean
+    assert pred.health()["errors"] == 1
+
+
+def test_artifact_load_retries_transient_io(fitted, tmp_path, monkeypatch):
+    """Transient I/O failures (flaky filesystem) retry with backoff;
+    validation errors never retry.  retries=0 keeps historical behavior."""
+    import repro.serve.artifact as art_mod
+    model, x = fitted
+    export_artifact(str(tmp_path / "art"), model)
+    real_once = art_mod._load_artifact_once
+    fails = {"n": 2}
+
+    def flaky(directory, **kw):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient read failure")
+        return real_once(directory, **kw)
+
+    monkeypatch.setattr(art_mod, "_load_artifact_once", flaky)
+    with pytest.raises(OSError):
+        load_artifact(str(tmp_path / "art"))             # no retries: raises
+    fails["n"] = 2
+    loaded = load_artifact(str(tmp_path / "art"), retries=3,
+                           retry_backoff_s=0.01)
+    assert loaded.artifact_id == "art"
+    assert fails["n"] == 0
+
+
+def test_artifact_rejects_nonfinite_tables(fitted, tmp_path):
+    """A poisoned artifact (NaN in the tables) is refused at load — the
+    predictor can never host a model that answers NaN to every query."""
+    model, x = fitted
+    poisoned = model._replace(
+        tables=jnp.asarray(model.tables).at[0, 0].set(jnp.nan))
+    export_artifact(str(tmp_path / "bad"), poisoned)
+    with pytest.raises(ValueError, match="non-finite"):
+        load_artifact(str(tmp_path / "bad"))
