@@ -11,7 +11,13 @@ model (rect bucket, serving-scale m):
   LRU probe, no jit entry): p50/p99.
 
 plus the micro-batcher under several offered loads (paced submit loop ->
-achieved QPS, latency percentiles, mean coalesced batch size).
+achieved QPS, latency percentiles, mean coalesced batch size), and a
+**sharded** section: ShardedPredictor warm batch-``MAX_BATCH`` p50/p99 on a
+fake-CPU 2x2 mesh, measured in a subprocess (the fake device count must be
+set before jax initializes) TOGETHER with the single-host warm p50 at the
+same batch in the same child, so ``ratio_vs_single`` compares like with
+like.  That ratio is the sharded-serving acceptance pin (warm p50 within
+3x of single-host) gated by ``check_regression --sharded``.
 
 The committed BENCH_serving.json is the regression baseline:
 ``benchmarks/check_regression.py`` gates warm_p50_us and cached_p50_us
@@ -26,6 +32,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import pathlib
+import subprocess
+import sys
 import tempfile
 import time
 
@@ -49,6 +59,8 @@ BATCH_REQUESTS = 2000
 MAX_BATCH = 64
 MAX_WAIT_US = 1000
 DUP_FRAC = 0.5
+
+SHARDED_MESH = (2, 2)                        # (model_shards, data_shards)
 
 
 def _lat_us(fn, iters: int):
@@ -135,12 +147,105 @@ def run(*, iters: int = 300, batch_requests: int = BATCH_REQUESTS,
     return out
 
 
+# ---------------------------------------------------------------------------
+# sharded section: ShardedPredictor vs single-host warm path on a fake mesh
+# ---------------------------------------------------------------------------
+
+_SHARDED_SCRIPT = r"""
+import json, sys, tempfile, time
+import numpy as np
+import jax
+from repro.launch.krr_serve import _fit_and_export
+from repro.serve import Predictor, ShardedPredictor
+from repro.serve.batcher import percentile
+
+mm, nd = (int(v) for v in sys.argv[1].split("x"))
+iters, repeats, batch = (int(v) for v in sys.argv[2:5])
+n, d, m = (int(v) for v in sys.argv[5:8])
+assert len(jax.devices()) >= mm * nd, jax.devices()
+
+
+def lat_us(fn, iters):
+    out = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        out.append((time.perf_counter() - t0) * 1e6)
+    return sorted(out)
+
+
+with tempfile.TemporaryDirectory() as tmp:
+    # one fit, two exports: the single-host artifact is the same model, so
+    # the latency ratio below is apples to apples
+    model, _ = _fit_and_export(tmp + "/single", n=n, d=d, m=m, seed=0)
+    _fit_and_export(tmp + "/sharded", n=n, d=d, m=m, seed=0,
+                    mesh_shape=(mm, nd))
+    single = Predictor(cache_entries=0)
+    single.load(tmp + "/single")
+    single.warmup(sizes=(batch,))
+    sharded = ShardedPredictor(mesh_shape=(mm, nd), cache_entries=0)
+    sharded.load(tmp + "/sharded")
+    sharded.warmup(sizes=(batch,))
+    q = (np.random.default_rng(0).uniform(0.0, 2.0, size=(batch, d))
+         .astype(np.float32))
+    res = {k: float("inf") for k in ("warm_p50_us", "warm_p99_us",
+                                     "single_warm_p50_us")}
+    for _ in range(repeats):
+        s = lat_us(lambda: sharded.predict(q, use_cache=False), iters)
+        u = lat_us(lambda: single.predict(q, use_cache=False), iters)
+        res["warm_p50_us"] = min(res["warm_p50_us"], percentile(s, 50))
+        res["warm_p99_us"] = min(res["warm_p99_us"], percentile(s, 99))
+        res["single_warm_p50_us"] = min(res["single_warm_p50_us"],
+                                        percentile(u, 50))
+res["mesh"] = f"{mm}x{nd}"
+res["batch"] = batch
+res["ratio_vs_single"] = res["warm_p50_us"] / res["single_warm_p50_us"]
+print("SHARDED:" + json.dumps(res))
+"""
+
+
+def sharded_section(*, mesh=SHARDED_MESH, iters: int = 100,
+                    repeats: int = 3, batch: int = MAX_BATCH,
+                    timeout: float = 900.0) -> dict:
+    """Warm sharded-serving latencies at batch ``batch`` on a fake-CPU
+    ``mesh``, measured in a subprocess (the fake device count must be set
+    before jax initializes, which this process already did).  The child
+    fits ONE model, serves it both ways, and reports sharded warm
+    p50/p99 plus the single-host warm p50 from the same process —
+    ``ratio_vs_single`` is the <=3x acceptance pin.  dedup=False broadcast
+    wire (the ShardedPredictor interactive default).  Failure yields an
+    explicit {"error": ...} marker instead of raising: a runner that cannot
+    spawn fake devices says nothing about the code."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    need = mesh[0] * mesh[1]
+    env = {"PYTHONPATH": str(root / "src"), "JAX_PLATFORMS": "cpu",
+           "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={need}"}
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", _SHARDED_SCRIPT,
+             f"{mesh[0]}x{mesh[1]}", str(iters), str(repeats), str(batch),
+             str(MODEL_N), str(MODEL_D), str(MODEL_M)],
+            env=env, capture_output=True, text=True, cwd=str(root),
+            timeout=timeout)
+    except subprocess.TimeoutExpired:
+        return {"mesh": f"{mesh[0]}x{mesh[1]}", "error": "timeout"}
+    line = next((ln for ln in proc.stdout.splitlines()
+                 if ln.startswith("SHARDED:")), None)
+    if proc.returncode != 0 or line is None:
+        return {"mesh": f"{mesh[0]}x{mesh[1]}",
+                "error": (proc.stderr or "no output")[-500:]}
+    return json.loads(line[len("SHARDED:"):])
+
+
 def main(json_path: str | None = None, *, quick: bool = False) -> dict:
     from . import bench_matvec
 
     res = run(iters=100 if quick else 300,
               batch_requests=500 if quick else BATCH_REQUESTS,
               offered_qps=(0.0,) if quick else OFFERED_QPS)
+    res["sharded"] = sharded_section(iters=50 if quick else 100,
+                                     repeats=1 if quick else 3)
     res["calib_us"] = bench_matvec.calibration_us()
     print(f"[bench_serving] cold first call {res['cold_first_call_us']:.0f}us "
           f"(compile included)")
@@ -157,6 +262,16 @@ def main(json_path: str | None = None, *, quick: bool = False) -> dict:
               f"{row['achieved_qps']:.0f} QPS, p50 {row['p50_us']:.0f}us "
               f"p99 {row['p99_us']:.0f}us, "
               f"mean batch {row['mean_batch']:.1f}")
+    sh = res["sharded"]
+    if "error" in sh:
+        print(f"[bench_serving] sharded {sh.get('mesh', '?')}: measurement "
+              f"FAILED {sh['error'][:120]}")
+    else:
+        print(f"[bench_serving] sharded {sh['mesh']} batch {sh['batch']}: "
+              f"warm p50 {sh['warm_p50_us']:.0f}us "
+              f"p99 {sh['warm_p99_us']:.0f}us "
+              f"({sh['ratio_vs_single']:.2f}x single-host warm "
+              f"{sh['single_warm_p50_us']:.0f}us)")
     if json_path:
         with open(json_path, "w") as fh:
             json.dump(res, fh, indent=2)

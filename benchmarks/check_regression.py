@@ -1,4 +1,5 @@
-"""Perf regression gates: matvec + serving + hash-join distributed.
+"""Perf regression gates: matvec + serving + hash-join distributed +
+sharded serving.
 
 Reruns the matvec benchmark section at the sizes recorded in the committed
 ``BENCH_matvec.json`` and fails when ``reference_us`` or ``fused_us``
@@ -34,6 +35,11 @@ DEFAULT_FACTOR = 1.3
 SERVING_FACTOR = 2.0
 # distributed timings come from subprocess fake-CPU meshes (noisier still)
 DIST_FACTOR = 2.0
+# sharded serving: subprocess fake-CPU mesh, same noise class as distributed
+SHARDED_FACTOR = 2.0
+# acceptance pin (DESIGN.md §10): sharded warm p50 vs single-host warm p50
+# AT THE SAME BATCH IN THE SAME CHILD — a ratio, so machine speed cancels
+SHARDED_RATIO_MAX = 3.0
 CHECKED_KEYS = ("reference_us", "fused_us")
 SERVING_KEYS = ("warm_p50_us", "cached_p50_us")
 
@@ -189,6 +195,58 @@ def check_distributed(baseline_path=DEFAULT_BASELINE,
     return failures, fresh
 
 
+def check_sharded_serving(baseline_path=DEFAULT_SERVING_BASELINE,
+                          factor: float = SHARDED_FACTOR,
+                          repeats: int = 3):
+    """Sharded-serving gate (serving-multidevice CI job): (failures, fresh).
+
+    Re-measures the sharded section (ShardedPredictor on a fake-CPU 2x2
+    mesh, subprocess) against the committed ``BENCH_serving.json``
+    ``"sharded"`` block and fails when:
+
+    * ``warm_p50_us`` regresses more than ``factor`` against the baseline
+      (calibration-rescaled, like every other gate), or
+    * ``ratio_vs_single`` exceeds ``SHARDED_RATIO_MAX`` — the sharded tier's
+      structural acceptance pin: batch-64 warm p50 must stay within 3x of
+      the single-host warm p50 measured in the SAME child process (a pure
+      ratio, immune to machine speed).
+
+    Skipped (not failed) on a cross-platform baseline, a baseline recorded
+    with an error marker, or a fresh measurement whose subprocess could not
+    spawn the fake mesh — none of those say anything about the code."""
+    import jax
+
+    from . import bench_matvec, bench_serving
+
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    if base.get("platform") != jax.default_backend():
+        return [], {}
+    cell = base.get("sharded") or {}
+    if not cell or "error" in cell:
+        return [], {}
+    scale = 1.0
+    if base.get("calib_us"):
+        scale = max(1.0, bench_matvec.calibration_us() / base["calib_us"])
+    fresh = bench_serving.sharded_section(repeats=repeats)
+    if "error" in fresh:
+        return [], fresh
+    failures = []
+    old, new = cell.get("warm_p50_us"), fresh.get("warm_p50_us")
+    if old and new and new > factor * old * scale:
+        failures.append(
+            f"sharded warm_p50_us {new:.0f}us > {factor:.2f}x baseline "
+            f"{old:.0f}us (machine scale {scale:.2f})")
+    ratio = fresh.get("ratio_vs_single")
+    if ratio is not None and ratio > SHARDED_RATIO_MAX:
+        failures.append(
+            f"sharded warm p50 {ratio:.2f}x single-host warm p50 "
+            f"(must be <= {SHARDED_RATIO_MAX:.1f}x; sharded "
+            f"{fresh['warm_p50_us']:.0f}us vs single "
+            f"{fresh['single_warm_p50_us']:.0f}us)")
+    return failures, fresh
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
@@ -201,10 +259,18 @@ def main(argv=None) -> int:
     ap.add_argument("--distributed-only", action="store_true",
                     help="run ONLY the distributed gate (CI multidevice job)")
     ap.add_argument("--distributed-factor", type=float, default=DIST_FACTOR)
+    ap.add_argument("--sharded", action="store_true",
+                    help="also gate the sharded-serving section (spawns a "
+                         "fake-CPU-mesh subprocess; minutes-scale)")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="run ONLY the sharded-serving gate (CI "
+                         "serving-multidevice job)")
+    ap.add_argument("--sharded-factor", type=float, default=SHARDED_FACTOR)
     args = ap.parse_args(argv)
+    only = args.distributed_only or args.sharded_only
     failures = []
     rows = []
-    if not args.distributed_only:
+    if not only:
         failures, rows = check(args.baseline, args.factor)
         if not rows:
             print("[check_regression] matvec baseline platform differs — "
@@ -213,7 +279,7 @@ def main(argv=None) -> int:
         print(f"[check_regression] n={row['n']}: "
               f"reference_us={row['reference_us']:.0f} "
               f"fused_us={row['fused_us']:.0f}")
-    if args.distributed or args.distributed_only:
+    if (args.distributed or args.distributed_only) and not args.sharded_only:
         dfail, dfresh = check_distributed(args.baseline,
                                           args.distributed_factor)
         failures += dfail
@@ -229,8 +295,7 @@ def main(argv=None) -> int:
                       f"shards={r['shards']}: "
                       f"hashjoin_iter_us={r['hashjoin_iter_us']:.0f} "
                       f"psum_iter_us={r['psum_iter_us']:.0f}")
-    if (not args.distributed_only
-            and pathlib.Path(args.serving_baseline).exists()):
+    if not only and pathlib.Path(args.serving_baseline).exists():
         sfail, sbest = check_serving(args.serving_baseline,
                                      args.serving_factor)
         failures += sfail
@@ -240,6 +305,21 @@ def main(argv=None) -> int:
         else:
             print("[check_regression] serving: " +
                   " ".join(f"{k}={v:.0f}us" for k, v in sorted(sbest.items())))
+    if ((args.sharded or args.sharded_only)
+            and pathlib.Path(args.serving_baseline).exists()):
+        shfail, shfresh = check_sharded_serving(args.serving_baseline,
+                                                args.sharded_factor)
+        failures += shfail
+        if not shfresh:
+            print("[check_regression] sharded baseline absent or platform "
+                  "differs — skipped")
+        elif "error" in shfresh:
+            print(f"[check_regression] sharded measurement FAILED "
+                  f"{shfresh['error'][:120]} — skipped")
+        else:
+            print(f"[check_regression] sharded {shfresh['mesh']}: "
+                  f"warm_p50_us={shfresh['warm_p50_us']:.0f} "
+                  f"ratio_vs_single={shfresh['ratio_vs_single']:.2f}")
     if failures:
         for f in failures:
             print(f"[check_regression] REGRESSION {f}")

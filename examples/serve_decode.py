@@ -1,19 +1,80 @@
-"""Batched serving example: prefill + autoregressive decode with ring-buffer
-KV caches on the hybrid zamba2 (Mamba2 states + shared windowed attention).
+"""Online serving example: fit -> export -> micro-batched prediction.
 
-    PYTHONPATH=src python examples/serve_decode.py
+    PYTHONPATH=src python examples/serve_decode.py [--requests N]
+        [--mesh MxN]
+
+Fits a small WLSH-KRR model, exports it as a serving artifact, hosts it
+behind the warm-path ``Predictor`` (padding buckets + bucket-exact cache)
+and pushes a synthetic request stream through the ``MicroBatcher`` — the
+same submit -> coalesce -> padded-jit -> future path
+``python -m repro.launch.krr_serve`` runs at traffic.
+
+``--mesh MxN`` (e.g. ``--mesh 2x2``) exports a sharded piece grid instead
+and serves it with ``ShardedPredictor`` on a (model_shards, data_shards)
+device mesh — run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to try it on fake
+CPU devices.  Default is the single-host path, which runs on one device.
 """
-import subprocess
-import sys
+import argparse
+import tempfile
 
-CMD = [
-    sys.executable, "-m", "repro.launch.serve",
-    "--arch", "zamba2-7b", "--smoke",
-    "--batch", "4", "--prompt-len", "24", "--gen", "16",
-    "--temperature", "0.8",
-]
+import numpy as np
+
+from repro.launch.krr_serve import (_fit_and_export, _synthetic_stream,
+                                    serve_stream)
+from repro.serve import (Predictor, ShardedPredictor, bucket_sizes,
+                         parse_mesh_shape)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=500)
+    ap.add_argument("--dup-frac", type=float, default=0.4,
+                    help="fraction of requests replaying earlier ones "
+                         "(the bucket-exact cache's traffic)")
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--mesh", default=None, metavar="MxN",
+                    help="serve sharded on a (model x data) device mesh")
+    args = ap.parse_args()
+    mesh_shape = parse_mesh_shape(args.mesh) if args.mesh else None
+
+    with tempfile.TemporaryDirectory() as tmp:
+        art = tmp + "/artifact"
+        print(f"[serve] fitting + exporting demo artifact -> {art}")
+        model, xtr = _fit_and_export(art, n=1024, d=8, m=64,
+                                     mesh_shape=mesh_shape)
+        if mesh_shape is not None:
+            predictor = ShardedPredictor(mesh_shape=mesh_shape,
+                                         cache_entries=4096)
+        else:
+            predictor = Predictor(cache_entries=4096)
+        predictor.load(art)
+        n_compiled = predictor.warmup(sizes=bucket_sizes(args.max_batch))
+        print(f"[serve] {n_compiled} padding buckets compiled"
+              + (f" (mesh {args.mesh})" if mesh_shape else ""))
+
+        stream = _synthetic_stream(xtr.shape[1], args.requests,
+                                   args.dup_frac, seed=1)
+        stats = serve_stream(predictor, stream,
+                             max_batch=args.max_batch, max_wait_us=1000)
+        print(f"[serve] {stats['served']} requests in {stats['wall_s']:.2f}s "
+              f"-> {stats['qps']:.0f} QPS "
+              f"({stats['batches']} batches, mean "
+              f"{stats['mean_batch']:.1f} rows)")
+        print(f"[serve] latency p50 {stats['p50_us']:.0f}us "
+              f"p99 {stats['p99_us']:.0f}us")
+        cache = predictor.cache_stats()
+        print(f"[serve] cache hit rate {cache['hit_rate']:.2f} "
+              f"({cache['hits']} hits / {cache['misses']} misses)")
+
+        # every batched answer must match the predictor's own direct path
+        expect = predictor.predict(stream, use_cache=False)
+        err = float(np.abs(stats["results"] - np.asarray(expect)).max())
+        print(f"[serve] max |batched - direct| = {err:.2e}")
+        health = predictor.health()
+        print(f"[serve] health ok={health['ok']} "
+              f"requests={health['requests']}")
+
 
 if __name__ == "__main__":
-    print("+", " ".join(CMD))
-    proc = subprocess.run(CMD, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
-    raise SystemExit(proc.returncode)
+    main()

@@ -76,6 +76,19 @@ def save_checkpoint(directory: str, step: int, state: Any,
     return final
 
 
+def atomic_write_json(path: str, obj: dict) -> None:
+    """Write ``obj`` to ``path`` via temp file + ``os.replace``: readers see
+    either the previous complete document or the new one, never a torn
+    write.  Used for the sharded-artifact manifest (serve/artifact.py),
+    which must flip a whole piece GRID from one export generation to the
+    next in one rename."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(obj, fh)
+    os.replace(tmp, path)
+
+
 def latest_step(directory: str) -> int | None:
     """Largest step with a COMPLETE checkpoint (tmp dirs are ignored)."""
     if not os.path.isdir(directory):

@@ -51,6 +51,17 @@ class WLSHKRRConfig:
     solve_checkpoint_every: int = 0  # persist PCG SolveState every N
                                   # iterations (0 = off); a preempted fit
                                   # resumes from the last saved chunk
+    serve_mesh: str = "8x32"      # sharded SERVING grid "MxN" (model_shards
+                                  # x data_shards) for export_artifact_sharded
+                                  # / ShardedPredictor; the table piece (i, j)
+                                  # holds slots [j·B/N, (j+1)·B/N) of instance
+                                  # rows [i·m/M, (i+1)·m/M) — DESIGN.md §10
+    serve_max_batch: int = 1024   # serving padding-bucket cap (power of two,
+                                  # >= data_shards; requests above it chunk)
+    serve_dedup: bool = False     # serving wire mode: False = broadcast
+                                  # route (lowest latency, can't overflow);
+                                  # True = training routing's deduplicated
+                                  # cells (bulk scoring)
     notes: str = "paper's technique; data-sharded PCG step over the mesh"
 
 

@@ -855,20 +855,77 @@ def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
     return step
 
 
+def _axes_linear_index(axes) -> Array:
+    """This shard's linear index along (possibly multiple) mesh axes —
+    row-major over ``axes``, matching all_to_all's shard order."""
+    if isinstance(axes, str):
+        return jax.lax.axis_index(axes)
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _broadcast_readout(slot: Array, coeff: Array, table_flat: Array,
+                       n_shards: int, spp: int, data_axes, model_axis,
+                       m_total: int, payload_dtype) -> Array:
+    """Route→serve→readout WITHOUT the dedup pack: every owner receives the
+    raw (m_loc, n_loc) slot requests (one int32 all_to_all), serves the ones
+    it owns (out-of-range ids gather 0 — each request has exactly ONE
+    owner), and the value exchange sums over the owner axis.  No layout
+    sort, no routing scatters, no capacity — nothing can overflow.  Wire is
+    O(n_shards · m_loc · n_loc) instead of O(distinct cells): the tradeoff
+    the SERVING tier wants at interactive batch sizes, where routing-build
+    latency dominates the saved bytes (see make_krr_predict_hashjoin's
+    ``dedup``).  Non-finite served values are sanitized to dropped mass,
+    matching ``_hashjoin_readout``."""
+    m_loc, n_loc = slot.shape
+    send = jnp.broadcast_to(slot[None], (n_shards, m_loc, n_loc))
+    recv = jax.lax.all_to_all(send, data_axes, 0, 0, tiled=True)
+    local = recv - _axes_linear_index(data_axes) * spp
+    ids = jnp.where((local >= 0) & (local < spp),
+                    jnp.arange(m_loc, dtype=jnp.int32)[None, :, None] * spp
+                    + local, m_loc * spp)
+    served = table_flat.at[ids].get(mode="fill", fill_value=0)
+    back = jax.lax.all_to_all(served.astype(payload_dtype), data_axes, 0, 0,
+                              tiled=True).astype(jnp.float32)
+    back = jnp.where(jnp.isfinite(back), back, 0.0)
+    vals = jnp.sum(back, axis=0)                       # (m_loc, n_loc[, k])
+    contrib = coeff[:, :, None] * vals if vals.ndim == 3 else coeff * vals
+    return jax.lax.psum(jnp.sum(contrib, axis=0), model_axis) / m_total
+
+
 def make_krr_predict_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
                               cap_factor: float = 2.0,
-                              payload_dtype=jnp.bfloat16):
+                              payload_dtype=jnp.bfloat16,
+                              with_stats: bool = False,
+                              dedup: bool = True):
     """predict(x_test, lsh, table) -> yhat against a DATA-SHARDED table.
 
     ``table`` is the (m, B[, k]) structure assembled from
     ``make_krr_step_hashjoin``'s third output (spec
     P(model_axis, data_axes): shard s owns slots [s·spp, (s+1)·spp)).  Test
-    points are data-sharded; each shard routes its points' deduplicated
-    slot requests to the owner shards (the readout half of the training
-    routing: one request all_to_all at trace of the fixed query set, one
-    value exchange), so the table the step already left sharded is finally
+    points are data-sharded; each shard routes its points' slot requests to
+    the owner shards, the owners serve their slices, and one value exchange
+    assembles the predictions — the table the step already left sharded is
     consumable without a gather.  Returns (n_test,) or (n_test, k)
-    predictions sharded P(data_axes)."""
+    predictions sharded P(data_axes).
+
+    ``dedup=True`` (default — bulk scoring) packs DEDUPLICATED
+    (instance, slot) cells through the training routing's slot-sorted
+    layout: minimal wire bytes, amortized over large n.  ``dedup=False``
+    (the serving tier's interactive mode) routes the raw requests instead —
+    no layout sort, no routing scatters, no capacity to overflow — which at
+    small padded batches is several times lower latency for strictly more
+    wire bytes; the two modes agree bitwise on the reference backend (same
+    table values, same coeff reduce, same psum).
+
+    ``with_stats`` additionally returns a (data_shards,) int32 vector of
+    distinct buckets dropped past the routing capacity PER SENDING DATA
+    SHARD (summed over the model axis) — the serving tier folds this into
+    ``health()`` so overflow under a hot query distribution is observable
+    per shard instead of one global scalar.  (Always zero for
+    ``dedup=False``: the broadcast route has no capacity.)"""
     n_shards = _data_shard_count(mesh, cfg)
     if cfg.table_size % n_shards:
         raise ValueError("hash-join needs table_size divisible by the data "
@@ -879,21 +936,56 @@ def make_krr_predict_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
                 LSHParams(w=P(cfg.model_axis, None), z=P(cfg.model_axis, None),
                           r1=P(cfg.model_axis, None), r2=P(cfg.model_axis, None)),
                 P(cfg.model_axis, cfg.data_axes))
-    out_specs = P(cfg.data_axes)
+    out_specs = ((P(cfg.data_axes), P(cfg.data_axes)) if with_stats
+                 else P(cfg.data_axes))
 
     @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs)
     def predict(x_local, lsh_local, table_local):
         op = _shard_operator(cfg, f, lsh_local, fused=False)
+        # flatten my (m_loc, spp[, k]) slice to the served id space
+        table_flat = table_local.reshape((-1,) + table_local.shape[2:])
+        if not dedup:
+            idx = op.build_index(op.featurize(x_local), blocked=False)
+            out = _broadcast_readout(idx.slot, idx.coeff, table_flat,
+                                     n_shards, cfg.table_size // n_shards,
+                                     cfg.data_axes, cfg.model_axis, cfg.m,
+                                     payload_dtype)
+            if with_stats:
+                return out, jnp.zeros((1,), jnp.int32)
+            return out
         idx = op.build_index(op.featurize(x_local), blocked=True,
                              parts=_hashjoin_layout_parts(backend))
         rt = _build_routing(idx.slot, idx.blocked, n_shards, cfg.table_size,
                             cfg.data_axes, cap_factor, kernels=use_kernels)
-        # flatten my (m_loc, spp[, k]) slice to the served id space
-        table_flat = table_local.reshape((-1,) + table_local.shape[2:])
-        return _hashjoin_readout(rt, idx.blocked, idx.coeff, table_flat,
-                                 cfg.data_axes, cfg.model_axis, cfg.m,
-                                 payload_dtype, default_interpret(),
-                                 plan=cfg.fault_plan)
+        out = _hashjoin_readout(rt, idx.blocked, idx.coeff, table_flat,
+                                cfg.data_axes, cfg.model_axis, cfg.m,
+                                payload_dtype, default_interpret(),
+                                plan=cfg.fault_plan)
+        if with_stats:
+            # dropped is per (model, data) shard; the model psum leaves one
+            # replicated count per data shard -> P(data_axes) over (1,)
+            # assembles the global (data_shards,) vector
+            return out, jax.lax.psum(rt.dropped, cfg.model_axis)[None]
+        return out
 
     return predict
+
+
+def query_shard_touch(slots, table_size: int, n_shards: int):
+    """(n, m) per-query table slots -> (n, n_shards) bool touch masks.
+
+    Shard j owns slots [j·spp, (j+1)·spp) (spp = table_size / n_shards, the
+    hash-join layout above), so a query's prediction depends ONLY on the
+    shards its m slots land in.  The serving cache keys fold in exactly this
+    touch set (+ per-shard piece versions): reloading one shard's table
+    piece then invalidates only the entries whose slots touch it.  Pure
+    numpy — the cache path must never enter the jit runtime."""
+    slots = np.asarray(slots)
+    if table_size % n_shards:
+        raise ValueError(f"table_size={table_size} not divisible by "
+                         f"n_shards={n_shards}")
+    owners = slots // (table_size // n_shards)
+    touch = np.zeros((slots.shape[0], n_shards), bool)
+    touch[np.arange(slots.shape[0])[:, None], owners] = True
+    return touch

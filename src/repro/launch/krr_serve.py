@@ -8,6 +8,11 @@ stream through the micro-batcher, report latency/QPS/cache stats.
     # self-contained smoke (fit -> export -> serve -> verify; used by CI):
     PYTHONPATH=src python -m repro.launch.krr_serve --selftest
 
+    # SHARDED serving on a (model x data) device mesh (table pieces sharded
+    # P(model, data), hash-join routing — DESIGN.md §10); 4 fake CPU devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+        python -m repro.launch.krr_serve --selftest --mesh 2x2
+
 The request stream is synthetic by default (uniform points in the training
 box, with ``--dup-frac`` of requests replaying earlier queries — that is the
 traffic the bucket-exact cache exists for) or file-driven via ``--input``
@@ -25,7 +30,7 @@ import time
 import numpy as np
 
 from ..serve import (DeadlineExceeded, MicroBatcher, Overloaded, Predictor,
-                     bucket_sizes)
+                     ShardedPredictor, bucket_sizes, parse_mesh_shape)
 
 
 def _synthetic_stream(d: int, n_requests: int, dup_frac: float,
@@ -93,13 +98,15 @@ def serve_stream(predictor: Predictor, stream: np.ndarray, *,
 
 
 def _fit_and_export(directory: str, *, n: int = 1024, d: int = 8,
-                    m: int = 128, seed: int = 0):
+                    m: int = 128, seed: int = 0,
+                    mesh_shape: tuple[int, int] | None = None):
     """Tiny in-process fit -> artifact, for --selftest and missing --artifact
-    runs.  Returns (model, x_train)."""
+    runs.  ``mesh_shape`` switches to the sharded piece-grid export.
+    Returns (model, x_train)."""
     import jax
 
     from ..core import WLSHKernelSpec, get_bucket_fn, wlsh_krr_fit
-    from ..serve import export_artifact
+    from ..serve import export_artifact, export_artifact_sharded
 
     key = jax.random.PRNGKey(seed)
     x = jax.random.uniform(key, (n, d)) * 2.0
@@ -107,7 +114,11 @@ def _fit_and_export(directory: str, *, n: int = 1024, d: int = 8,
     spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"))
     model = wlsh_krr_fit(jax.random.fold_in(key, 2), x, y, spec, m=m,
                          lam=0.5, backend="reference")
-    export_artifact(directory, model, artifact_id="selftest")
+    if mesh_shape is None:
+        export_artifact(directory, model, artifact_id="selftest")
+    else:
+        export_artifact_sharded(directory, model, mesh_shape=mesh_shape,
+                                artifact_id="selftest")
     return model, np.asarray(x, np.float32)
 
 
@@ -156,6 +167,66 @@ def selftest() -> int:
     return 0
 
 
+def selftest_sharded(mesh_shape: tuple[int, int]) -> int:
+    """Sharded-serving smoke for the serving-multidevice CI job: fit, export
+    the piece grid, host it on a (model, data) mesh behind the batcher,
+    serve 100 queries, and verify <=1e-5 against the single-host Predictor
+    on the SAME model (plus a bitwise stream replay — cache hits and repeat
+    warm rows must reproduce exactly whatever the mesh is)."""
+    import jax
+
+    from ..serve import Predictor, ShardedPredictor, export_artifact
+
+    need = mesh_shape[0] * mesh_shape[1]
+    if len(jax.devices()) < need:
+        print(f"[krr_serve] SELFTEST FAIL: mesh "
+              f"{mesh_shape[0]}x{mesh_shape[1]} needs {need} devices, have "
+              f"{len(jax.devices())} (set "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count={need})")
+        return 1
+    with tempfile.TemporaryDirectory() as tmp:
+        model, xtr = _fit_and_export(tmp + "/sharded", mesh_shape=mesh_shape)
+        export_artifact(tmp + "/single", model, artifact_id="selftest")
+        single = Predictor(cache_entries=4096)
+        single.load(tmp + "/single")
+        predictor = ShardedPredictor(mesh_shape=mesh_shape,
+                                     cache_entries=4096)
+        predictor.load(tmp + "/sharded")
+        n_compiled = predictor.warmup(sizes=bucket_sizes(16))
+        stream = _synthetic_stream(xtr.shape[1], 100, dup_frac=0.3, seed=1)
+        stats = serve_stream(predictor, stream, max_batch=16,
+                             max_wait_us=1000)
+        if stats["served"] != 100:
+            print(f"[krr_serve] SELFTEST FAIL: served {stats['served']}/100")
+            return 1
+        expect = single.predict(stream, use_cache=False)
+        err = float(np.abs(stats["results"] - expect).max())
+        if err > 1e-5:
+            print(f"[krr_serve] SELFTEST FAIL: sharded serving off the "
+                  f"single-host path by {err:.2e} (> 1e-5)")
+            return 1
+        replay = serve_stream(predictor, stream, max_batch=16,
+                              max_wait_us=1000)
+        if not np.array_equal(replay["results"], stats["results"]):
+            print("[krr_serve] SELFTEST FAIL: replayed stream not bitwise "
+                  "reproducible")
+            return 1
+        health = predictor.health()
+        overflow = health["shards"]["selftest"]["overflow"]
+        if any(overflow):
+            print(f"[krr_serve] SELFTEST FAIL: routing overflow dropped "
+                  f"buckets: {overflow}")
+            return 1
+        cache = predictor.cache_stats()
+        print(f"[krr_serve] sharded selftest ok "
+              f"(mesh {mesh_shape[0]}x{mesh_shape[1]}): 100/100 within "
+              f"{err:.1e} of single-host (replay bitwise, overflow 0); "
+              f"{n_compiled} buckets compiled, {stats['batches']} batches, "
+              f"p50 {stats['p50_us']:.0f}us p99 {stats['p99_us']:.0f}us, "
+              f"cache hit rate {cache['hit_rate']:.2f}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--artifact", default=None,
@@ -186,25 +257,50 @@ def main(argv=None) -> int:
                          "(0 = no deadline)")
     ap.add_argument("--cache-entries", type=int, default=65536,
                     help="bucket-exact cache size; 0 disables")
+    ap.add_argument("--mesh", default=None, metavar="MxN",
+                    help="serve SHARDED on a (model_shards M x data_shards "
+                         "N) device mesh, e.g. --mesh 2x2; the artifact "
+                         "must be a matching export_artifact_sharded piece "
+                         "grid (omitted -> single-host Predictor)")
+    ap.add_argument("--placement", default=None, metavar="LO:HI",
+                    help="host the model on model-axis rows [LO, HI) of the "
+                         "--mesh so several models co-serve (default: the "
+                         "whole model axis)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    mesh_shape = parse_mesh_shape(args.mesh) if args.mesh else None
     if args.selftest:
-        return selftest()
+        return selftest_sharded(mesh_shape) if mesh_shape else selftest()
 
-    predictor = Predictor(backend=args.backend,
-                          cache_entries=args.cache_entries)
+    placement = None
+    if args.placement:
+        lo, hi = args.placement.split(":")
+        placement = (int(lo), int(hi))
+    if mesh_shape is not None:
+        predictor = ShardedPredictor(mesh_shape=mesh_shape,
+                                     backend=args.backend,
+                                     cache_entries=args.cache_entries)
+    else:
+        predictor = Predictor(backend=args.backend,
+                              cache_entries=args.cache_entries)
     with contextlib.ExitStack() as stack:
         if args.artifact:
-            aid = predictor.load(args.artifact)
+            aid = (predictor.load(args.artifact, placement=placement)
+                   if mesh_shape is not None else
+                   predictor.load(args.artifact))
         else:
             # demo artifact lives only for this run — cleaned up on exit
             tmp = stack.enter_context(
                 tempfile.TemporaryDirectory(prefix="krr_serve_"))
             print(f"[krr_serve] no --artifact: fitting a demo model "
                   f"-> {tmp}/artifact")
-            _fit_and_export(tmp + "/artifact")
-            aid = predictor.load(tmp + "/artifact")
+            span = ((placement[1] - placement[0], mesh_shape[1])
+                    if mesh_shape and placement else mesh_shape)
+            _fit_and_export(tmp + "/artifact", mesh_shape=span)
+            aid = (predictor.load(tmp + "/artifact", placement=placement)
+                   if mesh_shape is not None else
+                   predictor.load(tmp + "/artifact"))
         return _serve_main(predictor, aid, args)
 
 

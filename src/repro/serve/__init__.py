@@ -8,8 +8,11 @@ structured serving errors re-export here for callers.
 """
 from ..errors import (DeadlineExceeded, InvalidRequest, Overloaded,
                       ServingError, WorkerCrashed)
-from .artifact import (ARTIFACT_FORMAT, LoadedArtifact, Normalization,
-                       export_artifact, load_artifact)
+from .artifact import (ARTIFACT_FORMAT, LoadedArtifact,
+                       LoadedShardedArtifact, Normalization, export_artifact,
+                       export_artifact_sharded, load_artifact,
+                       load_artifact_sharded)
 from .batcher import MicroBatcher
 from .cache import BucketKeyFn, PredictionCache
 from .predictor import Predictor, bucket_sizes, padding_bucket
+from .sharded import ShardedPredictor, parse_mesh_shape

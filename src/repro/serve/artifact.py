@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import restore_checkpoint, save_checkpoint
-from ..checkpoint.store import latest_step
+from ..checkpoint.store import atomic_write_json, latest_step
 from ..core.bucket_fns import BUCKET_FNS
 from ..core.krr import WLSHKRRModel, model_operator
 from ..core.lsh import LSHParams
@@ -231,3 +231,244 @@ def _read_meta(directory: str, step: int) -> dict:
     import json
     with open(os.path.join(directory, f"step_{step}", "meta.json")) as fh:
         return json.load(fh)
+
+
+# ---------------------------------------------------------------------------
+# Sharded artifacts: one piece per (model-shard, data-shard) mesh cell
+# ---------------------------------------------------------------------------
+#
+# A model too big for one host is exported as a GRID of pieces matching the
+# serving mesh: piece (i, j) holds model-shard i's LSH slice (m_loc, d) and
+# its slot-range slice of the bucket tables (m_loc, spp[, k]) with
+# spp = table_size / data_shards — exactly the shard layout
+# ``make_krr_step_hashjoin`` leaves the table in (P(model, data): owner j
+# holds slots [j*spp, (j+1)*spp)), so a serving host only ever loads its own
+# piece.  Every piece is an independent atomic checkpoint
+# (checkpoint/store.py tmp+rename); the manifest.json is written LAST, also
+# atomically, so a torn export (some pieces written, writer killed) is
+# invisible — the loader starts from the manifest and a piece's torn
+# ``step_N.tmp`` is ignored by ``latest_step`` exactly as for single-host
+# artifacts.
+
+MANIFEST_NAME = "manifest.json"
+
+
+class LoadedShardedArtifact(NamedTuple):
+    artifact_id: str
+    model: WLSHKRRModel          # reassembled full model (beta dropped)
+    operator: WLSHOperator       # rebuilt on the requested backend
+    norm: Normalization | None
+    mesh_shape: tuple[int, int]  # (model_shards, data_shards) of the export
+    manifest: dict
+
+
+def _piece_name(i: int, j: int) -> str:
+    return f"shard_{i}_{j}"
+
+
+def export_artifact_sharded(directory: str, model: WLSHKRRModel, *,
+                            mesh_shape: tuple[int, int],
+                            artifact_id: str | None = None,
+                            norm: Normalization | None = None,
+                            extra_meta: dict | None = None) -> str:
+    """Atomically export ``model`` as a (model_shards, data_shards) piece
+    grid for a sharded serving mesh.  Returns the artifact id.
+
+    Requires ``m % model_shards == 0`` and ``table_size % data_shards == 0``.
+    ``beta`` is always dropped (the serving tier never reads it — see
+    ``export_artifact(include_beta=False)``); normalization stats are tiny
+    and travel in the manifest.  Pieces are written first (each through the
+    checkpoint store's tmp+rename), the manifest last via its own atomic
+    rename — a crash at ANY point leaves either the previous complete
+    export or nothing loadable, never a mixed one (the manifest carries a
+    per-export version cross-checked against every piece's meta).
+    """
+    mm, nd = int(mesh_shape[0]), int(mesh_shape[1])
+    if mm <= 0 or nd <= 0:
+        raise ValueError(f"mesh_shape must be positive, got {mesh_shape}")
+    tables = np.asarray(model.tables, np.float32)
+    m, table_size = tables.shape[:2]
+    if m % mm:
+        raise ValueError(f"m={m} not divisible by model_shards={mm}")
+    if table_size % nd:
+        raise ValueError(f"table_size={table_size} not divisible by "
+                         f"data_shards={nd}")
+    m_loc, spp = m // mm, table_size // nd
+    artifact_id = artifact_id or os.path.basename(os.path.normpath(directory))
+    prev = _read_manifest(directory)
+    version = int(prev.get("export_version", 0)) + 1 if prev else 1
+
+    lsh = {name: np.asarray(arr, _DTYPES[f"lsh_{name}"])
+           for name, arr in (("w", model.lsh.w), ("z", model.lsh.z),
+                             ("r1", model.lsh.r1), ("r2", model.lsh.r2))}
+    common = {"kind": "wlsh_krr_sharded_piece",
+              "format": ARTIFACT_FORMAT,
+              "artifact_id": artifact_id,
+              "export_version": version,
+              "mesh_shape": [mm, nd],
+              "bucket_name": model.bucket_name,
+              "table_size": int(table_size),
+              "m": int(m)}
+    pieces = {}
+    for i in range(mm):
+        for j in range(nd):
+            arrays = {f"lsh_{k}": v[i * m_loc:(i + 1) * m_loc]
+                      for k, v in lsh.items()}
+            arrays["tables"] = np.ascontiguousarray(
+                tables[i * m_loc:(i + 1) * m_loc, j * spp:(j + 1) * spp])
+            name = _piece_name(i, j)
+            save_checkpoint(os.path.join(directory, name), ARTIFACT_FORMAT,
+                            arrays,
+                            {**common, "piece": [i, j],
+                             "arrays": {k: list(v.shape)
+                                        for k, v in arrays.items()}})
+            pieces[f"{i},{j}"] = name
+    manifest = {"kind": "wlsh_krr_sharded_artifact",
+                "format": ARTIFACT_FORMAT,
+                "artifact_id": artifact_id,
+                "export_version": version,
+                "mesh_shape": [mm, nd],
+                "m": int(m), "table_size": int(table_size),
+                "k": int(tables.shape[2]) if tables.ndim == 3 else 0,
+                "bucket_name": model.bucket_name,
+                "backend": model.backend,
+                "precond": model.precond,
+                "cg_iters": int(np.asarray(model.cg_iters)),
+                "pieces": pieces,
+                "has_norm": norm is not None,
+                **(extra_meta or {})}
+    if norm is not None:
+        manifest["norm"] = {
+            "x_mean": np.asarray(norm.x_mean, np.float32).reshape(-1).tolist(),
+            "x_std": np.asarray(norm.x_std, np.float32).reshape(-1).tolist(),
+            "y_mean": float(np.float32(norm.y_mean)),
+            "y_std": float(np.float32(norm.y_std))}
+    _write_manifest(directory, manifest)
+    return artifact_id
+
+
+def _write_manifest(directory: str, manifest: dict) -> None:
+    os.makedirs(directory, exist_ok=True)
+    atomic_write_json(os.path.join(directory, MANIFEST_NAME), manifest)
+
+
+def _read_manifest(directory: str) -> dict | None:
+    import json
+    path = os.path.join(directory, MANIFEST_NAME)
+    if not os.path.exists(path):
+        return None
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def load_artifact_sharded(directory: str, *, mesh_shape: tuple[int, int],
+                          backend: str | None = None,
+                          artifact_id: str | None = None
+                          ) -> LoadedShardedArtifact:
+    """Load + validate a sharded artifact for a TARGET serving mesh.
+
+    ``mesh_shape`` is the (model_shards, data_shards) grid the caller will
+    serve on; a manifest recording a different grid is REFUSED — the piece
+    slot ranges are baked into the export, so serving a 2x4 export on a 2x2
+    mesh would silently merge the wrong slot ranges.  (Re-export for the new
+    mesh instead; the pieces are cheap.)  Every piece's meta is cross-checked
+    against the manifest (format, export version, geometry), so a torn or
+    mixed export can never assemble: a piece whose atomic save was killed
+    mid-write is invisible to ``latest_step`` and surfaces as a missing
+    piece, and a piece from a DIFFERENT export generation fails the version
+    cross-check.
+    """
+    manifest = _read_manifest(directory)
+    if manifest is None:
+        raise FileNotFoundError(f"no sharded artifact manifest under "
+                                f"{directory}")
+    if manifest.get("kind") != "wlsh_krr_sharded_artifact":
+        raise ValueError(f"not a sharded artifact: "
+                         f"kind={manifest.get('kind')!r}")
+    fmt = int(manifest.get("format", 0))
+    if fmt > ARTIFACT_FORMAT:
+        raise ValueError(f"sharded artifact format {fmt} is newer than this "
+                         f"build's reader (supports <= {ARTIFACT_FORMAT})")
+    rec = tuple(manifest.get("mesh_shape", ()))
+    want = (int(mesh_shape[0]), int(mesh_shape[1]))
+    if rec != want:
+        raise ValueError(
+            f"sharded artifact was exported for mesh {rec}, target mesh is "
+            f"{want}: piece slot ranges do not line up — re-export for the "
+            f"target mesh")
+    mm, nd = want
+    m, table_size = int(manifest["m"]), int(manifest["table_size"])
+    k = int(manifest.get("k", 0))
+    m_loc, spp = m // mm, table_size // nd
+    piece_shape = (m_loc, spp) + ((k,) if k else ())
+    version = int(manifest.get("export_version", 1))
+
+    lsh_parts = {name: [None] * mm for name in ("w", "z", "r1", "r2")}
+    table_rows = []
+    for i in range(mm):
+        row = []
+        for j in range(nd):
+            name = manifest["pieces"].get(f"{i},{j}")
+            if name is None:
+                raise ValueError(f"manifest missing piece ({i},{j})")
+            pdir = os.path.join(directory, name)
+            step = latest_step(pdir)
+            if step is None:
+                raise FileNotFoundError(
+                    f"sharded artifact piece ({i},{j}) has no complete "
+                    f"checkpoint under {pdir} (torn export?)")
+            meta = _read_meta(pdir, step)
+            if (meta.get("kind") != "wlsh_krr_sharded_piece"
+                    or meta.get("piece") != [i, j]
+                    or int(meta.get("export_version", -1)) != version
+                    or tuple(meta.get("mesh_shape", ())) != want):
+                raise ValueError(
+                    f"piece ({i},{j}) meta disagrees with the manifest "
+                    f"(version {meta.get('export_version')} vs {version}, "
+                    f"mesh {meta.get('mesh_shape')} vs {list(want)}) — "
+                    f"mixed or torn export")
+            d = int(meta["arrays"]["lsh_w"][1])
+            template = {f"lsh_{n}": np.zeros((m_loc, d),
+                                             _DTYPES[f"lsh_{n}"])
+                        for n in ("w", "z", "r1", "r2")}
+            template["tables"] = np.zeros(piece_shape, np.float32)
+            arrays, _, _ = restore_checkpoint(pdir, template, step)
+            if not np.isfinite(arrays["tables"]).all():
+                raise ValueError(f"piece ({i},{j}) tables contain non-finite "
+                                 f"entries — poisoned piece rejected at load")
+            if j == 0:
+                for n in ("w", "z", "r1", "r2"):
+                    lsh_parts[n][i] = arrays[f"lsh_{n}"]
+            row.append(arrays["tables"])
+        table_rows.append(np.concatenate(row, axis=1))
+    tables = np.concatenate(table_rows, axis=0)
+
+    bucket = manifest.get("bucket_name")
+    if bucket not in BUCKET_FNS:
+        raise ValueError(f"artifact bucket fn {bucket!r} unknown to this "
+                         f"build; have {sorted(BUCKET_FNS)}")
+    lsh = LSHParams(w=jnp.asarray(np.concatenate(lsh_parts["w"])),
+                    z=jnp.asarray(np.concatenate(lsh_parts["z"])),
+                    r1=jnp.asarray(np.concatenate(lsh_parts["r1"])),
+                    r2=jnp.asarray(np.concatenate(lsh_parts["r2"])))
+    beta = np.zeros((0, k) if k else (0,), np.float32)
+    model = WLSHKRRModel(lsh=lsh, bucket_name=bucket,
+                         beta=jnp.asarray(beta), tables=jnp.asarray(tables),
+                         table_size=table_size,
+                         cg_iters=jnp.asarray(manifest.get("cg_iters", 0)),
+                         cg_resnorm=jnp.asarray(0.0),
+                         backend=manifest.get("backend", "reference"),
+                         precond=manifest.get("precond", "none"))
+    norm = None
+    if manifest.get("has_norm"):
+        nm = manifest["norm"]
+        norm = Normalization(
+            x_mean=np.asarray(nm["x_mean"], np.float32),
+            x_std=np.asarray(nm["x_std"], np.float32),
+            y_mean=float(nm["y_mean"]), y_std=float(nm["y_std"]))
+    op = model_operator(model, backend=backend)
+    return LoadedShardedArtifact(
+        artifact_id=artifact_id or manifest.get("artifact_id")
+        or os.path.basename(os.path.normpath(directory)),
+        model=model, operator=op, norm=norm, mesh_shape=want,
+        manifest=manifest)

@@ -54,6 +54,23 @@ def test_serving_latency_no_regression():
     assert not failures, "\n".join(failures)
 
 
+def test_sharded_serving_no_regression():
+    """Acceptance pin (PR 8): rerun the sharded 2x2 serving section against
+    BENCH_serving.json's ``sharded`` cell and fail when the warm batch-64
+    p50 regresses >2x or drifts beyond 3x the single-host warm p50 measured
+    in the same child (the ratio is machine-speed immune).  Spawns a
+    4-fake-CPU-device subprocess — minutes-scale, hence slow-marked."""
+    from benchmarks.check_regression import (DEFAULT_SERVING_BASELINE,
+                                             check_sharded_serving)
+    assert DEFAULT_SERVING_BASELINE.exists(), \
+        "committed BENCH_serving.json missing"
+    failures, fresh = check_sharded_serving()
+    if not fresh:
+        pytest.skip("no comparable sharded baseline (platform differs "
+                    "or section absent)")
+    assert not failures, "\n".join(failures)
+
+
 def test_blocked_split_pallas_speedup():
     """Acceptance pin (PR 5): the visit-list blocked split matvec must beat
     the cross-product split pallas matvec by >= 3x at n=1024 in interpret

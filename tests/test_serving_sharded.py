@@ -1,0 +1,428 @@
+"""Sharded serving tier: piece-grid artifacts + ShardedPredictor.
+
+Exactness pins (acceptance criteria):
+* export_artifact_sharded -> load_artifact_sharded reassembles the model
+  BITWISE (tables, lsh params, normalization) — slicing + concatenation is
+  lossless by construction, and the test keeps it that way;
+* ShardedPredictor on a model-unsharded mesh BITWISE-matches the
+  single-host Predictor (same readout program modulo the data-axis
+  collectives, which in broadcast mode add exact zeros), 1-RHS and
+  multi-RHS alike; on a model-sharded (2x2) mesh the instance-mean psum
+  reorders f32 additions, so the pin is <= 1e-5 (ISSUE acceptance bound);
+* failure modes REFUSE loudly: a mesh-mismatched manifest, a torn per-shard
+  save (invisible to ``latest_step``), and a mixed-generation piece grid
+  all raise at load — nothing mixed or partial ever assembles.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (WLSHKernelSpec, get_bucket_fn, make_operator,
+                        wlsh_krr_fit)
+from repro.core.distributed import query_shard_touch
+from repro.serve import (Normalization, Predictor, ShardedPredictor,
+                         export_artifact, export_artifact_sharded,
+                         load_artifact_sharded, parse_mesh_shape)
+from repro.serve.artifact import MANIFEST_NAME
+from repro.serve.cache import BucketKeyFn
+from repro.testing import killed_checkpoint_writer
+from repro.testing.faults import FaultInjected
+
+needs_multi = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >= 2 devices (CI serving-multidevice job sets "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+needs_4 = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >= 4 devices (CI serving-multidevice job sets "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+def _fit(key, n=256, d=4, m=16, k_rhs=0):
+    x = jax.random.uniform(key, (n, d)) * 2.0
+    y = jax.random.normal(jax.random.fold_in(key, 1),
+                          (n, k_rhs) if k_rhs else (n,))
+    spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"))
+    model = wlsh_krr_fit(jax.random.fold_in(key, 2), x, y, spec, m=m,
+                         lam=0.5, maxiter=100, backend="reference")
+    return model, np.asarray(x, np.float32)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    return _fit(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def fitted_k3():
+    return _fit(jax.random.PRNGKey(3), k_rhs=3)
+
+
+# ---------------------------------------------------------------------------
+# sharded artifact: round-trip + refusal modes
+# ---------------------------------------------------------------------------
+
+def test_sharded_roundtrip_bitwise(fitted, tmp_path):
+    model, _ = _fit(jax.random.PRNGKey(0))
+    norm = Normalization(x_mean=np.full(4, 0.5, np.float32),
+                         x_std=np.full(4, 2.0, np.float32),
+                         y_mean=0.25, y_std=1.5)
+    export_artifact_sharded(str(tmp_path), model, mesh_shape=(2, 2),
+                            norm=norm)
+    loaded = load_artifact_sharded(str(tmp_path), mesh_shape=(2, 2))
+    # slicing + concatenation is lossless: every array reassembles bitwise
+    np.testing.assert_array_equal(np.asarray(loaded.model.tables),
+                                  np.asarray(model.tables))
+    for name in ("w", "z", "r1", "r2"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(loaded.model.lsh, name)),
+            np.asarray(getattr(model.lsh, name)))
+    # beta never travels in a serving export
+    assert loaded.model.beta.shape[0] == 0
+    np.testing.assert_array_equal(loaded.norm.x_mean, norm.x_mean)
+    np.testing.assert_array_equal(loaded.norm.x_std, norm.x_std)
+    assert loaded.norm.y_mean == np.float32(norm.y_mean)
+    assert loaded.norm.y_std == np.float32(norm.y_std)
+    assert loaded.mesh_shape == (2, 2)
+
+
+def test_sharded_roundtrip_multirhs(fitted_k3, tmp_path):
+    model, _ = fitted_k3
+    export_artifact_sharded(str(tmp_path), model, mesh_shape=(2, 2))
+    loaded = load_artifact_sharded(str(tmp_path), mesh_shape=(2, 2))
+    assert loaded.model.tables.ndim == 3
+    np.testing.assert_array_equal(np.asarray(loaded.model.tables),
+                                  np.asarray(model.tables))
+    assert loaded.model.beta.shape == (0, 3)
+
+
+def test_export_refuses_indivisible_grid(fitted, tmp_path):
+    model, _ = fitted          # m=16, table_size power of two
+    with pytest.raises(ValueError, match="not divisible"):
+        export_artifact_sharded(str(tmp_path), model, mesh_shape=(3, 2))
+    with pytest.raises(ValueError, match="not divisible"):
+        export_artifact_sharded(str(tmp_path), model, mesh_shape=(2, 3))
+
+
+def test_load_refuses_mesh_mismatch(fitted, tmp_path):
+    model, _ = fitted
+    export_artifact_sharded(str(tmp_path), model, mesh_shape=(2, 2))
+    for target in ((1, 2), (2, 4), (4, 2)):
+        with pytest.raises(ValueError, match="re-export"):
+            load_artifact_sharded(str(tmp_path), mesh_shape=target)
+    # the recorded grid still loads
+    load_artifact_sharded(str(tmp_path), mesh_shape=(2, 2))
+
+
+def test_load_refuses_newer_format(fitted, tmp_path):
+    model, _ = fitted
+    export_artifact_sharded(str(tmp_path), model, mesh_shape=(1, 2))
+    path = os.path.join(str(tmp_path), MANIFEST_NAME)
+    with open(path) as fh:
+        manifest = json.load(fh)
+    manifest["format"] = manifest["format"] + 1
+    with open(path, "w") as fh:
+        json.dump(manifest, fh)
+    with pytest.raises(ValueError, match="newer"):
+        load_artifact_sharded(str(tmp_path), mesh_shape=(1, 2))
+
+
+def test_torn_first_export_loads_nothing(fitted, tmp_path):
+    """A writer killed mid-piece on a FIRST export leaves no manifest (it is
+    written last) and a piece .tmp dir invisible to ``latest_step`` — the
+    loader sees an empty directory, not a partial artifact."""
+    model, _ = fitted
+    with killed_checkpoint_writer(after_saves=2):
+        with pytest.raises(FaultInjected):
+            export_artifact_sharded(str(tmp_path), model, mesh_shape=(2, 2))
+    assert not os.path.exists(os.path.join(str(tmp_path), MANIFEST_NAME))
+    with pytest.raises(FileNotFoundError):
+        load_artifact_sharded(str(tmp_path), mesh_shape=(2, 2))
+
+
+def test_torn_reexport_never_assembles_mixed(fitted, tmp_path):
+    """A re-export killed mid-grid leaves the OLD manifest next to some NEW
+    pieces; the export-version cross-check refuses to assemble the mix
+    instead of silently serving half-swapped tables."""
+    model, _ = fitted
+    export_artifact_sharded(str(tmp_path), model, mesh_shape=(2, 2))
+    with killed_checkpoint_writer(after_saves=2):
+        with pytest.raises(FaultInjected):
+            export_artifact_sharded(str(tmp_path), model, mesh_shape=(2, 2))
+    with pytest.raises(ValueError, match="mixed or torn"):
+        load_artifact_sharded(str(tmp_path), mesh_shape=(2, 2))
+    # a clean re-export heals the grid: it rewrites EVERY piece at the next
+    # version past the last PUBLISHED manifest (a crashed export never
+    # publishes, so it never consumes a version number)
+    export_artifact_sharded(str(tmp_path), model, mesh_shape=(2, 2))
+    loaded = load_artifact_sharded(str(tmp_path), mesh_shape=(2, 2))
+    assert loaded.manifest["export_version"] == 2
+
+
+def test_load_refuses_poisoned_piece(fitted, tmp_path):
+    model, _ = fitted
+    export_artifact_sharded(str(tmp_path), model, mesh_shape=(1, 2))
+    # corrupt one piece's payload in place (same shape, NaN entries)
+    pdir = os.path.join(str(tmp_path), "shard_0_1")
+    step = [n for n in os.listdir(pdir) if n.startswith("step_")][0]
+    npz = os.path.join(pdir, step, "arrays.npz")
+    with np.load(npz) as f:
+        arrays = {k: f[k] for k in f.files}
+    # keys are checkpoint-store keystr paths, e.g. "['tables']"
+    tkey = next(k for k in arrays if "tables" in k)
+    arrays[tkey] = np.full_like(arrays[tkey], np.nan)
+    np.savez(npz, **arrays)
+    with pytest.raises(ValueError, match="non-finite"):
+        load_artifact_sharded(str(tmp_path), mesh_shape=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# per-shard cache keys: touch sets
+# ---------------------------------------------------------------------------
+
+def test_keys_with_touch_matches_operator_slots(fitted):
+    """The cache key's touch set must agree with the authoritative slot
+    layout (``query_shard_touch`` over the operator's own slots) — the two
+    are computed independently (numpy hash pass vs jit featurize)."""
+    model, x = fitted
+    f = get_bucket_fn(model.bucket_name)
+    keyfn = BucketKeyFn(model.lsh, f)
+    op = make_operator(model.lsh, f, int(model.table_size),
+                       backend="reference")
+    q = x[:32]
+    idx = op.build_index(op.featurize(q), blocked=False)
+    slots = np.asarray(idx.slot).T                      # (n, m)
+    for n_shards in (2, 4, 8):
+        touch = query_shard_touch(slots, int(model.table_size), n_shards)
+        keys = keyfn.keys_with_touch(q, table_size=int(model.table_size),
+                                     n_shards=n_shards)
+        for i, (_, touched) in enumerate(keys):
+            assert tuple(np.nonzero(touch[i])[0].tolist()) == touched
+
+
+def test_keys_with_touch_bad_rows_touch_everything(fitted):
+    model, x = fitted
+    keyfn = BucketKeyFn(model.lsh, get_bucket_fn(model.bucket_name))
+    q = x[:4].copy()
+    q[2, 0] = np.inf
+    keys = keyfn.keys_with_touch(q, table_size=int(model.table_size),
+                                 n_shards=4)
+    assert keys[2][0].startswith(b"!raw")
+    assert keys[2][1] == (0, 1, 2, 3)
+    for i in (0, 1, 3):
+        assert not keys[i][0].startswith(b"!raw")
+
+
+def test_query_shard_touch_validates():
+    with pytest.raises(ValueError, match="not divisible"):
+        query_shard_touch(np.zeros((2, 3), np.int64), 10, 4)
+
+
+# ---------------------------------------------------------------------------
+# ShardedPredictor: parity, placement, cache, health
+# ---------------------------------------------------------------------------
+
+def test_parse_mesh_shape():
+    assert parse_mesh_shape("2x2") == (2, 2)
+    assert parse_mesh_shape("8X32") == (8, 32)
+    for bad in ("2", "2x", "ax2", "0x2", "2x-1"):
+        with pytest.raises(ValueError):
+            parse_mesh_shape(bad)
+
+
+def test_sharded_predictor_1x1_bitwise_vs_single_host(fitted, tmp_path):
+    """On a model-unsharded mesh the broadcast route adds only exact zeros:
+    the sharded warm path is BITWISE the single-host warm path."""
+    model, x = fitted
+    export_artifact(str(tmp_path / "single"), model)
+    export_artifact_sharded(str(tmp_path / "grid"), model, mesh_shape=(1, 1))
+    single = Predictor(cache_entries=0)
+    single.load(str(tmp_path / "single"))
+    sharded = ShardedPredictor(mesh_shape=(1, 1), cache_entries=0)
+    sharded.load(str(tmp_path / "grid"))
+    q = x[:33]
+    np.testing.assert_array_equal(sharded.predict(q, use_cache=False),
+                                  single.predict(q, use_cache=False))
+    # single-row path too
+    np.testing.assert_array_equal(sharded.predict(q[0], use_cache=False),
+                                  single.predict(q[0], use_cache=False))
+
+
+def test_sharded_predictor_1x1_multirhs_bitwise(fitted_k3, tmp_path):
+    model, x = fitted_k3
+    export_artifact(str(tmp_path / "single"), model)
+    export_artifact_sharded(str(tmp_path / "grid"), model, mesh_shape=(1, 1))
+    single = Predictor(cache_entries=0)
+    single.load(str(tmp_path / "single"))
+    sharded = ShardedPredictor(mesh_shape=(1, 1), cache_entries=0)
+    sharded.load(str(tmp_path / "grid"))
+    q = x[:17]
+    out = sharded.predict(q, use_cache=False)
+    assert out.shape == (17, 3)
+    np.testing.assert_array_equal(out, single.predict(q, use_cache=False))
+
+
+def test_sharded_predictor_1x1_norm_one_ulp(fitted, tmp_path):
+    """Host-side normalization (sharded) vs the in-jit one (single): the
+    f32 ops are the same, but XLA fuses the ``out*y_std + y_mean`` denorm
+    into an FMA while numpy rounds the product first — agreement is
+    within 1 ulp, not bitwise (the un-normalized paths ARE bitwise, see
+    above)."""
+    model, x = fitted
+    norm = Normalization(x_mean=x.mean(0), x_std=x.std(0) + 0.5,
+                         y_mean=0.3, y_std=1.7)
+    export_artifact(str(tmp_path / "single"), model, norm=norm)
+    export_artifact_sharded(str(tmp_path / "grid"), model, mesh_shape=(1, 1),
+                            norm=norm)
+    single = Predictor(cache_entries=0)
+    single.load(str(tmp_path / "single"))
+    sharded = ShardedPredictor(mesh_shape=(1, 1), cache_entries=0)
+    sharded.load(str(tmp_path / "grid"))
+    q = x[:16]
+    np.testing.assert_allclose(sharded.predict(q, use_cache=False),
+                               single.predict(q, use_cache=False),
+                               rtol=3e-7, atol=1e-7)
+
+
+@needs_4
+def test_sharded_predictor_2x2_parity(fitted, fitted_k3, tmp_path):
+    """Model-sharded mesh: the instance-mean psum reorders f32 adds, so the
+    pin is the ISSUE acceptance bound <= 1e-5 (observed ~3e-8)."""
+    for tag, (model, x) in (("k1", fitted), ("k3", fitted_k3)):
+        export_artifact(str(tmp_path / f"single_{tag}"), model)
+        export_artifact_sharded(str(tmp_path / f"grid_{tag}"), model,
+                                mesh_shape=(2, 2))
+        single = Predictor(cache_entries=0)
+        single.load(str(tmp_path / f"single_{tag}"))
+        sharded = ShardedPredictor(mesh_shape=(2, 2), cache_entries=0)
+        sharded.load(str(tmp_path / f"grid_{tag}"))
+        q = x[:64]
+        np.testing.assert_allclose(sharded.predict(q, use_cache=False),
+                                   single.predict(q, use_cache=False),
+                                   atol=1e-5, rtol=0)
+
+
+@needs_4
+def test_sharded_predictor_placement_co_serving(fitted, tmp_path):
+    """A (1, 2)-exported model placed on rows [1, 2) of a 2x2 mesh serves
+    identically to the same export on its own 1x2 mesh."""
+    model, x = fitted
+    export_artifact_sharded(str(tmp_path / "grid"), model, mesh_shape=(1, 2))
+    whole = ShardedPredictor(mesh_shape=(1, 2), cache_entries=0)
+    whole.load(str(tmp_path / "grid"))
+    placed = ShardedPredictor(mesh_shape=(2, 2), cache_entries=0)
+    placed.load(str(tmp_path / "grid"), placement=(1, 2))
+    q = x[:32]
+    np.testing.assert_array_equal(placed.predict(q, use_cache=False),
+                                  whole.predict(q, use_cache=False))
+    assert placed.health()["shards"]["grid"]["placement"] == [1, 2]
+
+
+def test_sharded_predictor_placement_validation(fitted, tmp_path):
+    model, _ = fitted
+    export_artifact_sharded(str(tmp_path), model, mesh_shape=(1, 1))
+    pred = ShardedPredictor(mesh_shape=(1, 1))
+    loaded = load_artifact_sharded(str(tmp_path), mesh_shape=(1, 1))
+    with pytest.raises(ValueError, match="outside model axis"):
+        pred.add_model(loaded, placement=(0, 2))
+    with pytest.raises(ValueError, match="power of two"):
+        ShardedPredictor(mesh_shape=(1, 3))
+    with pytest.raises(ValueError, match="max_batch"):
+        ShardedPredictor(mesh_shape=(1, 1), max_batch=48)
+
+
+def test_sharded_cache_replay_and_bump(fitted, tmp_path):
+    """Cache hits replay the cold path bitwise; bumping a shard's piece
+    version invalidates exactly the entries touching it (on a 1-data-shard
+    mesh every entry touches shard 0, so a bump empties the hit path)."""
+    model, x = fitted
+    export_artifact_sharded(str(tmp_path), model, mesh_shape=(1, 1))
+    pred = ShardedPredictor(mesh_shape=(1, 1), cache_entries=1024)
+    pred.load(str(tmp_path))
+    q = x[:8]
+    cold = pred.predict(q)
+    np.testing.assert_array_equal(pred.predict(q), cold)   # hit, bitwise
+    stats = pred.cache_stats()
+    assert stats["hits"] >= len(q)
+    before = stats["misses"]
+    pred.bump_shard_version(0)
+    np.testing.assert_array_equal(pred.predict(q), cold)   # recompute, equal
+    assert pred.cache_stats()["misses"] > before
+    with pytest.raises(ValueError, match="outside"):
+        pred.bump_shard_version(1)
+    assert pred.health()["shards"][pred.artifact_ids[0]][
+        "piece_versions"] == [1]
+
+
+@needs_multi
+def test_sharded_overflow_counters(fitted, tmp_path):
+    """dedup=True with a starved capacity must ACCOUNT dropped buckets in
+    health(), never silently return short — the broadcast default cannot
+    overflow at all."""
+    model, x = fitted
+    export_artifact_sharded(str(tmp_path), model, mesh_shape=(1, 2))
+    starved = ShardedPredictor(mesh_shape=(1, 2), dedup=True,
+                               cap_factor=0.001)
+    starved.load(str(tmp_path))
+    starved.predict(x[:64], use_cache=False)
+    overflow = starved.health()["shards"][
+        starved.artifact_ids[0]]["overflow"]
+    assert sum(overflow) > 0
+    # broadcast mode on the same export: exact, and overflow stays zero
+    bcast = ShardedPredictor(mesh_shape=(1, 2))
+    bcast.load(str(tmp_path))
+    bcast.predict(x[:64], use_cache=False)
+    aid = bcast.artifact_ids[0]
+    assert bcast.health()["shards"][aid]["overflow"] == [0, 0]
+
+
+@needs_multi
+def test_sharded_predictor_1x2_parity_and_chunking(fitted, tmp_path):
+    """Data-only sharding: <= 1e-5 vs the single-host path (XLA reassociates
+    the owner-sum x instance-sum reduction once the owner axis is real, so
+    a few ulps, not bitwise), including batches above max_batch (chunked
+    with a ragged tail)."""
+    model, x = fitted
+    export_artifact(str(tmp_path / "single"), model)
+    export_artifact_sharded(str(tmp_path / "grid"), model, mesh_shape=(1, 2))
+    single = Predictor(cache_entries=0)
+    single.load(str(tmp_path / "single"))
+    sharded = ShardedPredictor(mesh_shape=(1, 2), cache_entries=0,
+                               max_batch=16)
+    sharded.load(str(tmp_path / "grid"))
+    q = x[:50]                       # 16+16+16+2 chunks, ragged tail
+    np.testing.assert_allclose(sharded.predict(q, use_cache=False),
+                               single.predict(q, use_cache=False),
+                               atol=1e-5, rtol=0)
+
+
+def test_sharded_predictor_rejects_nonfinite(fitted, tmp_path):
+    from repro.errors import InvalidRequest
+
+    model, x = fitted
+    export_artifact_sharded(str(tmp_path), model, mesh_shape=(1, 1))
+    pred = ShardedPredictor(mesh_shape=(1, 1))
+    pred.load(str(tmp_path))
+    q = x[:4].copy()
+    q[1, 2] = np.nan
+    with pytest.raises(InvalidRequest):
+        pred.predict(q)
+    assert pred.health()["errors"] == 1
+
+
+def test_sharded_predictor_bucket_compile_bound(fitted, tmp_path):
+    """Ragged sizes within one padding bucket never recompile (same pin as
+    the single-host predictor, via the jit cache size)."""
+    model, x = fitted
+    export_artifact_sharded(str(tmp_path), model, mesh_shape=(1, 1))
+    pred = ShardedPredictor(mesh_shape=(1, 1), max_batch=64)
+    pred.load(str(tmp_path))
+    pred.warmup(sizes=(1, 16))
+    n0 = pred.compile_count()
+    for b in (9, 12, 16, 3, 1):      # buckets 16, 16, 16, 4(new), 1
+        pred.predict(x[:b], use_cache=False)
+    assert pred.compile_count() == n0 + 1    # only bucket 4 was new
