@@ -22,12 +22,12 @@ import os
 import pathlib
 import subprocess
 import sys
-import time
 
 import numpy as np
 
 import jax
 
+from repro import obs
 from repro.core import (GammaPDF, get_bucket_fn, make_operator,
                         make_preconditioner, pcg_solve, sample_lsh_params,
                         table_diag)
@@ -88,9 +88,9 @@ def _pcg_section(key, x, m: int, table_size: int, row: dict) -> None:
 
     def timed_solve(solve):
         solve()                        # warmup: populate compile caches
-        t0 = time.perf_counter()
-        res = jax.block_until_ready(solve())
-        return int(res.iters), (time.perf_counter() - t0) * 1e6
+        with obs.span("bench.pcg_solve"):
+            res = jax.block_until_ready(solve())
+        return int(res.iters), obs.span_samples_us("bench.pcg_solve")[-1]
 
     row["cg_iters"], row["cg_us"] = timed_solve(plain)
     row["pcg_iters"], row["pcg_us"] = timed_solve(nystrom)

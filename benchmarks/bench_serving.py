@@ -37,12 +37,12 @@ import pathlib
 import subprocess
 import sys
 import tempfile
-import time
 
 import numpy as np
 
 import jax
 
+from repro import obs
 from repro.serve import Predictor, bucket_sizes
 from repro.serve.batcher import percentile
 
@@ -63,13 +63,15 @@ DUP_FRAC = 0.5
 SHARDED_MESH = (2, 2)                        # (model_shards, data_shards)
 
 
-def _lat_us(fn, iters: int):
-    """Sorted per-call latencies in us (perf_counter around each call)."""
-    lat = []
+def _span_lat_us(fn, iters: int, span: str = "serve.predict"):
+    """Sorted per-call latencies in us, read back from the predictor's own
+    ``serve.predict`` spans — the benchmark reports the SAME samples the
+    live /metrics histogram records, not a second ad-hoc clock."""
+    obs.clear_span_samples(span)
     for _ in range(iters):
-        t0 = time.perf_counter()
         fn()
-        lat.append((time.perf_counter() - t0) * 1e6)
+    lat = obs.span_samples_us(span)
+    assert len(lat) == iters, (len(lat), iters)
     return sorted(lat)
 
 
@@ -97,9 +99,8 @@ def run(*, iters: int = 300, batch_requests: int = BATCH_REQUESTS,
         # cold: fresh predictor, first call pays tracing + compile
         cold_pred = Predictor(cache_entries=0)
         cold_pred.load(art_dir)
-        t0 = time.perf_counter()
-        cold_pred.predict(q)
-        out["cold_first_call_us"] = (time.perf_counter() - t0) * 1e6
+        out["cold_first_call_us"] = _span_lat_us(
+            lambda: cold_pred.predict(q), 1)[0]
 
         # warm: steady-state single-query jit path (bucket compiled, no cache)
         pred = Predictor(cache_entries=65536)
@@ -110,8 +111,9 @@ def run(*, iters: int = 300, batch_requests: int = BATCH_REQUESTS,
                     "cached_p50_us", "cached_p99_us"):
             out[key] = float("inf")
         for _ in range(max(repeats, 1)):
-            warm = _lat_us(lambda: pred.predict(q, use_cache=False), iters)
-            cached = _lat_us(lambda: pred.predict(q), iters)
+            warm = _span_lat_us(lambda: pred.predict(q, use_cache=False),
+                                iters)
+            cached = _span_lat_us(lambda: pred.predict(q), iters)
             out["warm_p50_us"] = min(out["warm_p50_us"],
                                      percentile(warm, 50))
             out["warm_p99_us"] = min(out["warm_p99_us"],
@@ -152,9 +154,10 @@ def run(*, iters: int = 300, batch_requests: int = BATCH_REQUESTS,
 # ---------------------------------------------------------------------------
 
 _SHARDED_SCRIPT = r"""
-import json, sys, tempfile, time
+import json, sys, tempfile
 import numpy as np
 import jax
+from repro import obs
 from repro.launch.krr_serve import _fit_and_export
 from repro.serve import Predictor, ShardedPredictor
 from repro.serve.batcher import percentile
@@ -166,12 +169,12 @@ assert len(jax.devices()) >= mm * nd, jax.devices()
 
 
 def lat_us(fn, iters):
-    out = []
+    # read the predictors' own serve.predict spans back instead of timing
+    # around the call — same samples the /metrics histogram sees
+    obs.clear_span_samples("serve.predict")
     for _ in range(iters):
-        t0 = time.perf_counter()
         fn()
-        out.append((time.perf_counter() - t0) * 1e6)
-    return sorted(out)
+    return sorted(obs.span_samples_us("serve.predict"))
 
 
 with tempfile.TemporaryDirectory() as tmp:

@@ -1,28 +1,41 @@
-"""Shared benchmark utilities: wall-clock timing + CSV emission."""
+"""Shared benchmark utilities: wall-clock timing + CSV emission.
+
+Timing goes through ``repro.obs`` spans so every benchmark sample also lands
+in the span buffers and the ``bench_us`` histogram — the benchmarks and the
+live /metrics endpoint report from the SAME clock and recording path, and a
+profiler trace of a bench run shows each sample as a named annotation.
+"""
 from __future__ import annotations
 
-import time
 from typing import Callable
 
 import jax
 
+from repro import obs
+
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
-            stat: str = "median") -> float:
+            stat: str = "median", span: str = "bench.time_fn") -> float:
     """Wall time (seconds) of fn(*args) after warmup (jit-friendly).
 
     ``stat='median'`` is the honest trajectory statistic; ``stat='min'`` is
     the noise-robust one for regression gating — on shared CPU containers
     the timing distribution is bimodal (noisy-neighbor bursts 2-3x the quiet
     mode), and only the minimum is reproducible run to run.
+
+    Each timed iteration is recorded as an obs span named ``span``
+    (block_until_ready INSIDE the span, so the sample covers device work);
+    callers can pull the full sample set back via
+    ``obs.span_samples_us(span)`` instead of re-timing.
     """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    times = []
+    hist = obs.histogram("bench_us", "benchmark sample wall time",
+                         labels=("name",)).labels(span)
     for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
+        with obs.span(span, to_histogram=hist):
+            jax.block_until_ready(fn(*args))
+    times = [s / 1e6 for s in obs.span_samples_us(span)[-iters:]]
     if stat == "min":
         return min(times)
     if stat == "median":

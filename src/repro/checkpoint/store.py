@@ -24,6 +24,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from .. import obs
+
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
 # Test-injection point (repro.testing.faults.killed_checkpoint_writer): when
@@ -59,21 +61,31 @@ def _unflatten(template: Any, arrays: dict[str, np.ndarray]) -> Any:
 def save_checkpoint(directory: str, step: int, state: Any,
                     meta: dict | None = None) -> str:
     """Blocking atomic save.  Returns the final checkpoint path."""
-    os.makedirs(directory, exist_ok=True)
-    final = os.path.join(directory, f"step_{step}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
-    np.savez(os.path.join(tmp, "arrays.npz"), **_flatten(state))
-    if _crash_mid_save is not None:
-        _crash_mid_save(tmp)
-    with open(os.path.join(tmp, "meta.json"), "w") as fh:
-        json.dump({"step": step, **(meta or {})}, fh)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
-    return final
+    with obs.span("io.checkpoint_save", {"step": step},
+                  to_histogram=obs.histogram(
+                      "io_checkpoint_save_us",
+                      "blocking checkpoint save wall time")):
+        os.makedirs(directory, exist_ok=True)
+        final = os.path.join(directory, f"step_{step}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(state)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        if _crash_mid_save is not None:
+            _crash_mid_save(tmp)
+        with open(os.path.join(tmp, "meta.json"), "w") as fh:
+            json.dump({"step": step, **(meta or {})}, fh)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        obs.counter("io_checkpoint_saves_total",
+                    "checkpoints written to disk").inc()
+        obs.counter("io_checkpoint_bytes_total",
+                    "uncompressed array bytes written to checkpoints"
+                    ).inc(sum(v.nbytes for v in flat.values()))
+        return final
 
 
 def atomic_write_json(path: str, obj: dict) -> None:
@@ -108,12 +120,18 @@ def restore_checkpoint(directory: str, template: Any, step: int | None = None):
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no complete checkpoint under {directory}")
-    path = os.path.join(directory, f"step_{step}")
-    with np.load(os.path.join(path, "arrays.npz")) as npz:
-        arrays = {k: npz[k] for k in npz.files}
-    with open(os.path.join(path, "meta.json")) as fh:
-        meta = json.load(fh)
-    return _unflatten(template, arrays), step, meta
+    with obs.span("io.checkpoint_restore", {"step": step},
+                  to_histogram=obs.histogram(
+                      "io_checkpoint_restore_us",
+                      "checkpoint restore wall time")):
+        path = os.path.join(directory, f"step_{step}")
+        with np.load(os.path.join(path, "arrays.npz")) as npz:
+            arrays = {k: npz[k] for k in npz.files}
+        with open(os.path.join(path, "meta.json")) as fh:
+            meta = json.load(fh)
+        obs.counter("io_checkpoint_restores_total",
+                    "checkpoints restored from disk").inc()
+        return _unflatten(template, arrays), step, meta
 
 
 def restore_resharded(directory: str, template: Any, shardings: Any,

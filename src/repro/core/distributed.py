@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .. import obs
 from ..backend import default_interpret, resolve_backend
 from ..compat import shard_map
 from ..errors import SolveDivergedError, WireOverflowError
@@ -449,6 +450,15 @@ def _log_routing_build(owner_max, *, cap: int, n_shards: int) -> None:
              "hashjoin routing: max %d cells/owner vs capacity %d "
              "(%d shard(s))%s", int(owner_max), cap, n_shards,
              " — OVERFLOW, distinct buckets will be dropped" if over else "")
+    # runs via jax.debug.callback with CONCRETE values at execution time —
+    # the capacity-headroom signal on the live endpoint, not just the log
+    obs.counter("hashjoin_routing_builds_total",
+                "hash-join routing tables built").inc()
+    obs.gauge("hashjoin_route_cap",
+              "per-owner cell capacity of the last routing build").set(cap)
+    obs.gauge("hashjoin_route_owner_max",
+              "max observed cells/owner in the last routing build"
+              ).set(int(owner_max))
 
 
 def _make_route_plan(pt_cell: Array, lay, nb: int) -> _RoutePlan:
@@ -709,6 +719,18 @@ def check_step_stats(stats: StepStats, *, overflow: str = "warn") -> None:
                          f"got {overflow!r}")
     dropped = int(np.asarray(stats.overflow_dropped))
     nonfinite = int(np.asarray(stats.wire_nonfinite))
+    # StepStats re-expressed on the registry: the NamedTuple stays the
+    # step's API, the counters make the faults scrapeable across steps
+    obs.counter("hashjoin_steps_checked_total",
+                "hash-join steps run through the fault-policy gate").inc()
+    if dropped:
+        obs.counter("hashjoin_overflow_dropped_total",
+                    "distinct buckets dropped past routing capacity"
+                    ).inc(dropped)
+    if nonfinite:
+        obs.counter("hashjoin_wire_nonfinite_total",
+                    "non-finite wire cells zeroed in table exchanges"
+                    ).inc(nonfinite)
     if dropped == 0 and nonfinite == 0:
         return
     msg = (f"hashjoin step dropped {dropped} distinct bucket(s) past the "
@@ -739,7 +761,12 @@ def run_krr_step_resilient(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn,
     step = jax.jit(make_krr_step_hashjoin(mesh, cfg, f,
                                           cap_factor=cap_factor,
                                           payload_dtype=payload_dtype))
-    beta, resnorm, table, stats = step(x, y, lsh)
+    with obs.span("dist.krr_step", {"wire": jnp.dtype(payload_dtype).name},
+                  to_histogram=obs.histogram(
+                      "dist_krr_step_us",
+                      "resilient hash-join step wall time")):
+        beta, resnorm, table, stats = step(x, y, lsh)
+        jax.block_until_ready(resnorm)
     check_step_stats(stats, overflow=cfg.overflow)
     retried = False
     if not bool(jnp.all(jnp.isfinite(resnorm))):
@@ -747,13 +774,20 @@ def run_krr_step_resilient(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn,
             warnings.warn("non-finite CG residual on the bf16 wire; "
                           "retrying once with an f32 wire",
                           RuntimeWarning, stacklevel=2)
+            obs.counter("dist_wire_retry_total",
+                        "bf16 wire solves retried on an f32 wire").inc()
             retried = True
             step32 = jax.jit(make_krr_step_hashjoin(
                 mesh, cfg, f, cap_factor=cap_factor,
                 payload_dtype=jnp.float32))
-            beta, resnorm, table, stats = step32(x, y, lsh)
+            with obs.span("dist.krr_step", {"wire": "float32"}):
+                beta, resnorm, table, stats = step32(x, y, lsh)
+                jax.block_until_ready(resnorm)
             check_step_stats(stats, overflow=cfg.overflow)
         if not bool(jnp.all(jnp.isfinite(resnorm))):
+            obs.counter("dist_solve_diverged_total",
+                        "distributed solves abandoned after all retries"
+                        ).inc()
             raise SolveDivergedError(
                 "distributed CG residual non-finite"
                 + (" (f32 wire retry included)" if retried else ""),
@@ -834,6 +868,16 @@ def make_krr_step_hashjoin(mesh: Mesh, cfg: KRRStepConfig, f: BucketFn, *,
         m_loc = idx.slot.shape[0]
         rt = _build_routing(idx.slot, lay, n_shards, cfg.table_size,
                             cfg.data_axes, cap_factor, kernels=use_kernels)
+        # routing geometry is jit-static (rt.cap is a Python int), so the
+        # per-iteration all_to_all payload size is known at TRACE time —
+        # recorded once per compilation, zero cost inside the loop
+        k_cols = 1 if y_local.ndim == 1 else y_local.shape[1]
+        obs.gauge(
+            "hashjoin_a2a_payload_bytes",
+            "per-shard all_to_all payload bytes per CG iteration "
+            "(route + serve exchanges)").set(
+            2 * n_shards * rt.cap * k_cols
+            * jnp.dtype(payload_dtype).itemsize)
         interp = default_interpret()
         mv = lambda v: _hashjoin_matvec(rt, lay, idx.coeff, cfg.m,
                                         cfg.data_axes, cfg.model_axis, v,

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..errors import NonFiniteError, SolveDivergedError
 from .bucket_fns import get_bucket_fn
 from .kernels import WLSHKernelSpec
@@ -50,6 +51,11 @@ class PCGResult(NamedTuple):
     iters: Array      # scalar int32 — block iterations run (max over columns)
     col_iters: Array  # (k,) int32 — iteration at which each column converged
     resnorm: Array    # (k,) f32 — final per-column ||r||
+    # (maxiter+1, k) per-iteration ||r_j||: row 0 is the initial residual,
+    # row i the residual after block iteration i.  Rows past the final
+    # iteration are NaN (static shape under jit); a deflated column's rows
+    # freeze at its converged value, a deactivated column's go NaN.
+    resnorm_history: Array | None = None
 
 
 class SolveState(NamedTuple):
@@ -151,6 +157,11 @@ def pcg_solve(matvec: MatVec, b: Array, lam: float, *,
     bnorm = jnp.sqrt(jnp.sum(b2 * b2, axis=0))
     thresh = jnp.maximum(tol * bnorm, jnp.asarray(atol, b2.dtype)) ** 2
 
+    # per-iteration residual telemetry: NaN-filled (maxiter+1, k), rows
+    # written as the solve progresses — carried OUTSIDE SolveState so
+    # persisted checkpoints keep their npz schema (a resumed solve records
+    # from its resume row; earlier rows stay NaN)
+    hist = jnp.full((maxiter + 1, b2.shape[1]), jnp.nan, b2.dtype)
     if state is None:
         if x0 is None:
             x = jnp.zeros_like(b2)
@@ -166,14 +177,15 @@ def pcg_solve(matvec: MatVec, b: Array, lam: float, *,
         state = SolveState(x=x, r=r, p=p, rs=rs, rho=rho, active=active,
                            it=jnp.asarray(0, jnp.int32),
                            col_iters=col_iters)
+    hist = hist.at[state.it].set(jnp.sqrt(state.rs))
     chunk = int(checkpoint_every) if checkpoint_every > 0 else maxiter
 
     def cond(carry):
-        steps, st = carry
+        steps, st, _ = carry
         return jnp.any(st.active) & (st.it < maxiter_a) & (steps < chunk)
 
     def body(carry):
-        steps, st = carry
+        steps, st, hist = carry
         x, r, p, rs, rho, active, it, col_iters = st
         ap = amv(p)
         denom = jnp.sum(p * ap, axis=0)
@@ -186,6 +198,7 @@ def pcg_solve(matvec: MatVec, b: Array, lam: float, *,
         r = r - jnp.where(ok[None, :], alpha[None, :] * ap, 0.0)
         rs = jnp.sum(r * r, axis=0)
         rs = jnp.where(active & ~ok, jnp.nan, rs)
+        hist = hist.at[it + 1].set(jnp.sqrt(rs))
         # a column whose residual goes non-finite (preconditioner breakdown
         # at extreme conditioning) is deactivated instead of burning the
         # remaining iterations on NaNs; its resnorm reports the failure
@@ -199,19 +212,20 @@ def pcg_solve(matvec: MatVec, b: Array, lam: float, *,
         # vanish and their (x, r) are frozen from here on
         p = jnp.where(active[None, :], z + beta[None, :] * p, 0.0)
         return steps + 1, SolveState(x, r, p, rs, rho_new, active, it + 1,
-                                     col_iters)
+                                     col_iters), hist
 
-    def run_chunk(st: SolveState) -> SolveState:
-        return jax.lax.while_loop(cond, body,
-                                  (jnp.asarray(0, jnp.int32), st))[1]
+    def run_chunk(st: SolveState, hist: Array):
+        _, st, hist = jax.lax.while_loop(
+            cond, body, (jnp.asarray(0, jnp.int32), st, hist))
+        return st, hist
 
     if chunk >= maxiter:                         # historical one-shot path
-        state = run_chunk(state)
+        state, hist = run_chunk(state, hist)
         if on_checkpoint is not None:
             on_checkpoint(state)
     else:
         while True:                              # eager chunked/checkpointed
-            state = run_chunk(state)
+            state, hist = run_chunk(state, hist)
             if on_checkpoint is not None:
                 on_checkpoint(state)             # may raise (preemption)
             if int(state.it) >= maxiter or not bool(jnp.any(state.active)):
@@ -219,7 +233,8 @@ def pcg_solve(matvec: MatVec, b: Array, lam: float, *,
     # columns still active at maxiter report maxiter (their init value)
     resnorm = jnp.sqrt(state.rs)
     return PCGResult(x=state.x[:, 0] if vec else state.x, iters=state.it,
-                     col_iters=state.col_iters, resnorm=resnorm)
+                     col_iters=state.col_iters, resnorm=resnorm,
+                     resnorm_history=hist)
 
 
 def cg_solve(matvec: MatVec, b: Array, lam: float, *, tol: float = 1e-6,
@@ -267,6 +282,13 @@ class WLSHKRRModel(NamedTuple):
     cg_col_iters: Array | None = None  # (k,) per-column iteration counts
     solve_fallback: str = ""     # nonempty when a one-shot fallback ran
                                  # (e.g. "precond:jacobi->identity")
+    telemetry: dict | None = None
+    # Solver telemetry captured at fit time (eager fits only; None under
+    # jit and for models restored from pre-telemetry artifacts):
+    #   resnorm_history — (iters+1, k) np.float32 per-iteration per-column
+    #                     ||r|| (row 0 = initial residual)
+    #   col_iters, iters, precond, fallback — solve summary
+    # Retrievable WITHOUT refitting: it rides on the model tuple.
 
 
 def model_operator(model: WLSHKRRModel, *,
@@ -340,17 +362,24 @@ def wlsh_krr_fit(key: jax.Array, x: Array, y: Array, spec: WLSHKernelSpec, *,
     lsh = sample_lsh_params(key, m, d, spec.pdf, spec.lengthscale)
     op = make_operator(lsh, get_bucket_fn(spec.bucket.name), table_size,
                        backend=backend, fused=fused)
-    feats = op.featurize(x)
+    with obs.span("fit.featurize", {"n": n, "m": m},
+                  to_histogram=obs.histogram(
+                      "fit_featurize_us", "featurize wall time per fit")):
+        feats = op.featurize(x)
 
     # Prediction tables are always CountSketch (exact-mode key lookup for
     # out-of-sample points would need a hash join; the signed table is unbiased
     # and O(1) per query — see DESIGN.md §3).  In table mode the same index
     # drives CG, so it is built exactly once (the CG closure closes over the
     # slot-blocked layout when fused — the sort runs once, not per iteration).
-    tidx = op.build_index(feats, mode="table",
-                          blocked=fused and mode == "table")
+    with obs.span("fit.build_index", {"mode": mode},
+                  to_histogram=obs.histogram(
+                      "fit_build_index_us", "index build wall time per fit")):
+        tidx = op.build_index(feats, mode="table",
+                              blocked=fused and mode == "table")
+        if mode == "exact":
+            eidx = op.build_index(feats, mode="exact")
     if mode == "exact":
-        eidx = op.build_index(feats, mode="exact")
         mv = lambda v: op.matvec(eidx, v)
         diag = jnp.mean(eidx.weight * eidx.weight, axis=0)
     elif mode == "table":
@@ -378,9 +407,12 @@ def wlsh_krr_fit(key: jax.Array, x: Array, y: Array, spec: WLSHKernelSpec, *,
             if on_solve_checkpoint is not None:
                 on_solve_checkpoint(st)
 
-    res = pcg_solve(mv, y, lam, precond=pre, tol=tol, atol=atol,
-                    maxiter=maxiter, state=state, checkpoint_every=every,
-                    on_checkpoint=on_ck)
+    with obs.span("fit.pcg_solve", {"precond": precond, "maxiter": maxiter},
+                  to_histogram=obs.histogram(
+                      "fit_pcg_solve_us", "PCG solve wall time per fit")):
+        res = pcg_solve(mv, y, lam, precond=pre, tol=tol, atol=atol,
+                        maxiter=maxiter, state=state, checkpoint_every=every,
+                        on_checkpoint=on_ck)
     fallback = ""
     eager = not isinstance(res.resnorm, jax.core.Tracer)
     if eager and precond not in ("none", None) \
@@ -390,6 +422,9 @@ def wlsh_krr_fit(key: jax.Array, x: Array, y: Array, spec: WLSHKernelSpec, *,
         warnings.warn(f"PCG with precond={precond!r} went non-finite; "
                       f"restarting once with the identity preconditioner",
                       RuntimeWarning, stacklevel=2)
+        obs.counter("fit_precond_fallback_total",
+                    "preconditioned solves restarted with identity",
+                    labels=("precond",)).labels(precond).inc()
         fallback = f"precond:{precond}->identity"
         res = pcg_solve(mv, y, lam, precond=None, tol=tol, atol=atol,
                         maxiter=maxiter)
@@ -400,6 +435,30 @@ def wlsh_krr_fit(key: jax.Array, x: Array, y: Array, spec: WLSHKernelSpec, *,
             fallbacks=(fallback,) if fallback else ())
     tables = op.loads(tidx, res.x)
     squeeze = y.ndim == 1
+    telemetry = None
+    if eager:
+        # host-side solve summary + per-iteration residuals, attached to
+        # the model so it is retrievable without refitting
+        iters = int(res.iters)
+        dead = int(jnp.sum(~jnp.isfinite(res.resnorm)))
+        obs.counter("fit_solves_total", "wlsh_krr_fit solves completed").inc()
+        obs.gauge("fit_pcg_iters",
+                  "block iterations of the most recent fit solve").set(iters)
+        obs.histogram("fit_pcg_iters_hist",
+                      "distribution of PCG iteration counts per solve",
+                      buckets=obs.COUNT_BUCKETS).observe(iters)
+        if dead:
+            obs.counter("fit_col_deactivated_total",
+                        "RHS columns deactivated by non-finite sentinels"
+                        ).inc(dead)
+        telemetry = {
+            "resnorm_history": np.asarray(
+                res.resnorm_history[: iters + 1], np.float32),
+            "col_iters": np.asarray(res.col_iters, np.int32),
+            "iters": iters,
+            "precond": precond,
+            "fallback": fallback,
+        }
     return WLSHKRRModel(lsh=lsh, bucket_name=spec.bucket.name, beta=res.x,
                         tables=tables, table_size=table_size,
                         cg_iters=res.col_iters[0] if squeeze else res.iters,
@@ -407,7 +466,8 @@ def wlsh_krr_fit(key: jax.Array, x: Array, y: Array, spec: WLSHKernelSpec, *,
                         else res.resnorm,
                         backend=op.backend, precond=precond,
                         cg_col_iters=res.col_iters,
-                        solve_fallback=fallback)
+                        solve_fallback=fallback,
+                        telemetry=telemetry)
 
 
 def wlsh_krr_predict(model: WLSHKRRModel, x_test: Array, *,

@@ -8,6 +8,11 @@ stream through the micro-batcher, report latency/QPS/cache stats.
     # self-contained smoke (fit -> export -> serve -> verify; used by CI):
     PYTHONPATH=src python -m repro.launch.krr_serve --selftest
 
+    # live observability: Prometheus /metrics + JSON /healthz on a local
+    # port (DESIGN.md §11); --metrics-dump appends a JSONL snapshot on exit:
+    PYTHONPATH=src python -m repro.launch.krr_serve --selftest \
+        --metrics-port 9100 --metrics-dump /tmp/krr_metrics.jsonl
+
     # SHARDED serving on a (model x data) device mesh (table pieces sharded
     # P(model, data), hash-join routing — DESIGN.md §10); 4 fake CPU devices:
     XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
@@ -29,8 +34,49 @@ import time
 
 import numpy as np
 
+from .. import obs
 from ..serve import (DeadlineExceeded, MicroBatcher, Overloaded, Predictor,
                      ShardedPredictor, bucket_sizes, parse_mesh_shape)
+
+# series the live endpoint must expose once the selftest traffic has run —
+# the CI serving job scrapes /metrics and fails if any are absent
+_REQUIRED_SERIES = (
+    "serve_requests_total", "serve_predict_us", "serve_warm_compute_us",
+    "serve_padding_bucket_total", "serve_cache_hits_total",
+    "serve_cache_misses_total", "serve_cache_entries",
+    "serve_models_loaded_total", "serve_batcher_requests_total",
+    "serve_batcher_served_total", "serve_queue_wait_us", "serve_batch_size",
+    "serve_batch_predict_us", "serve_queue_depth_hwm",
+)
+# extra series that must exist under --mesh (registered per shard at load,
+# so an alerting rule can tell "zero overflow" from "not sharded")
+_SHARDED_SERIES = ("serve_shard_overflow_dropped", "serve_shard_piece_version")
+
+
+def _verify_metrics(url: str, predictor, *, sharded: bool) -> str | None:
+    """Scrape the live endpoint and check the contract: every required
+    series present on /metrics, /healthz green with the predictor component.
+    Returns an error string, or None when the endpoint checks out."""
+    import json
+    import urllib.request
+
+    obs.add_health_provider("predictor", predictor.health)
+    try:
+        with urllib.request.urlopen(f"{url}/metrics", timeout=10) as resp:
+            text = resp.read().decode()
+        need = _REQUIRED_SERIES + (_SHARDED_SERIES if sharded else ())
+        missing = [n for n in need if f"# TYPE {n} " not in text]
+        if missing:
+            return f"/metrics missing series: {missing}"
+        with urllib.request.urlopen(f"{url}/healthz", timeout=10) as resp:
+            doc = json.loads(resp.read().decode())
+        if doc.get("status") != "ok":
+            return f"/healthz degraded: {doc}"
+        if "predictor" not in doc.get("components", {}):
+            return "/healthz missing the predictor component"
+        return None
+    finally:
+        obs.remove_health_provider("predictor")
 
 
 def _synthetic_stream(d: int, n_requests: int, dup_frac: float,
@@ -122,10 +168,12 @@ def _fit_and_export(directory: str, *, n: int = 1024, d: int = 8,
     return model, np.asarray(x, np.float32)
 
 
-def selftest() -> int:
+def selftest(metrics_url: str | None = None) -> int:
     """Export a small artifact, serve 100 requests through the in-process
     batcher, and verify every response against the library predict path —
-    the CI serving smoke."""
+    the CI serving smoke.  With ``metrics_url`` (set by --metrics-port) the
+    selftest also scrapes its own live endpoint and fails if any required
+    series is missing."""
     import jax.numpy as jnp
 
     from ..core import wlsh_krr_predict
@@ -158,16 +206,23 @@ def selftest() -> int:
             print("[krr_serve] SELFTEST FAIL: replayed stream not bitwise "
                   "reproducible")
             return 1
+        if metrics_url is not None:
+            err = _verify_metrics(metrics_url, predictor, sharded=False)
+            if err is not None:
+                print(f"[krr_serve] SELFTEST FAIL: {err}")
+                return 1
         cache = predictor.cache_stats()
         print(f"[krr_serve] selftest ok: 100/100 round-tripped (<=1e-6 of "
               f"the library path, replay bitwise); "
               f"{stats['batches']} batches (mean {stats['mean_batch']:.1f} "
               f"rows), p50 {stats['p50_us']:.0f}us p99 {stats['p99_us']:.0f}us, "
-              f"cache hit rate {cache['hit_rate']:.2f}")
+              f"cache hit rate {cache['hit_rate']:.2f}"
+              + ("; metrics endpoint verified" if metrics_url else ""))
     return 0
 
 
-def selftest_sharded(mesh_shape: tuple[int, int]) -> int:
+def selftest_sharded(mesh_shape: tuple[int, int],
+                     metrics_url: str | None = None) -> int:
     """Sharded-serving smoke for the serving-multidevice CI job: fit, export
     the piece grid, host it on a (model, data) mesh behind the batcher,
     serve 100 queries, and verify <=1e-5 against the single-host Predictor
@@ -217,6 +272,11 @@ def selftest_sharded(mesh_shape: tuple[int, int]) -> int:
             print(f"[krr_serve] SELFTEST FAIL: routing overflow dropped "
                   f"buckets: {overflow}")
             return 1
+        if metrics_url is not None:
+            merr = _verify_metrics(metrics_url, predictor, sharded=True)
+            if merr is not None:
+                print(f"[krr_serve] SELFTEST FAIL: {merr}")
+                return 1
         cache = predictor.cache_stats()
         print(f"[krr_serve] sharded selftest ok "
               f"(mesh {mesh_shape[0]}x{mesh_shape[1]}): 100/100 within "
@@ -266,12 +326,39 @@ def main(argv=None) -> int:
                     help="host the model on model-axis rows [LO, HI) of the "
                          "--mesh so several models co-serve (default: the "
                          "whole model axis)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="expose /metrics (Prometheus text) + /healthz on "
+                         "127.0.0.1:PORT for the lifetime of the run "
+                         "(0 = OS-picked port, printed at startup)")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="append a JSONL metrics snapshot to PATH on exit "
+                         "(headless runs: scrape-free flight recorder)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     mesh_shape = parse_mesh_shape(args.mesh) if args.mesh else None
+    server = None
+    if args.metrics_port is not None:
+        server = obs.serve_metrics(args.metrics_port)
+        print(f"[krr_serve] metrics: {server.url}/metrics  "
+              f"health: {server.url}/healthz")
+    try:
+        rc = _dispatch(args, mesh_shape, server)
+    finally:
+        if args.metrics_dump:
+            obs.REGISTRY.write_jsonl(args.metrics_dump,
+                                     extra={"driver": "krr_serve"})
+            print(f"[krr_serve] metrics snapshot -> {args.metrics_dump}")
+        if server is not None:
+            server.close()
+    return rc
+
+
+def _dispatch(args, mesh_shape, server) -> int:
     if args.selftest:
-        return selftest_sharded(mesh_shape) if mesh_shape else selftest()
+        url = server.url if server is not None else None
+        return (selftest_sharded(mesh_shape, metrics_url=url)
+                if mesh_shape else selftest(metrics_url=url))
 
     placement = None
     if args.placement:
@@ -284,6 +371,8 @@ def main(argv=None) -> int:
     else:
         predictor = Predictor(backend=args.backend,
                               cache_entries=args.cache_entries)
+    if server is not None:
+        obs.add_health_provider("predictor", predictor.health)
     with contextlib.ExitStack() as stack:
         if args.artifact:
             aid = (predictor.load(args.artifact, placement=placement)

@@ -16,6 +16,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..core.bucket_fns import get_bucket_fn
 from ..core.distributed import (KRRStepConfig, OVERFLOW_POLICIES,
                                 make_krr_predict, make_krr_predict_hashjoin,
@@ -103,6 +104,13 @@ def main() -> int:
                          "rest are unit-normal probes — demonstrates the "
                          "multi-RHS matvec amortization (fit time is far "
                          "below k single solves)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the solve into DIR "
+                         "(view with TensorBoard); also turns obs spans into "
+                         "TraceAnnotations so fit/dist phases show up named "
+                         "on the trace timeline")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="append a JSONL metrics snapshot to PATH on exit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -134,6 +142,9 @@ def main() -> int:
                                    (ytr.shape[0], args.num_rhs - 1))
         ytr = jnp.concatenate([ytr[:, None], probes], axis=1)
 
+    if args.trace_dir:
+        if not obs.start_trace(args.trace_dir):
+            print("[krr] --trace-dir ignored: jax.profiler unavailable")
     if args.table_mode == "hashjoin":
         # the resilient runner applies --overflow to the step's fault
         # counters and retries a non-finite solve once on an f32 wire
@@ -154,9 +165,13 @@ def main() -> int:
         step = jax.jit(make_krr_step(mesh, cfg, f))
         predict = jax.jit(make_krr_predict(mesh, cfg, f))
         t0 = time.time()
-        beta, resnorm, tables = step(xtr, ytr, lsh)
-        jax.block_until_ready(beta)
+        with obs.span("train.solve", {"table_mode": args.table_mode}):
+            beta, resnorm, tables = step(xtr, ytr, lsh)
+            jax.block_until_ready(beta)
         t_fit = time.time() - t0
+    if args.trace_dir and obs.stop_trace():
+        print(f"[krr] profiler trace -> {args.trace_dir} "
+              f"(tensorboard --logdir {args.trace_dir})")
     yhat = predict(xte_p, lsh, tables)[:n_te]
     if args.num_rhs > 1:
         yhat, resnorm = yhat[:, 0], resnorm[0]
@@ -168,7 +183,40 @@ def main() -> int:
     print(f"[krr] fit {t_fit:.2f}s on {n_shards} shard(s); "
           f"CG residual {float(resnorm):.2e}; test RMSE {rmse:.4f} "
           f"(label std = 1.0)")
+    _print_solve_metrics(args)
+    if args.metrics_dump:
+        obs.REGISTRY.write_jsonl(args.metrics_dump,
+                                 extra={"driver": "krr_train",
+                                        "dataset": args.dataset})
+        print(f"[krr] metrics snapshot -> {args.metrics_dump}")
     return 0
+
+
+def _print_solve_metrics(args) -> None:
+    """Per-solve telemetry summary off the obs registry/spans — the same
+    numbers /metrics would export, for headless runs with no scraper."""
+    span = ("dist.krr_step" if args.table_mode == "hashjoin"
+            else "train.solve")
+    st = obs.span_stats(span)
+    if st["count"]:
+        print(f"[krr] obs: span {span} x{st['count']} "
+              f"p50 {st['p50_us']/1e3:.1f}ms max {st['max_us']/1e3:.1f}ms")
+    if args.table_mode == "hashjoin":
+        snap = obs.REGISTRY.snapshot()
+
+        def _val(name, default=0.0):
+            fam = snap.get(name)
+            if not fam or not fam.get("series"):
+                return default
+            return fam["series"][0].get("value", default)
+
+        print(f"[krr] obs: hashjoin routing builds "
+              f"{_val('hashjoin_routing_builds_total'):.0f}, route cap "
+              f"{_val('hashjoin_route_cap'):.0f} (owner max "
+              f"{_val('hashjoin_route_owner_max'):.0f}), a2a payload "
+              f"{_val('hashjoin_a2a_payload_bytes')/1e6:.2f} MB, overflow "
+              f"dropped {_val('hashjoin_overflow_dropped_total'):.0f}, wire "
+              f"retries {_val('dist_wire_retry_total'):.0f}")
 
 
 if __name__ == "__main__":

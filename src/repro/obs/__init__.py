@@ -1,0 +1,75 @@
+"""Unified telemetry: metrics registry, span tracing, live stats endpoint.
+
+Instrumented call sites across the repo do::
+
+    from repro import obs
+
+    obs.counter("serve_cache_hits_total").inc(n)
+    with obs.span("serve.predict", to_histogram=obs.histogram(
+            "serve_predict_us")):
+        ...
+
+and a serving or training process exposes everything via
+``obs.serve_metrics(port)`` (live Prometheus text + /healthz) or
+``obs.REGISTRY.write_jsonl(path)`` (headless snapshot).  See DESIGN.md
+§11 for the signal catalog and the overhead budget.
+"""
+from .registry import (
+    COUNT_BUCKETS,
+    LATENCY_BUCKETS_US,
+    MetricsRegistry,
+    REGISTRY,
+    counter,
+    enabled,
+    gauge,
+    histogram,
+    set_enabled,
+)
+from .tracing import (
+    annotation,
+    clear_span_samples,
+    current_span,
+    set_jax_annotations,
+    set_tracing,
+    span,
+    span_samples_us,
+    span_stats,
+    start_trace,
+    stop_trace,
+    timer,
+)
+from .http import (
+    MetricsServer,
+    add_health_provider,
+    health_document,
+    remove_health_provider,
+    serve_metrics,
+)
+
+__all__ = [
+    "COUNT_BUCKETS",
+    "LATENCY_BUCKETS_US",
+    "MetricsRegistry",
+    "REGISTRY",
+    "MetricsServer",
+    "add_health_provider",
+    "annotation",
+    "clear_span_samples",
+    "counter",
+    "current_span",
+    "enabled",
+    "gauge",
+    "health_document",
+    "histogram",
+    "remove_health_provider",
+    "serve_metrics",
+    "set_enabled",
+    "set_jax_annotations",
+    "set_tracing",
+    "span",
+    "span_samples_us",
+    "span_stats",
+    "start_trace",
+    "stop_trace",
+    "timer",
+]

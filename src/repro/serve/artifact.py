@@ -24,6 +24,7 @@ from typing import NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..checkpoint import restore_checkpoint, save_checkpoint
 from ..checkpoint.store import atomic_write_json, latest_step
 from ..core.bucket_fns import BUCKET_FNS
@@ -92,6 +93,18 @@ def export_artifact(directory: str, model: WLSHKRRModel, *,
     serving needs only the LSH params and tables, and beta is the one array
     that scales with the training-set size.
     """
+    with obs.span("io.export_artifact",
+                  to_histogram=obs.histogram(
+                      "io_artifact_export_us",
+                      "artifact export wall time")):
+        return _export_artifact(directory, model, artifact_id=artifact_id,
+                                norm=norm, extra_meta=extra_meta,
+                                include_beta=include_beta)
+
+
+def _export_artifact(directory: str, model: WLSHKRRModel, *,
+                     artifact_id: str | None, norm: Normalization | None,
+                     extra_meta: dict | None, include_beta: bool) -> str:
     arrays = _model_arrays(model, include_beta=include_beta)
     if norm is not None:
         arrays["x_mean"] = np.asarray(norm.x_mean, np.float32).reshape(-1)
@@ -113,6 +126,8 @@ def export_artifact(directory: str, model: WLSHKRRModel, *,
             "arrays": {k: list(v.shape) for k, v in arrays.items()},
             **(extra_meta or {})}
     save_checkpoint(directory, ARTIFACT_FORMAT, arrays, meta)
+    obs.counter("io_artifact_exports_total", "artifacts exported",
+                labels=("kind",)).labels("single").inc()
     return artifact_id
 
 
@@ -173,15 +188,24 @@ def load_artifact(directory: str, *, backend: str | None = None,
     import time
     import zipfile
     attempt = 0
-    while True:
-        try:
-            return _load_artifact_once(directory, backend=backend,
-                                       artifact_id=artifact_id)
-        except (OSError, zipfile.BadZipFile) as e:
-            if attempt >= retries:
-                raise
-            time.sleep(retry_backoff_s * (2 ** attempt))
-            attempt += 1
+    with obs.span("io.load_artifact",
+                  to_histogram=obs.histogram(
+                      "io_artifact_load_us",
+                      "artifact load wall time (incl. retries)")):
+        while True:
+            try:
+                loaded = _load_artifact_once(directory, backend=backend,
+                                             artifact_id=artifact_id)
+                obs.counter("io_artifact_loads_total", "artifacts loaded",
+                            labels=("kind",)).labels("single").inc()
+                return loaded
+            except (OSError, zipfile.BadZipFile) as e:
+                if attempt >= retries:
+                    raise
+                obs.counter("io_artifact_load_retries_total",
+                            "transient artifact-load failures retried").inc()
+                time.sleep(retry_backoff_s * (2 ** attempt))
+                attempt += 1
 
 
 def _load_artifact_once(directory: str, *, backend: str | None = None,
@@ -344,6 +368,8 @@ def export_artifact_sharded(directory: str, model: WLSHKRRModel, *,
             "y_mean": float(np.float32(norm.y_mean)),
             "y_std": float(np.float32(norm.y_std))}
     _write_manifest(directory, manifest)
+    obs.counter("io_artifact_exports_total", "artifacts exported",
+                labels=("kind",)).labels("sharded").inc()
     return artifact_id
 
 
@@ -467,6 +493,8 @@ def load_artifact_sharded(directory: str, *, mesh_shape: tuple[int, int],
             x_std=np.asarray(nm["x_std"], np.float32),
             y_mean=float(nm["y_mean"]), y_std=float(nm["y_std"]))
     op = model_operator(model, backend=backend)
+    obs.counter("io_artifact_loads_total", "artifacts loaded",
+                labels=("kind",)).labels("sharded").inc()
     return LoadedShardedArtifact(
         artifact_id=artifact_id or manifest.get("artifact_id")
         or os.path.basename(os.path.normpath(directory)),

@@ -40,6 +40,7 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from .. import obs
 from ..errors import DeadlineExceeded, Overloaded, WorkerCrashed
 
 
@@ -109,7 +110,34 @@ class MicroBatcher:
         self._t_last: float | None = None
         self._n_shed = 0
         self._n_expired = 0
+        self._queue_hwm = 0
         self._last_error: str | None = None
+        # registry children resolved once (name->family lookups off the
+        # submit/flush paths); instance stats() stays per-batcher exact,
+        # the global registry aggregates across batchers
+        self._m_queue_wait = obs.histogram(
+            "serve_queue_wait_us", "request wait from submit to flush").labels()
+        self._m_predict = obs.histogram(
+            "serve_batch_predict_us", "predict_fn wall time per batch").labels()
+        self._m_batch_size = obs.histogram(
+            "serve_batch_size", "rows coalesced per flushed batch",
+            buckets=obs.COUNT_BUCKETS).labels()
+        self._m_requests = obs.counter(
+            "serve_batcher_requests_total", "requests submitted").labels()
+        self._m_served = obs.counter(
+            "serve_batcher_served_total", "requests served successfully").labels()
+        self._m_batches = obs.counter(
+            "serve_batcher_batches_total", "batches flushed").labels()
+        self._m_shed = obs.counter(
+            "serve_batcher_shed_total", "requests shed at max_queue").labels()
+        self._m_expired = obs.counter(
+            "serve_batcher_deadline_expired_total",
+            "requests expired in queue before predict").labels()
+        self._m_hwm = obs.gauge(
+            "serve_queue_depth_hwm", "high-water mark of the request queue").labels()
+        # flat pre-bound timer: one per flushed batch on the worker thread
+        self._t_batch = obs.timer("serve.batch_predict",
+                                  to_histogram=self._m_predict)
         self._closed = False
         self._crashed: BaseException | None = None
         self._inflight: list[_Request] | None = None
@@ -151,11 +179,19 @@ class MicroBatcher:
             if self.max_queue and self._queue.qsize() >= self.max_queue:
                 self._n_shed += 1
                 depth = self._queue.qsize()
+                self._m_requests.inc()
+                self._m_shed.inc()
                 req.future.set_exception(Overloaded(
                     f"request shed: queue depth {depth} >= "
                     f"max_queue {self.max_queue}", queue_depth=depth))
                 return req.future
             self._queue.put(req)
+            depth = self._queue.qsize()
+            if depth > self._queue_hwm:
+                self._queue_hwm = depth
+                self._m_hwm.set(depth)
+        # accepted requests hit serve_batcher_requests_total at FLUSH time
+        # (one inc per batch, not per submit) — only sheds inc here
         return req.future
 
     def predict(self, x_row, *, timeout: float | None = None,
@@ -257,7 +293,9 @@ class MicroBatcher:
         now = time.perf_counter()
         live = []
         expired = 0
+        waits = []
         for r in batch:
+            waits.append((now - r.t_submit) * 1e6)
             if r.deadline is not None and now > r.deadline:
                 waited = now - r.t_submit
                 r.future.set_exception(DeadlineExceeded(
@@ -266,38 +304,53 @@ class MicroBatcher:
                 expired += 1
             else:
                 live.append(r)
-        if expired:
+        if live:
+            try:
+                with self._t_batch():
+                    out = self.predict_fn(np.stack([r.x for r in live]))
+            except BaseException as e:
+                with self._lock:
+                    self._last_error = repr(e)
+                for r in live:
+                    r.future.set_exception(e)
+                self._record_flush(waits, expired, served=None)
+                return
+            now = time.perf_counter()
+            with self._lock:
+                if self._t_first is None:
+                    self._t_first = live[0].t_submit
+                self._t_last = now
+                self._n_batches += 1
+                self._batch_rows += len(live)
+                self._n_served += len(live)
+                for r in live:
+                    self._latencies.append(now - r.t_submit)
+            for r, row in zip(live, np.asarray(out)):
+                r.future.set_result(row)
+        # registry recording runs AFTER every future is resolved: metrics
+        # must never sit on the response critical path (they only eat
+        # worker headroom between batches)
+        self._record_flush(waits, expired, served=len(live) if live else None)
+
+    def _record_flush(self, waits, expired: int, served: int | None) -> None:
+        self._m_queue_wait.observe_many(waits)   # one lock for the batch
+        self._m_requests.inc(len(waits))         # accepted-request count,
+        if expired:                              # batched off the submit path
+            self._m_expired.inc(expired)
             with self._lock:
                 self._n_expired += expired
-        if not live:
-            return
-        try:
-            out = self.predict_fn(np.stack([r.x for r in live]))
-        except BaseException as e:
-            with self._lock:
-                self._last_error = repr(e)
-            for r in live:
-                r.future.set_exception(e)
-            return
-        now = time.perf_counter()
-        with self._lock:
-            if self._t_first is None:
-                self._t_first = live[0].t_submit
-            self._t_last = now
-            self._n_batches += 1
-            self._batch_rows += len(live)
-            self._n_served += len(live)
-            for r in live:
-                self._latencies.append(now - r.t_submit)
-        for r, row in zip(live, np.asarray(out)):
-            r.future.set_result(row)
+        if served is not None:
+            self._m_batch_size.observe(served)
+            self._m_batches.inc()
+            self._m_served.inc(served)
 
     # -- observability ------------------------------------------------------
 
     def stats(self) -> dict:
         """Snapshot: served/batch counts, mean coalesced batch size, sliding-
-        window latency percentiles (us), achieved QPS, live queue depth, plus
-        the degraded-mode counters (shed, deadline-expired, crash state)."""
+        window latency percentiles (us), achieved QPS, live queue depth and
+        its high-water mark, plus the degraded-mode counters (shed,
+        deadline-expired, crash state)."""
         with self._lock:
             lat = sorted(self._latencies)
             span = (self._t_last - self._t_first) \
@@ -310,6 +363,7 @@ class MicroBatcher:
                 "mean_batch": (self._batch_rows / self._n_batches
                                if self._n_batches else 0.0),
                 "queue_depth": self._queue.qsize(),
+                "queue_depth_hwm": self._queue_hwm,
                 "p50_us": percentile(lat, 50) * 1e6,
                 "p99_us": percentile(lat, 99) * 1e6,
                 "qps": self._n_served / span if span > 0 else 0.0,

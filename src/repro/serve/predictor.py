@@ -18,6 +18,7 @@ inserted.  Hits are exact — the cache stores the warm path's own output.
 from __future__ import annotations
 
 import threading
+from time import perf_counter
 from typing import NamedTuple
 
 import jax
@@ -25,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .artifact import LoadedArtifact, load_artifact
+from .. import obs
 from ..core.bucket_fns import get_bucket_fn
 from ..errors import InvalidRequest
 from ..testing.faults import FaultPlan, serve_fault
@@ -87,6 +89,38 @@ class Predictor:
         self._n_errors = 0
         self._last_error: str | None = None
         self._batcher = None            # attached MicroBatcher, for health()
+        # registry children resolved once; health() keeps reading the
+        # per-instance counters above (API-stable exact values), the global
+        # registry gets the same increments for scraping
+        self._m_requests = obs.counter(
+            "serve_requests_total", "predict() calls accepted").labels()
+        self._m_errors = obs.counter(
+            "serve_errors_total", "predict() calls that raised").labels()
+        self._m_predict_us = obs.histogram(
+            "serve_predict_us", "end-to-end predict() wall time").labels()
+        self._m_warm_us = obs.histogram(
+            "serve_warm_compute_us",
+            "jitted warm-path wall time per call").labels()
+        self._m_probe_us = obs.histogram(
+            "serve_cache_probe_us",
+            "bucket-key + cache probe wall time").labels()
+        self._m_hits = obs.counter(
+            "serve_cache_hits_total",
+            "query rows served from the cache").labels()
+        self._m_misses = obs.counter(
+            "serve_cache_misses_total",
+            "query rows that ran the warm path").labels()
+        self._m_bucket = obs.counter(
+            "serve_padding_bucket_total",
+            "batches served per power-of-two padding bucket",
+            labels=("bucket",))
+        self._bucket_children: dict = {}   # bucket -> bound counter child
+        # flat pre-bound timers, not full spans: these are the per-request
+        # sites that pay the metrics-on/off <=1.05x p50 pin
+        self._t_predict = obs.timer("serve.predict",
+                                    to_histogram=self._m_predict_us)
+        self._t_warm = obs.timer("serve.warm_compute",
+                                 to_histogram=self._m_warm_us)
 
     # -- model hosting ------------------------------------------------------
 
@@ -128,6 +162,19 @@ class Predictor:
             self._models[loaded.artifact_id] = hosted
             if self._default_id is None:
                 self._default_id = loaded.artifact_id
+        obs.counter("serve_models_loaded_total",
+                    "artifacts hosted over the process lifetime").inc()
+        if hosted.cache is not None:
+            # pull-time gauges: cache state is read only when scraped, so
+            # hosting a model adds zero per-request cost
+            cache = hosted.cache
+            obs.gauge("serve_cache_entries", "live prediction-cache entries",
+                      labels=("model",)).labels(loaded.artifact_id).set_fn(
+                lambda cache=cache: cache.stats()["entries"])
+            obs.gauge("serve_cache_evictions",
+                      "prediction-cache evictions to date",
+                      labels=("model",)).labels(loaded.artifact_id).set_fn(
+                lambda cache=cache: cache.stats()["evictions"])
         return loaded.artifact_id
 
     def _hosted(self, artifact_id: str | None) -> _HostedModel:
@@ -149,6 +196,10 @@ class Predictor:
         """Pad to the power-of-two bucket, run the jitted program, trim."""
         b = x.shape[0]
         bucket = padding_bucket(b, self.max_batch)
+        ch = self._bucket_children.get(bucket)
+        if ch is None:       # bind the labeled child once per padding bucket
+            ch = self._bucket_children[bucket] = self._m_bucket.labels(bucket)
+        ch.inc()
         xp = np.zeros((bucket, x.shape[1]), np.float32)
         xp[:b] = x
         out = hosted.predict_fn(hosted.loaded.model.tables, xp)
@@ -159,9 +210,10 @@ class Predictor:
             self._n_predicts += 1
             call_idx = self._n_predicts
         serve_fault(self.fault_plan, call_idx)
-        chunks = [self._predict_padded(hosted, x[i:i + self.max_batch])
-                  for i in range(0, x.shape[0], self.max_batch)]
-        return chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
+        with self._t_warm():
+            chunks = [self._predict_padded(hosted, x[i:i + self.max_batch])
+                      for i in range(0, x.shape[0], self.max_batch)]
+            return chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
 
     def predict(self, x, *, artifact_id: str | None = None,
                 use_cache: bool = True, validate: bool = True) -> np.ndarray:
@@ -172,18 +224,21 @@ class Predictor:
         structured error, never as a silently-NaN prediction (and never as a
         poisoned cache entry served to later callers)."""
         try:
-            return self._predict(x, artifact_id=artifact_id,
-                                 use_cache=use_cache, validate=validate)
+            with self._t_predict():
+                return self._predict(x, artifact_id=artifact_id,
+                                     use_cache=use_cache, validate=validate)
         except BaseException as e:
             with self._lock:
                 self._n_errors += 1
                 self._last_error = repr(e)
+            self._m_errors.inc()
             raise
 
     def _predict(self, x, *, artifact_id, use_cache, validate) -> np.ndarray:
         hosted = self._hosted(artifact_id)
         with self._lock:
             self._n_requests += 1
+        self._m_requests.inc()
         x = np.asarray(x, np.float32)
         single = x.ndim == 1
         if single:
@@ -197,15 +252,21 @@ class Predictor:
             out = self._predict_warm(hosted, x)
             return out[0] if single else out
 
+        t0 = perf_counter()
         keys = self._bucket_keys(hosted, x)
         found = hosted.cache.get_many(keys)
+        self._m_probe_us.observe((perf_counter() - t0) * 1e6)
         if single and found[0] is not None:       # all-hit serving fast path
+            self._m_hits.inc()
             v = found[0]
             # hand out a copy, never the stored row: an in-place caller
             # mutation must not rewrite the cache (np scalars are immutable)
             return v.copy() if isinstance(v, np.ndarray) else v
         miss = [i for i, v in enumerate(found) if v is None]
+        if len(found) > len(miss):
+            self._m_hits.inc(len(found) - len(miss))
         if miss:
+            self._m_misses.inc(len(miss))
             fresh = self._predict_warm(hosted, x[miss])
             hosted.cache.put_many([keys[i] for i in miss], list(fresh))
             for j, i in enumerate(miss):
@@ -299,9 +360,9 @@ class Predictor:
         if batcher is not None:
             b = batcher.stats()
             snap["batcher"] = {k: b[k] for k in
-                               ("queue_depth", "shed", "shed_rate",
-                                "deadline_expired", "p99_us", "crashed",
-                                "last_error")}
+                               ("queue_depth", "queue_depth_hwm", "shed",
+                                "shed_rate", "deadline_expired", "p99_us",
+                                "crashed", "last_error")}
         snap["ok"] = bool(snap["models"]) and not (
             batcher is not None and snap["batcher"]["crashed"])
         return snap

@@ -37,6 +37,7 @@ StepStats plumbing) next to the attached batcher's queue depth.
 from __future__ import annotations
 
 import threading
+from time import perf_counter
 from typing import NamedTuple
 
 import jax
@@ -44,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .. import obs
 from ..core.bucket_fns import get_bucket_fn
 from ..core.distributed import KRRStepConfig, make_krr_predict_hashjoin
 from ..errors import InvalidRequest
@@ -128,6 +130,36 @@ class ShardedPredictor:
         self._n_errors = 0
         self._last_error: str | None = None
         self._batcher = None
+        # same metric families as the single-host Predictor — one schema
+        # across serving tiers, aggregated in the shared registry
+        self._m_requests = obs.counter(
+            "serve_requests_total", "predict() calls accepted").labels()
+        self._m_errors = obs.counter(
+            "serve_errors_total", "predict() calls that raised").labels()
+        self._m_predict_us = obs.histogram(
+            "serve_predict_us", "end-to-end predict() wall time").labels()
+        self._m_warm_us = obs.histogram(
+            "serve_warm_compute_us",
+            "jitted warm-path wall time per call").labels()
+        self._m_probe_us = obs.histogram(
+            "serve_cache_probe_us",
+            "bucket-key + cache probe wall time").labels()
+        self._m_hits = obs.counter(
+            "serve_cache_hits_total",
+            "query rows served from the cache").labels()
+        self._m_misses = obs.counter(
+            "serve_cache_misses_total",
+            "query rows that ran the warm path").labels()
+        self._m_bucket = obs.counter(
+            "serve_padding_bucket_total",
+            "batches served per power-of-two padding bucket",
+            labels=("bucket",))
+        self._bucket_children: dict = {}   # bucket -> bound counter child
+        # flat pre-bound timers (see Predictor): the per-request sites
+        self._t_predict = obs.timer("serve.predict",
+                                    to_histogram=self._m_predict_us)
+        self._t_warm = obs.timer("serve.warm_compute",
+                                 to_histogram=self._m_warm_us)
 
     # -- model hosting ------------------------------------------------------
 
@@ -197,6 +229,23 @@ class ShardedPredictor:
             self._models[loaded.artifact_id] = hosted
             if self._default_id is None:
                 self._default_id = loaded.artifact_id
+        obs.counter("serve_models_loaded_total",
+                    "artifacts hosted over the process lifetime").inc()
+        # per-shard pull-time gauges, registered at hosting time so the
+        # series EXIST (at 0) even in broadcast mode where overflow is
+        # structurally impossible — an absent series and a zero series mean
+        # different things to an alerting rule
+        ovf = obs.gauge("serve_shard_overflow_dropped",
+                        "distinct buckets dropped past routing capacity, "
+                        "per data shard", labels=("model", "shard"))
+        ver = obs.gauge("serve_shard_piece_version",
+                        "hot-swap version of each data shard's table piece",
+                        labels=("model", "shard"))
+        for j in range(nd):
+            ovf.labels(loaded.artifact_id, j).set_fn(
+                lambda h=hosted, j=j: int(h.overflow[j]))
+            ver.labels(loaded.artifact_id, j).set_fn(
+                lambda h=hosted, j=j: int(h.shard_versions[j]))
         return loaded.artifact_id
 
     def _hosted(self, artifact_id: str | None) -> _ShardedModel:
@@ -233,6 +282,10 @@ class ShardedPredictor:
     def _predict_padded(self, hosted: _ShardedModel, x: np.ndarray):
         b = x.shape[0]
         bucket = self._bucket(b)
+        ch = self._bucket_children.get(bucket)
+        if ch is None:       # bind the labeled child once per padding bucket
+            ch = self._bucket_children[bucket] = self._m_bucket.labels(bucket)
+        ch.inc()
         if b == bucket and x.dtype == np.float32:
             xp = np.ascontiguousarray(x)   # already bucket-sized: no copy
         else:
@@ -252,34 +305,38 @@ class ShardedPredictor:
         with self._lock:
             self._n_predicts += 1
         norm = hosted.loaded.norm
-        if norm is not None:
-            # host-side f32 normalization mirrors the single-host in-jit one
-            # bitwise (both IEEE sub/div) — and matches the cache keys
-            x = ((x - norm.x_mean) / norm.x_std).astype(np.float32)
-        chunks = [self._predict_padded(hosted, x[i:i + self.max_batch])
-                  for i in range(0, x.shape[0], self.max_batch)]
-        out = chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
-        if norm is not None:
-            out = (out * np.float32(norm.y_std)
-                   + np.float32(norm.y_mean)).astype(out.dtype)
-        return out
+        with self._t_warm():
+            if norm is not None:
+                # host-side f32 normalization mirrors the single-host in-jit
+                # one bitwise (both IEEE sub/div) — and matches the cache keys
+                x = ((x - norm.x_mean) / norm.x_std).astype(np.float32)
+            chunks = [self._predict_padded(hosted, x[i:i + self.max_batch])
+                      for i in range(0, x.shape[0], self.max_batch)]
+            out = chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
+            if norm is not None:
+                out = (out * np.float32(norm.y_std)
+                       + np.float32(norm.y_mean)).astype(out.dtype)
+            return out
 
     def predict(self, x, *, artifact_id: str | None = None,
                 use_cache: bool = True, validate: bool = True) -> np.ndarray:
         """Serve a (d,) point or (b, d) batch against the sharded table."""
         try:
-            return self._predict(x, artifact_id=artifact_id,
-                                 use_cache=use_cache, validate=validate)
+            with self._t_predict():
+                return self._predict(x, artifact_id=artifact_id,
+                                     use_cache=use_cache, validate=validate)
         except BaseException as e:
             with self._lock:
                 self._n_errors += 1
                 self._last_error = repr(e)
+            self._m_errors.inc()
             raise
 
     def _predict(self, x, *, artifact_id, use_cache, validate) -> np.ndarray:
         hosted = self._hosted(artifact_id)
         with self._lock:
             self._n_requests += 1
+        self._m_requests.inc()
         x = np.asarray(x, np.float32)
         single = x.ndim == 1
         if single:
@@ -293,10 +350,15 @@ class ShardedPredictor:
             out = self._predict_warm(hosted, x)
             return out[0] if single else out
 
+        t0 = perf_counter()
         keys = self._sharded_keys(hosted, x)
         found = hosted.cache.get_many(keys)
+        self._m_probe_us.observe((perf_counter() - t0) * 1e6)
         miss = [i for i, v in enumerate(found) if v is None]
+        if len(found) > len(miss):
+            self._m_hits.inc(len(found) - len(miss))
         if miss:
+            self._m_misses.inc(len(miss))
             fresh = self._predict_warm(hosted, x[miss])
             hosted.cache.put_many([keys[i] for i in miss], list(fresh))
             for j, i in enumerate(miss):
@@ -398,9 +460,9 @@ class ShardedPredictor:
         if batcher is not None:
             b = batcher.stats()
             snap["batcher"] = {k: b[k] for k in
-                               ("queue_depth", "shed", "shed_rate",
-                                "deadline_expired", "p99_us", "crashed",
-                                "last_error")}
+                               ("queue_depth", "queue_depth_hwm", "shed",
+                                "shed_rate", "deadline_expired", "p99_us",
+                                "crashed", "last_error")}
         snap["ok"] = bool(snap["models"]) and not (
             batcher is not None and snap["batcher"]["crashed"])
         return snap
