@@ -19,6 +19,13 @@ same batch in the same child, so ``ratio_vs_single`` compares like with
 like.  That ratio is the sharded-serving acceptance pin (warm p50 within
 3x of single-host) gated by ``check_regression --sharded``.
 
+A **lifecycle** section measures the self-healing runtime (DESIGN.md §12):
+single-query p50 before vs immediately after a live version swap
+(``swap_p50_ratio``), the jit-cache growth across the swap
+(``swap_compile_delta`` — pinned to 0 by ``check_regression --lifecycle``:
+swaps must not recompile warm buckets), and forced-rollback
+time-to-first-healthy-prediction (``rollback_to_healthy_us``).
+
 The committed BENCH_serving.json is the regression baseline:
 ``benchmarks/check_regression.py`` gates warm_p50_us and cached_p50_us
 against it (same platform only, machine-speed normalized via the shared
@@ -150,6 +157,83 @@ def run(*, iters: int = 300, batch_requests: int = BATCH_REQUESTS,
 
 
 # ---------------------------------------------------------------------------
+# lifecycle section: swap disturbance + rollback time-to-healthy
+# ---------------------------------------------------------------------------
+
+def lifecycle_section(*, iters: int = 200, repeats: int = 3) -> dict:
+    """Self-healing runtime costs (DESIGN.md §12), measured in-process:
+
+    * ``steady_p50_us``    — single-query warm p50 through the runtime's
+      version-resolving predict (the active-tuple read is the only cost the
+      lifecycle layer adds to the predictor's own path);
+    * ``post_swap_p50_us`` / ``swap_p50_ratio`` — the same measurement
+      immediately after a live version swap: the disturbance pin (the
+      candidate pre-warms before the flip, so the ratio should be ~1);
+    * ``swap_compile_delta`` — jit-cache growth of the active model across
+      the swap; MUST be 0 (a swap that recompiles warm buckets stalls every
+      in-flight bucket on real accelerators);
+    * ``rollback_to_healthy_us`` — forced rollback to the retained version
+      through to the first healthy prediction, min over ``repeats``
+      publish->swap->rollback cycles: the recovery-time budget.
+
+    Failure yields an explicit ``{"error": ...}`` marker instead of raising,
+    matching the sharded section's stable-schema contract.
+    """
+    try:
+        return _lifecycle_measure(iters=iters, repeats=repeats)
+    except Exception as e:  # noqa: BLE001 — marker, not silence
+        return {"error": f"{type(e).__name__}: {e}"}
+
+
+def _lifecycle_measure(*, iters: int, repeats: int) -> dict:
+    from repro.launch.krr_serve import _fit
+    from repro.serve import (LifecycleConfig, ServingRuntime,
+                             export_artifact, version_dir)
+    from time import perf_counter
+
+    with tempfile.TemporaryDirectory() as tmp:
+        root = tmp + "/versions"
+        model, _ = _fit(n=MODEL_N, d=MODEL_D, m=MODEL_M, seed=SEED)
+        export_artifact(version_dir(root, 1), model)
+        cfg = LifecycleConfig(probation_s=0.0, retain=2, warm_sizes=(1,))
+        rt = ServingRuntime(root, cache_entries=0, config=cfg)
+        rt.poll_once()
+        q = (np.random.default_rng(SEED)
+             .uniform(0.0, 2.0, size=(1, MODEL_D)).astype(np.float32))
+        rt.predict(q)
+        res = {"steady_p50_us": float("inf"),
+               "post_swap_p50_us": float("inf")}
+        for _ in range(max(repeats, 1)):
+            lat = _span_lat_us(lambda: rt.predict(q), iters)
+            res["steady_p50_us"] = min(res["steady_p50_us"],
+                                       percentile(lat, 50))
+        c0 = rt.compile_count()
+        export_artifact(version_dir(root, 2), model)
+        report = rt.poll_once()
+        assert report["action"] == "swap", report
+        res["swap_compile_delta"] = rt.compile_count() - c0
+        for _ in range(max(repeats, 1)):
+            lat = _span_lat_us(lambda: rt.predict(q), iters)
+            res["post_swap_p50_us"] = min(res["post_swap_p50_us"],
+                                          percentile(lat, 50))
+        res["swap_p50_ratio"] = (res["post_swap_p50_us"]
+                                 / res["steady_p50_us"])
+        heal = float("inf")
+        ver = 2
+        for _ in range(max(repeats, 1)):
+            ver += 1
+            export_artifact(version_dir(root, ver), model)
+            report = rt.poll_once()
+            assert report["action"] == "swap", report
+            t0 = perf_counter()
+            assert rt.rollback("bench: forced")
+            rt.predict(q)        # first healthy answer post-rollback
+            heal = min(heal, (perf_counter() - t0) * 1e6)
+        res["rollback_to_healthy_us"] = heal
+    return res
+
+
+# ---------------------------------------------------------------------------
 # sharded section: ShardedPredictor vs single-host warm path on a fake mesh
 # ---------------------------------------------------------------------------
 
@@ -249,6 +333,8 @@ def main(json_path: str | None = None, *, quick: bool = False) -> dict:
               offered_qps=(0.0,) if quick else OFFERED_QPS)
     res["sharded"] = sharded_section(iters=50 if quick else 100,
                                      repeats=1 if quick else 3)
+    res["lifecycle"] = lifecycle_section(iters=50 if quick else 200,
+                                         repeats=1 if quick else 3)
     res["calib_us"] = bench_matvec.calibration_us()
     print(f"[bench_serving] cold first call {res['cold_first_call_us']:.0f}us "
           f"(compile included)")
@@ -275,6 +361,17 @@ def main(json_path: str | None = None, *, quick: bool = False) -> dict:
               f"p99 {sh['warm_p99_us']:.0f}us "
               f"({sh['ratio_vs_single']:.2f}x single-host warm "
               f"{sh['single_warm_p50_us']:.0f}us)")
+    lc = res["lifecycle"]
+    if "error" in lc:
+        print(f"[bench_serving] lifecycle: measurement FAILED "
+              f"{lc['error'][:120]}")
+    else:
+        print(f"[bench_serving] lifecycle: steady p50 "
+              f"{lc['steady_p50_us']:.0f}us, post-swap p50 "
+              f"{lc['post_swap_p50_us']:.0f}us "
+              f"(ratio {lc['swap_p50_ratio']:.2f}, "
+              f"compile delta {lc['swap_compile_delta']}), "
+              f"rollback-to-healthy {lc['rollback_to_healthy_us']:.0f}us")
     if json_path:
         with open(json_path, "w") as fh:
             json.dump(res, fh, indent=2)

@@ -1,5 +1,5 @@
 """Perf regression gates: matvec + serving + hash-join distributed +
-sharded serving.
+sharded serving + self-healing lifecycle.
 
 Reruns the matvec benchmark section at the sizes recorded in the committed
 ``BENCH_matvec.json`` and fails when ``reference_us`` or ``fused_us``
@@ -37,6 +37,11 @@ SERVING_FACTOR = 2.0
 DIST_FACTOR = 2.0
 # sharded serving: subprocess fake-CPU mesh, same noise class as distributed
 SHARDED_FACTOR = 2.0
+# lifecycle: in-process single-query loops, same noise class as serving
+LIFECYCLE_FACTOR = 2.0
+# acceptance pin (DESIGN.md §12): post-swap p50 vs steady p50 — a pure
+# ratio measured back-to-back in the same process, so machine speed cancels
+SWAP_RATIO_MAX = 2.0
 # acceptance pin (DESIGN.md §10): sharded warm p50 vs single-host warm p50
 # AT THE SAME BATCH IN THE SAME CHILD — a ratio, so machine speed cancels
 SHARDED_RATIO_MAX = 3.0
@@ -247,6 +252,65 @@ def check_sharded_serving(baseline_path=DEFAULT_SERVING_BASELINE,
     return failures, fresh
 
 
+def check_lifecycle(baseline_path=DEFAULT_SERVING_BASELINE,
+                    factor: float = LIFECYCLE_FACTOR,
+                    repeats: int = 3):
+    """Self-healing-runtime gate (CI chaos job): (failures, fresh).
+
+    Re-measures the lifecycle section (live swap + forced rollback on a
+    flat version root, in-process) against the committed
+    ``BENCH_serving.json`` ``"lifecycle"`` block and fails when:
+
+    * ``swap_compile_delta`` != 0 — the hard structural pin: a live version
+      swap must reuse the warm jit caches, never recompile serving buckets
+      (an exact integer, immune to machine speed), or
+    * ``swap_p50_ratio`` exceeds ``SWAP_RATIO_MAX`` — post-swap single-query
+      p50 vs steady p50 measured back-to-back in the same process (a pure
+      ratio), or
+    * ``rollback_to_healthy_us`` regresses more than ``factor`` against the
+      baseline (calibration-rescaled, like every other timing gate).
+
+    Skipped (not failed) on a cross-platform baseline, an error-marker
+    baseline cell, or a fresh measurement that errored."""
+    import jax
+
+    from . import bench_matvec, bench_serving
+
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    if base.get("platform") != jax.default_backend():
+        return [], {}
+    cell = base.get("lifecycle") or {}
+    if not cell or "error" in cell:
+        return [], {}
+    scale = 1.0
+    if base.get("calib_us"):
+        scale = max(1.0, bench_matvec.calibration_us() / base["calib_us"])
+    fresh = bench_serving.lifecycle_section(repeats=repeats)
+    if "error" in fresh:
+        return [], fresh
+    failures = []
+    delta = fresh.get("swap_compile_delta")
+    if delta:
+        failures.append(
+            f"lifecycle swap_compile_delta {delta} != 0 — a live swap "
+            f"recompiled warm serving buckets")
+    ratio = fresh.get("swap_p50_ratio")
+    if ratio is not None and ratio > SWAP_RATIO_MAX:
+        failures.append(
+            f"lifecycle post-swap p50 {ratio:.2f}x steady p50 (must be <= "
+            f"{SWAP_RATIO_MAX:.1f}x; post-swap "
+            f"{fresh['post_swap_p50_us']:.0f}us vs steady "
+            f"{fresh['steady_p50_us']:.0f}us)")
+    old = cell.get("rollback_to_healthy_us")
+    new = fresh.get("rollback_to_healthy_us")
+    if old and new and new > factor * old * scale:
+        failures.append(
+            f"lifecycle rollback_to_healthy_us {new:.0f}us > {factor:.2f}x "
+            f"baseline {old:.0f}us (machine scale {scale:.2f})")
+    return failures, fresh
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
@@ -266,8 +330,16 @@ def main(argv=None) -> int:
                     help="run ONLY the sharded-serving gate (CI "
                          "serving-multidevice job)")
     ap.add_argument("--sharded-factor", type=float, default=SHARDED_FACTOR)
+    ap.add_argument("--lifecycle", action="store_true",
+                    help="also gate the self-healing lifecycle section "
+                         "(in-process swap + rollback measurement)")
+    ap.add_argument("--lifecycle-only", action="store_true",
+                    help="run ONLY the lifecycle gate (CI chaos job)")
+    ap.add_argument("--lifecycle-factor", type=float,
+                    default=LIFECYCLE_FACTOR)
     args = ap.parse_args(argv)
-    only = args.distributed_only or args.sharded_only
+    only = (args.distributed_only or args.sharded_only
+            or args.lifecycle_only)
     failures = []
     rows = []
     if not only:
@@ -279,7 +351,8 @@ def main(argv=None) -> int:
         print(f"[check_regression] n={row['n']}: "
               f"reference_us={row['reference_us']:.0f} "
               f"fused_us={row['fused_us']:.0f}")
-    if (args.distributed or args.distributed_only) and not args.sharded_only:
+    if ((args.distributed or args.distributed_only)
+            and not args.sharded_only and not args.lifecycle_only):
         dfail, dfresh = check_distributed(args.baseline,
                                           args.distributed_factor)
         failures += dfail
@@ -305,7 +378,7 @@ def main(argv=None) -> int:
         else:
             print("[check_regression] serving: " +
                   " ".join(f"{k}={v:.0f}us" for k, v in sorted(sbest.items())))
-    if ((args.sharded or args.sharded_only)
+    if ((args.sharded or args.sharded_only) and not args.lifecycle_only
             and pathlib.Path(args.serving_baseline).exists()):
         shfail, shfresh = check_sharded_serving(args.serving_baseline,
                                                 args.sharded_factor)
@@ -320,6 +393,23 @@ def main(argv=None) -> int:
             print(f"[check_regression] sharded {shfresh['mesh']}: "
                   f"warm_p50_us={shfresh['warm_p50_us']:.0f} "
                   f"ratio_vs_single={shfresh['ratio_vs_single']:.2f}")
+    if ((args.lifecycle or args.lifecycle_only) and not args.sharded_only
+            and pathlib.Path(args.serving_baseline).exists()):
+        lfail, lfresh = check_lifecycle(args.serving_baseline,
+                                        args.lifecycle_factor)
+        failures += lfail
+        if not lfresh:
+            print("[check_regression] lifecycle baseline absent or platform "
+                  "differs — skipped")
+        elif "error" in lfresh:
+            print(f"[check_regression] lifecycle measurement FAILED "
+                  f"{lfresh['error'][:120]} — skipped")
+        else:
+            print(f"[check_regression] lifecycle: "
+                  f"swap_compile_delta={lfresh['swap_compile_delta']} "
+                  f"swap_p50_ratio={lfresh['swap_p50_ratio']:.2f} "
+                  f"rollback_to_healthy_us="
+                  f"{lfresh['rollback_to_healthy_us']:.0f}")
     if failures:
         for f in failures:
             print(f"[check_regression] REGRESSION {f}")

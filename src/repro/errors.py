@@ -60,6 +60,19 @@ class Overloaded(ServingError):
         self.queue_depth = int(queue_depth)
 
 
+class CircuitOpen(Overloaded):
+    """Fast rejection while a circuit breaker is open: the model's worker (or
+    the model itself) is failing and callers must back off instead of piling
+    on.  Subclasses ``Overloaded`` so existing shed-handling backoff paths
+    treat it identically; ``retry_after_s`` hints when the breaker's
+    half-open probe window starts."""
+
+    def __init__(self, message: str = "circuit open", *,
+                 retry_after_s: float = 0.0):
+        super().__init__(message)
+        self.retry_after_s = float(retry_after_s)
+
+
 class DeadlineExceeded(ServingError):
     """The request's deadline budget elapsed before its batch ran."""
 

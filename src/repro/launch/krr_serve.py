@@ -35,8 +35,10 @@ import time
 import numpy as np
 
 from .. import obs
-from ..serve import (DeadlineExceeded, MicroBatcher, Overloaded, Predictor,
-                     ShardedPredictor, bucket_sizes, parse_mesh_shape)
+from ..serve import (DeadlineExceeded, LifecycleConfig, MicroBatcher,
+                     Overloaded, Predictor, ServingRuntime, ShardedPredictor,
+                     WorkerCrashed, bucket_sizes, parse_mesh_shape,
+                     version_dir)
 
 # series the live endpoint must expose once the selftest traffic has run —
 # the CI serving job scrapes /metrics and fails if any are absent
@@ -51,9 +53,21 @@ _REQUIRED_SERIES = (
 # extra series that must exist under --mesh (registered per shard at load,
 # so an alerting rule can tell "zero overflow" from "not sharded")
 _SHARDED_SERIES = ("serve_shard_overflow_dropped", "serve_shard_piece_version")
+# extra series under --watch: every lifecycle transition and breaker state
+# change must be scrapeable, or the self-healing loop is invisible to ops
+_LIFECYCLE_SERIES = (
+    "lifecycle_reloads_total", "lifecycle_canary_total",
+    "lifecycle_swaps_total", "lifecycle_rollbacks_total",
+    "lifecycle_rollback_exhausted_total", "lifecycle_probation_total",
+    "lifecycle_nonfinite_predictions_total", "lifecycle_active_version",
+    "lifecycle_versions_retained", "lifecycle_worker_crashes_total",
+    "lifecycle_worker_restarts_total", "breaker_state",
+    "breaker_transitions_total", "breaker_rejections_total",
+)
 
 
-def _verify_metrics(url: str, predictor, *, sharded: bool) -> str | None:
+def _verify_metrics(url: str, predictor, *, sharded: bool,
+                    lifecycle: bool = False) -> str | None:
     """Scrape the live endpoint and check the contract: every required
     series present on /metrics, /healthz green with the predictor component.
     Returns an error string, or None when the endpoint checks out."""
@@ -64,7 +78,8 @@ def _verify_metrics(url: str, predictor, *, sharded: bool) -> str | None:
     try:
         with urllib.request.urlopen(f"{url}/metrics", timeout=10) as resp:
             text = resp.read().decode()
-        need = _REQUIRED_SERIES + (_SHARDED_SERIES if sharded else ())
+        need = (_REQUIRED_SERIES + (_SHARDED_SERIES if sharded else ())
+                + (_LIFECYCLE_SERIES if lifecycle else ()))
         missing = [n for n in need if f"# TYPE {n} " not in text]
         if missing:
             return f"/metrics missing series: {missing}"
@@ -102,18 +117,23 @@ def _synthetic_stream(d: int, n_requests: int, dup_frac: float,
 def serve_stream(predictor: Predictor, stream: np.ndarray, *,
                  max_batch: int, max_wait_us: int,
                  target_qps: float = 0.0, max_queue: int = 0,
-                 deadline_us: int | None = None) -> dict:
+                 deadline_us: int | None = None,
+                 runtime: ServingRuntime | None = None) -> dict:
     """Push every row of ``stream`` through a MicroBatcher; returns the
     batcher stats plus end-to-end wall clock.  ``target_qps`` paces the
     offered load (0 = as fast as the submit loop goes).  Shed (Overloaded)
     and expired (DeadlineExceeded) requests are counted in
     ``stats['rejected']`` — degraded mode answers structurally, it never
-    hangs or crashes the driver."""
+    hangs or crashes the driver.  With ``runtime`` the stream runs through
+    its SupervisedBatcher against the ACTIVE version instead (worker
+    crashes restart, repeated failures trip the breaker; ``CircuitOpen``
+    rejections count as shed)."""
     gap = 1.0 / target_qps if target_qps > 0 else 0.0
-    with MicroBatcher(lambda xb: predictor.predict(xb),
-                      max_batch=max_batch, max_wait_us=max_wait_us,
-                      dim=stream.shape[1], max_queue=max_queue,
-                      deadline_us=deadline_us) as mb:
+    kw = dict(max_batch=max_batch, max_wait_us=max_wait_us,
+              dim=stream.shape[1], max_queue=max_queue,
+              deadline_us=deadline_us)
+    with (runtime.make_batcher(**kw) if runtime is not None else
+          MicroBatcher(lambda xb: predictor.predict(xb), **kw)) as mb:
         predictor.attach_batcher(mb)
         t0 = time.perf_counter()
         futures = []
@@ -127,12 +147,14 @@ def serve_stream(predictor: Predictor, stream: np.ndarray, *,
                         break
                     time.sleep(min(rem, 5e-4))
             futures.append(mb.submit(row))
-        rows, rejected = [], 0
+        rows, rejected, crashed = [], 0, 0
         for f in futures:
             try:
                 rows.append(f.result(timeout=60.0))
             except (Overloaded, DeadlineExceeded):
                 rejected += 1
+            except WorkerCrashed:
+                crashed += 1    # supervised mode: the batch died, not the run
         wall = time.perf_counter() - t0
         stats = mb.stats()
     stats["wall_s"] = wall
@@ -140,19 +162,16 @@ def serve_stream(predictor: Predictor, stream: np.ndarray, *,
     stats["results"] = (np.stack(rows) if rows
                         else np.zeros((0,), np.float32))
     stats["rejected"] = rejected
+    stats["crashed_requests"] = crashed
     return stats
 
 
-def _fit_and_export(directory: str, *, n: int = 1024, d: int = 8,
-                    m: int = 128, seed: int = 0,
-                    mesh_shape: tuple[int, int] | None = None):
-    """Tiny in-process fit -> artifact, for --selftest and missing --artifact
-    runs.  ``mesh_shape`` switches to the sharded piece-grid export.
+def _fit(*, n: int = 1024, d: int = 8, m: int = 128, seed: int = 0):
+    """Tiny in-process fit for --selftest and missing --artifact runs.
     Returns (model, x_train)."""
     import jax
 
     from ..core import WLSHKernelSpec, get_bucket_fn, wlsh_krr_fit
-    from ..serve import export_artifact, export_artifact_sharded
 
     key = jax.random.PRNGKey(seed)
     x = jax.random.uniform(key, (n, d)) * 2.0
@@ -160,12 +179,29 @@ def _fit_and_export(directory: str, *, n: int = 1024, d: int = 8,
     spec = WLSHKernelSpec(bucket=get_bucket_fn("rect"))
     model = wlsh_krr_fit(jax.random.fold_in(key, 2), x, y, spec, m=m,
                          lam=0.5, backend="reference")
+    return model, np.asarray(x, np.float32)
+
+
+def _export(directory: str, model, *,
+            mesh_shape: tuple[int, int] | None = None,
+            artifact_id: str = "selftest") -> None:
+    """Publish ``model`` flat or (``mesh_shape``) as a sharded piece grid."""
+    from ..serve import export_artifact, export_artifact_sharded
+
     if mesh_shape is None:
-        export_artifact(directory, model, artifact_id="selftest")
+        export_artifact(directory, model, artifact_id=artifact_id)
     else:
         export_artifact_sharded(directory, model, mesh_shape=mesh_shape,
-                                artifact_id="selftest")
-    return model, np.asarray(x, np.float32)
+                                artifact_id=artifact_id)
+
+
+def _fit_and_export(directory: str, *, n: int = 1024, d: int = 8,
+                    m: int = 128, seed: int = 0,
+                    mesh_shape: tuple[int, int] | None = None):
+    """``_fit`` + ``_export`` in one call.  Returns (model, x_train)."""
+    model, x = _fit(n=n, d=d, m=m, seed=seed)
+    _export(directory, model, mesh_shape=mesh_shape)
+    return model, x
 
 
 def selftest(metrics_url: str | None = None) -> int:
@@ -287,6 +323,180 @@ def selftest_sharded(mesh_shape: tuple[int, int],
     return 0
 
 
+def selftest_lifecycle(metrics_url: str | None = None,
+                       mesh_shape: tuple[int, int] | None = None) -> int:
+    """Self-healing smoke for the CI serving/chaos jobs (--selftest --watch).
+
+    Drives the full recovery loop against a real version root: v1 serves a
+    stream clean; a POISONED v2 (tables corrupted on disk after export) is
+    canary-rejected with zero failed requests on v1; a good v3 swaps in
+    mid-stream with no dropped request and no new compile on the warm
+    buckets; a forced post-swap health regression auto-rolls back to v1
+    (mesh variant: operator rollback — the sharded predictor has no fault
+    plan); and a crashed batcher worker recovers through the breaker's
+    half-open probe instead of staying dead.  With ``metrics_url`` the
+    lifecycle_*/breaker_* series are asserted on the live endpoint.
+    """
+    import threading
+
+    from ..errors import CircuitOpen, FaultInjected
+    from ..testing.faults import (FaultPlan, crash_supervised_workers,
+                                  poison_artifact_tables)
+
+    if mesh_shape is not None:
+        import jax
+        need = mesh_shape[0] * mesh_shape[1]
+        if len(jax.devices()) < need:
+            print(f"[krr_serve] SELFTEST FAIL: mesh needs {need} devices, "
+                  f"have {len(jax.devices())}")
+            return 1
+    with tempfile.TemporaryDirectory() as tmp:
+        root = tmp + "/versions"
+        model, xtr = _fit()
+        d = xtr.shape[1]
+        _export(version_dir(root, 1), model, mesh_shape=mesh_shape)
+        cfg = LifecycleConfig(probation_s=30.0, probation_min_requests=20,
+                              probation_max_error_rate=0.1, retain=2,
+                              load_retries=2, warm_sizes=bucket_sizes(16))
+        rt = ServingRuntime(root, mesh_shape=mesh_shape, cache_entries=4096,
+                            config=cfg)
+        r = rt.poll_once()
+        if r["action"] != "swap" or rt.active_version != 1:
+            print(f"[krr_serve] SELFTEST FAIL: v1 not adopted: {r}")
+            return 1
+        stream = _synthetic_stream(d, 100, dup_frac=0.3, seed=1)
+        stats = serve_stream(rt.predictor, stream, max_batch=16,
+                             max_wait_us=1000, runtime=rt)
+        if stats["served"] != 100 or stats["rejected"] \
+                or stats["crashed_requests"]:
+            print(f"[krr_serve] SELFTEST FAIL: v1 stream "
+                  f"{stats['served']}/100 served, "
+                  f"{stats['rejected']} rejected")
+            return 1
+        base = stats["results"]
+        c0 = rt.compile_count()
+
+        # poisoned v2: published complete, then corrupted on disk — the
+        # shape of damage only the canary catches (validation passes)
+        _export(version_dir(root, 2), model, mesh_shape=mesh_shape)
+        poison_artifact_tables(version_dir(root, 2), scale=3.0)
+        r = rt.poll_once()
+        if r["action"] != "canary_reject" or rt.active_version != 1:
+            print(f"[krr_serve] SELFTEST FAIL: poisoned v2 not rejected: "
+                  f"{r}")
+            return 1
+        stats = serve_stream(rt.predictor, stream, max_batch=16,
+                             max_wait_us=1000, runtime=rt)
+        if stats["served"] != 100 or stats["rejected"] \
+                or stats["crashed_requests"] \
+                or not np.array_equal(stats["results"], base):
+            print("[krr_serve] SELFTEST FAIL: v1 service disturbed by the "
+                  "rejected candidate")
+            return 1
+
+        # good v3: swap mid-stream — zero downtime, zero new compiles
+        _export(version_dir(root, 3), model, mesh_shape=mesh_shape)
+        swap_report = {}
+
+        def mid_stream_poll():
+            time.sleep(0.01)
+            swap_report.update(rt.poll_once())
+
+        poller = threading.Thread(target=mid_stream_poll)
+        poller.start()
+        stats = serve_stream(rt.predictor, stream, max_batch=16,
+                             max_wait_us=1000, target_qps=2000.0, runtime=rt)
+        poller.join()
+        if swap_report.get("action") != "swap" or rt.active_version != 3:
+            print(f"[krr_serve] SELFTEST FAIL: v3 not swapped mid-stream: "
+                  f"{swap_report}")
+            return 1
+        if stats["served"] != 100 or stats["rejected"] \
+                or stats["crashed_requests"]:
+            print(f"[krr_serve] SELFTEST FAIL: swap dropped requests "
+                  f"({stats['served']}/100)")
+            return 1
+        if not np.allclose(stats["results"], base, atol=1e-6):
+            print("[krr_serve] SELFTEST FAIL: post-swap results diverged")
+            return 1
+        c1 = rt.compile_count()
+        if c1 != c0:
+            print(f"[krr_serve] SELFTEST FAIL: swap recompiled warm "
+                  f"buckets ({c0} -> {c1})")
+            return 1
+
+        # forced health regression inside the probation window -> rollback
+        if mesh_shape is None:
+            rt.predictor.fault_plan = FaultPlan(serve_fail_every=1)
+            probe = stream[:1]
+            for _ in range(cfg.probation_min_requests * 3):
+                try:
+                    rt.predict(probe, use_cache=False)
+                except FaultInjected:
+                    pass
+                if rt.active_version == 1:
+                    break
+            rt.predictor.fault_plan = None
+            rolled = "auto"
+        else:
+            rt.rollback("forced regression (selftest)")
+            rolled = "operator"
+        if rt.active_version != 1:
+            print(f"[krr_serve] SELFTEST FAIL: no rollback to v1 "
+                  f"(active v{rt.active_version})")
+            return 1
+        out = rt.predict(np.asarray(stream[:4]), use_cache=False)
+        if not np.allclose(out, base[:4], atol=1e-6):
+            print("[krr_serve] SELFTEST FAIL: rolled-back v1 not serving")
+            return 1
+
+        # worker crash -> breaker opens -> half-open probe recovers
+        sup = rt.make_batcher(failure_threshold=1, cooldown_s=0.2,
+                              restart_backoff_s=0.01, max_batch=8,
+                              max_wait_us=500, dim=d)
+        try:
+            sup.predict(stream[0], timeout=30.0)
+            crash_supervised_workers(sup, crashes=1)
+            try:
+                sup.predict(stream[0], timeout=30.0)
+                print("[krr_serve] SELFTEST FAIL: crashed worker answered")
+                return 1
+            except WorkerCrashed:
+                pass
+            try:
+                sup.predict(stream[0], timeout=30.0)
+                print("[krr_serve] SELFTEST FAIL: open breaker admitted")
+                return 1
+            except CircuitOpen:
+                pass
+            time.sleep(0.25)    # past the cooldown: half-open probe window
+            out = sup.predict(stream[0], timeout=30.0)
+            st = sup.stats()
+            if st["breaker"]["state"] != "closed" or st["restarts"] != 1:
+                print(f"[krr_serve] SELFTEST FAIL: breaker not recovered: "
+                      f"{st['breaker']}, restarts {st['restarts']}")
+                return 1
+        finally:
+            sup.close()
+        if metrics_url is not None:
+            err = _verify_metrics(metrics_url, rt,
+                                  sharded=mesh_shape is not None,
+                                  lifecycle=True)
+            if err is not None:
+                print(f"[krr_serve] SELFTEST FAIL: {err}")
+                return 1
+        h = rt.health()
+        print(f"[krr_serve] lifecycle selftest ok"
+              + (f" (mesh {mesh_shape[0]}x{mesh_shape[1]})"
+                 if mesh_shape else "")
+              + f": poisoned v2 canary-rejected with zero failed requests, "
+              f"v3 swapped live (compiles {c0}->{c1}), {rolled} rollback "
+              f"to v1, breaker reopened after worker crash; "
+              f"rejected versions {h['rejected_versions']}"
+              + ("; metrics endpoint verified" if metrics_url else ""))
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--artifact", default=None,
@@ -295,6 +505,25 @@ def main(argv=None) -> int:
     ap.add_argument("--selftest", action="store_true",
                     help="fit -> export -> serve 100 requests -> verify "
                          "bitwise (CI smoke); ignores the traffic flags")
+    ap.add_argument("--watch", action="store_true",
+                    help="treat --artifact as a VERSION ROOT (v1/, v2/, "
+                         "...) and self-heal: poll for new versions, "
+                         "canary-validate, swap atomically, auto-rollback "
+                         "on post-swap regression, restart crashed batcher "
+                         "workers behind a circuit breaker (with "
+                         "--selftest: run the lifecycle chaos smoke)")
+    ap.add_argument("--watch-interval", type=float, default=0.5,
+                    metavar="S", help="version-poll cadence under --watch")
+    ap.add_argument("--no-canary", action="store_true",
+                    help="skip golden-query validation before a swap "
+                         "(--watch; accepts any loadable version)")
+    ap.add_argument("--rollback-window", type=float, default=5.0,
+                    metavar="S",
+                    help="probation: watch post-swap health for S seconds "
+                         "and auto-rollback on regression (0 disables)")
+    ap.add_argument("--retain", type=int, default=2,
+                    help="previous versions kept hosted as rollback "
+                         "targets under --watch")
     ap.add_argument("--backend", default=None,
                     choices=["auto", "reference", "pallas"],
                     help="override the artifact's recorded backend")
@@ -357,8 +586,12 @@ def main(argv=None) -> int:
 def _dispatch(args, mesh_shape, server) -> int:
     if args.selftest:
         url = server.url if server is not None else None
+        if args.watch:
+            return selftest_lifecycle(metrics_url=url, mesh_shape=mesh_shape)
         return (selftest_sharded(mesh_shape, metrics_url=url)
                 if mesh_shape else selftest(metrics_url=url))
+    if args.watch:
+        return _watch_main(args, mesh_shape, server)
 
     placement = None
     if args.placement:
@@ -391,6 +624,74 @@ def _dispatch(args, mesh_shape, server) -> int:
                    if mesh_shape is not None else
                    predictor.load(tmp + "/artifact"))
         return _serve_main(predictor, aid, args)
+
+
+def _watch_main(args, mesh_shape, server) -> int:
+    """--watch without --selftest: host a version root with the live
+    watcher running (reload/canary/rollback on a daemon thread), serve the
+    synthetic/file stream through the supervised batcher, report lifecycle
+    health.  Publish a new ``v<N>`` under the root while this runs and it
+    swaps in live (see the README runbook)."""
+    cfg = LifecycleConfig(poll_interval_s=args.watch_interval,
+                          canary_enabled=not args.no_canary,
+                          probation_s=args.rollback_window,
+                          retain=args.retain, load_retries=2,
+                          warm_sizes=bucket_sizes(args.max_batch))
+    with contextlib.ExitStack() as stack:
+        root = args.artifact
+        if root is None:
+            tmp = stack.enter_context(
+                tempfile.TemporaryDirectory(prefix="krr_serve_"))
+            root = tmp + "/versions"
+            print(f"[krr_serve] no --artifact: fitting a demo model "
+                  f"-> {version_dir(root, 1)}")
+            model, _ = _fit()
+            _export(version_dir(root, 1), model, mesh_shape=mesh_shape)
+        rt = ServingRuntime(root, mesh_shape=mesh_shape,
+                            backend=args.backend,
+                            cache_entries=args.cache_entries, config=cfg)
+        if server is not None:
+            obs.add_health_provider("lifecycle", rt.health)
+            stack.callback(obs.remove_health_provider, "lifecycle")
+        rt.poll_once()
+        if rt.active_version is None:
+            print(f"[krr_serve] no published version under {root} "
+                  f"(expected {version_dir(root, 1)} etc.)",
+                  file=sys.stderr)
+            return 2
+        rt.start()
+        stack.callback(rt.stop)
+        d = rt._hosted().loaded.model.lsh.d
+        print(f"[krr_serve] watching {root}: serving v{rt.active_version} "
+              f"(poll every {cfg.poll_interval_s}s, canary "
+              f"{'on' if cfg.canary_enabled else 'OFF'}, rollback window "
+              f"{cfg.probation_s}s, retain {cfg.retain})")
+        if args.input:
+            stream = np.load(args.input).astype(np.float32)
+            if stream.ndim != 2 or stream.shape[1] != d:
+                print(f"[krr_serve] --input must be (n, {d}), "
+                      f"got {stream.shape}", file=sys.stderr)
+                return 2
+        else:
+            stream = _synthetic_stream(d, args.requests, args.dup_frac,
+                                       args.seed)
+        stats = serve_stream(rt.predictor, stream, max_batch=args.max_batch,
+                             max_wait_us=args.max_wait_us,
+                             target_qps=args.target_qps,
+                             max_queue=args.max_queue,
+                             deadline_us=(int(args.deadline_ms * 1000)
+                                          if args.deadline_ms > 0 else None),
+                             runtime=rt)
+        h = rt.health()
+        print(f"[krr_serve] {stats['served']} requests in "
+              f"{stats['wall_s']:.2f}s -> {stats['qps']:.0f} QPS "
+              f"(p50 {stats['p50_us']:.0f}us p99 {stats['p99_us']:.0f}us, "
+              f"{stats['crashes']} worker crashes / {stats['restarts']} "
+              f"restarts, breaker {stats['breaker']['state']})")
+        print(f"[krr_serve] lifecycle: active v{h['active_version']}, "
+              f"retained {h['retained_versions']}, rejected "
+              f"{h['rejected_versions']}, ok={h['ok']}")
+        return 0
 
 
 def _serve_main(predictor: Predictor, aid: str, args) -> int:

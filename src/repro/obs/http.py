@@ -7,8 +7,12 @@
   ``curl`` at it.
 * ``GET /healthz``  -> JSON health document.  Callers register named
   health providers (``add_health_provider("predictor", pred.health)``);
-  the endpoint runs them at request time and returns 200 if every
-  provider ran, 500 with the error string if one raised.
+  the endpoint runs them at request time and returns 200 only if every
+  provider ran AND reported itself healthy — a provider that raises gets
+  status "error", one whose dict says ``"ok": False`` (a runtime with no
+  active version, a crashed batcher worker) gets status "degraded"; both
+  answer 503 so a load balancer pulls the replica without the document
+  losing the detail of WHAT degraded.
 
 Everything runs on daemon threads so a serving process exits normally;
 ``MetricsServer.close()`` shuts the listener down deterministically (the
@@ -39,20 +43,27 @@ def remove_health_provider(name: str) -> None:
 
 
 def health_document() -> tuple[dict, bool]:
-    """(document, ok) — runs every registered provider."""
+    """(document, ok) — runs every registered provider.
+
+    ``status``: "ok" / "degraded" (a provider's dict reports ``ok: False`` —
+    the component answered, and what it said is bad) / "error" (a provider
+    raised).  ``ok`` is True only for "ok" — the HTTP layer maps the other
+    two to 503/500 so load balancers act on them.
+    """
     with _health_lock:
         providers = dict(_health_providers)
     doc: dict = {"status": "ok", "components": {}}
-    ok = True
     for name, fn in sorted(providers.items()):
         try:
-            doc["components"][name] = fn()
+            snap = fn()
+            doc["components"][name] = snap
+            if isinstance(snap, dict) and snap.get("ok") is False \
+                    and doc["status"] == "ok":
+                doc["status"] = "degraded"
         except Exception as e:  # a failing component degrades, not crashes
-            ok = False
+            doc["status"] = "error"
             doc["components"][name] = {"error": f"{type(e).__name__}: {e}"}
-    if not ok:
-        doc["status"] = "error"
-    return doc, ok
+    return doc, doc["status"] == "ok"
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -73,8 +84,10 @@ class _Handler(BaseHTTPRequestHandler):
             self._send(200, body, "text/plain; version=0.0.4; charset=utf-8")
         elif path == "/healthz":
             doc, ok = health_document()
+            code = 200 if ok else (503 if doc["status"] == "degraded"
+                                   else 500)
             body = (json.dumps(doc, indent=2, default=str) + "\n").encode()
-            self._send(200 if ok else 500, body, "application/json")
+            self._send(code, body, "application/json")
         else:
             self._send(404, b"not found\n", "text/plain")
 

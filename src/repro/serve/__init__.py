@@ -1,18 +1,21 @@
 """Online serving for fitted WLSH-KRR models (DESIGN.md §8).
 
 Layered as artifact (disk format) -> predictor (warm jit path + bucket-exact
-cache) -> batcher (request coalescing); ``repro.launch.krr_serve`` is the
-driver that strings them together.  Degraded-mode behavior (shedding,
-deadlines, worker-crash propagation, health) is in DESIGN.md §9; the
-structured serving errors re-export here for callers.
+cache) -> batcher (request coalescing) -> lifecycle (version watching, canary
+swap, rollback, worker supervision); ``repro.launch.krr_serve`` is the driver
+that strings them together.  Degraded-mode behavior (shedding, deadlines,
+worker-crash propagation, health) is in DESIGN.md §9, the self-healing loop in
+§12; the structured serving errors re-export here for callers.
 """
-from ..errors import (DeadlineExceeded, InvalidRequest, Overloaded,
-                      ServingError, WorkerCrashed)
-from .artifact import (ARTIFACT_FORMAT, LoadedArtifact,
-                       LoadedShardedArtifact, Normalization, export_artifact,
-                       export_artifact_sharded, load_artifact,
-                       load_artifact_sharded)
+from ..errors import (CircuitOpen, DeadlineExceeded, InvalidRequest,
+                      Overloaded, ServingError, WorkerCrashed)
+from .artifact import (ARTIFACT_FORMAT, GOLDEN_QUERIES, GOLDEN_TOL,
+                       LoadedArtifact, LoadedShardedArtifact, Normalization,
+                       export_artifact, export_artifact_sharded,
+                       load_artifact, load_artifact_sharded)
 from .batcher import MicroBatcher
 from .cache import BucketKeyFn, PredictionCache
+from .lifecycle import (CircuitBreaker, LifecycleConfig, ServingRuntime,
+                        SupervisedBatcher, discover_versions, version_dir)
 from .predictor import Predictor, bucket_sizes, padding_bucket
 from .sharded import ShardedPredictor, parse_mesh_shape

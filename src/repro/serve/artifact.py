@@ -80,11 +80,54 @@ def _model_arrays(model: WLSHKRRModel, *,
             "tables": tables}
 
 
+GOLDEN_QUERIES = 16          # default canary set size captured at export
+GOLDEN_TOL = 1e-4            # default agreement tolerance (covers backend /
+                             # mesh reassociation; real corruption is O(0.1))
+_GOLDEN_SEED = 1053
+
+
+def _golden_block(model: WLSHKRRModel, norm: Normalization | None, *,
+                  k: int, x=None, tol: float) -> dict:
+    """Canary golden set: ``k`` query points + the model's own predictions.
+
+    Captured at EXPORT time so canary validation at serve time needs no
+    training data: a reloading runtime replays ``x`` through the candidate
+    and rejects it unless the predictions agree with ``y`` within ``tol``
+    and are finite.  ``x`` defaults to synthetic points in the repo's
+    canonical [0, 2) box from a fixed seed — the canary checks artifact
+    INTEGRITY (bitrot, torn/mixed pieces, wrong-backend numerics), which any
+    deterministic query set witnesses; pass training rows for a
+    distribution-faithful set.  Outputs go through the same normalize ->
+    featurize/readout -> denormalize pipeline the predictor serves."""
+    d = int(model.lsh.d)
+    if x is None:
+        rng = np.random.default_rng(_GOLDEN_SEED)
+        x = rng.uniform(0.0, 2.0, size=(k, d)).astype(np.float32)
+    else:
+        x = np.asarray(x, np.float32)
+        if x.ndim != 2 or x.shape[1] != d:
+            raise ValueError(f"golden_x must be (k, {d}), got {x.shape}")
+        x = x[:k] if k else x
+    xq = x
+    if norm is not None:
+        xq = ((x - np.asarray(norm.x_mean, np.float32))
+              / np.asarray(norm.x_std, np.float32)).astype(np.float32)
+    op = model_operator(model)
+    y = np.asarray(op.predict_from_buckets(
+        op.featurize_buckets(jnp.asarray(xq)), model.tables))
+    if norm is not None:
+        y = y * np.float32(norm.y_std) + np.float32(norm.y_mean)
+    return {"x": x.tolist(), "y": np.asarray(y, np.float32).tolist(),
+            "tol": float(tol)}
+
+
 def export_artifact(directory: str, model: WLSHKRRModel, *,
                     artifact_id: str | None = None,
                     norm: Normalization | None = None,
                     extra_meta: dict | None = None,
-                    include_beta: bool = True) -> str:
+                    include_beta: bool = True,
+                    golden_queries: int = GOLDEN_QUERIES,
+                    golden_x=None, golden_tol: float = GOLDEN_TOL) -> str:
     """Atomically write ``model`` (+ optional normalization) to ``directory``.
 
     Returns the artifact id (defaults to the directory basename).  The write
@@ -92,6 +135,12 @@ def export_artifact(directory: str, model: WLSHKRRModel, *,
     ``include_beta=False`` drops the training solution from the artifact —
     serving needs only the LSH params and tables, and beta is the one array
     that scales with the training-set size.
+
+    ``golden_queries`` canary points + their predictions ride the meta (see
+    ``_golden_block``); ``golden_queries=0`` opts out.  The meta also carries
+    a monotonically increasing ``export_version`` (previous export's + 1) so
+    a reload watcher can tell a re-publish from the version it already
+    serves.
     """
     with obs.span("io.export_artifact",
                   to_histogram=obs.histogram(
@@ -99,12 +148,16 @@ def export_artifact(directory: str, model: WLSHKRRModel, *,
                       "artifact export wall time")):
         return _export_artifact(directory, model, artifact_id=artifact_id,
                                 norm=norm, extra_meta=extra_meta,
-                                include_beta=include_beta)
+                                include_beta=include_beta,
+                                golden_queries=golden_queries,
+                                golden_x=golden_x, golden_tol=golden_tol)
 
 
 def _export_artifact(directory: str, model: WLSHKRRModel, *,
                      artifact_id: str | None, norm: Normalization | None,
-                     extra_meta: dict | None, include_beta: bool) -> str:
+                     extra_meta: dict | None, include_beta: bool,
+                     golden_queries: int = GOLDEN_QUERIES,
+                     golden_x=None, golden_tol: float = GOLDEN_TOL) -> str:
     arrays = _model_arrays(model, include_beta=include_beta)
     if norm is not None:
         arrays["x_mean"] = np.asarray(norm.x_mean, np.float32).reshape(-1)
@@ -112,9 +165,18 @@ def _export_artifact(directory: str, model: WLSHKRRModel, *,
         arrays["y_mean"] = np.asarray(norm.y_mean, np.float32).reshape(())
         arrays["y_std"] = np.asarray(norm.y_std, np.float32).reshape(())
     artifact_id = artifact_id or os.path.basename(os.path.normpath(directory))
+    prev_step = latest_step(directory)
+    prev_version = 0
+    if prev_step is not None:
+        try:
+            prev_version = int(_read_meta(directory, prev_step)
+                               .get("export_version", 0))
+        except (OSError, ValueError):
+            prev_version = 0
     meta = {"kind": "wlsh_krr_artifact",
             "format": ARTIFACT_FORMAT,
             "artifact_id": artifact_id,
+            "export_version": prev_version + 1,
             "bucket_name": model.bucket_name,
             "table_size": int(model.table_size),
             "backend": model.backend,
@@ -125,6 +187,9 @@ def _export_artifact(directory: str, model: WLSHKRRModel, *,
             "has_beta": include_beta,
             "arrays": {k: list(v.shape) for k, v in arrays.items()},
             **(extra_meta or {})}
+    if golden_queries > 0 or golden_x is not None:
+        meta["golden"] = _golden_block(model, norm, k=golden_queries,
+                                       x=golden_x, tol=golden_tol)
     save_checkpoint(directory, ARTIFACT_FORMAT, arrays, meta)
     obs.counter("io_artifact_exports_total", "artifacts exported",
                 labels=("kind",)).labels("single").inc()
@@ -294,14 +359,19 @@ def export_artifact_sharded(directory: str, model: WLSHKRRModel, *,
                             mesh_shape: tuple[int, int],
                             artifact_id: str | None = None,
                             norm: Normalization | None = None,
-                            extra_meta: dict | None = None) -> str:
+                            extra_meta: dict | None = None,
+                            golden_queries: int = GOLDEN_QUERIES,
+                            golden_x=None,
+                            golden_tol: float = GOLDEN_TOL) -> str:
     """Atomically export ``model`` as a (model_shards, data_shards) piece
     grid for a sharded serving mesh.  Returns the artifact id.
 
     Requires ``m % model_shards == 0`` and ``table_size % data_shards == 0``.
     ``beta`` is always dropped (the serving tier never reads it — see
-    ``export_artifact(include_beta=False)``); normalization stats are tiny
-    and travel in the manifest.  Pieces are written first (each through the
+    ``export_artifact(include_beta=False)``); normalization stats and the
+    canary golden set (``golden_queries`` points + the FULL model's
+    predictions, ``golden_queries=0`` opts out) are tiny and travel in the
+    manifest.  Pieces are written first (each through the
     checkpoint store's tmp+rename), the manifest last via its own atomic
     rename — a crash at ANY point leaves either the previous complete
     export or nothing loadable, never a mixed one (the manifest carries a
@@ -361,6 +431,9 @@ def export_artifact_sharded(directory: str, model: WLSHKRRModel, *,
                 "pieces": pieces,
                 "has_norm": norm is not None,
                 **(extra_meta or {})}
+    if golden_queries > 0 or golden_x is not None:
+        manifest["golden"] = _golden_block(model, norm, k=golden_queries,
+                                           x=golden_x, tol=golden_tol)
     if norm is not None:
         manifest["norm"] = {
             "x_mean": np.asarray(norm.x_mean, np.float32).reshape(-1).tolist(),
@@ -389,7 +462,8 @@ def _read_manifest(directory: str) -> dict | None:
 
 def load_artifact_sharded(directory: str, *, mesh_shape: tuple[int, int],
                           backend: str | None = None,
-                          artifact_id: str | None = None
+                          artifact_id: str | None = None, retries: int = 0,
+                          retry_backoff_s: float = 0.05
                           ) -> LoadedShardedArtifact:
     """Load + validate a sharded artifact for a TARGET serving mesh.
 
@@ -403,7 +477,36 @@ def load_artifact_sharded(directory: str, *, mesh_shape: tuple[int, int],
     mid-write is invisible to ``latest_step`` and surfaces as a missing
     piece, and a piece from a DIFFERENT export generation fails the version
     cross-check.
+
+    ``retries`` retries TRANSIENT failures — a missing manifest or piece
+    checkpoint (a concurrent publisher still mid-export), short-read zip
+    corruption — with exponential backoff from ``retry_backoff_s``, same
+    contract as ``load_artifact``.  Validation failures (mixed generations,
+    bad geometry, poisoned tables) raise immediately: re-reading a malformed
+    export cannot fix it.
     """
+    import time
+    import zipfile
+    attempt = 0
+    while True:
+        try:
+            return _load_artifact_sharded_once(
+                directory, mesh_shape=mesh_shape, backend=backend,
+                artifact_id=artifact_id)
+        except (OSError, zipfile.BadZipFile):
+            if attempt >= retries:
+                raise
+            obs.counter("io_artifact_load_retries_total",
+                        "transient artifact-load failures retried").inc()
+            time.sleep(retry_backoff_s * (2 ** attempt))
+            attempt += 1
+
+
+def _load_artifact_sharded_once(directory: str, *,
+                                mesh_shape: tuple[int, int],
+                                backend: str | None = None,
+                                artifact_id: str | None = None
+                                ) -> LoadedShardedArtifact:
     manifest = _read_manifest(directory)
     if manifest is None:
         raise FileNotFoundError(f"no sharded artifact manifest under "

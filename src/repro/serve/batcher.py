@@ -77,7 +77,7 @@ class MicroBatcher:
     def __init__(self, predict_fn, *, max_batch: int = 64,
                  max_wait_us: int = 2000, latency_window: int = 4096,
                  dim: int | None = None, max_queue: int = 0,
-                 deadline_us: int | None = None):
+                 deadline_us: int | None = None, on_crash=None):
         if max_batch <= 0:
             raise ValueError("max_batch must be positive")
         if max_queue < 0:
@@ -142,6 +142,12 @@ class MicroBatcher:
         self._crashed: BaseException | None = None
         self._inflight: list[_Request] | None = None
         self._fault_hook = None         # test injection (faults.crash_worker)
+        # supervision hook (lifecycle.SupervisedBatcher): called with the
+        # fatal exception AFTER the crash state is set but BEFORE any future
+        # fails, so by the time a caller observes a WorkerCrashed result the
+        # supervisor has already recorded the crash (breaker trip, restart
+        # scheduling) — no window where a fast retry misses the breaker
+        self._on_crash = on_crash
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="microbatcher")
         self._worker.start()
@@ -273,6 +279,11 @@ class MicroBatcher:
             self._crashed = e
             self._closed = True
             self._last_error = repr(e)
+        if self._on_crash is not None:
+            try:
+                self._on_crash(e)
+            except Exception:
+                pass    # supervision must never mask the crash drain below
         err = WorkerCrashed(f"batcher worker died: {e!r}")
         err.__cause__ = e
         for r in self._inflight or []:

@@ -185,6 +185,17 @@ class Predictor:
                                f"have {sorted(self._models)}")
             return self._models[aid]
 
+    def unload(self, artifact_id: str) -> bool:
+        """Drop a hosted model (its jit cache, caches, and key memo go with
+        it).  In-flight predicts that already resolved the hosted entry
+        finish on it; new requests for the id get KeyError.  Returns whether
+        the id was hosted."""
+        with self._lock:
+            hosted = self._models.pop(artifact_id, None)
+            if self._default_id == artifact_id:
+                self._default_id = min(self._models, default=None)
+        return hosted is not None
+
     @property
     def artifact_ids(self) -> list[str]:
         with self._lock:

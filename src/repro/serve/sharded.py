@@ -164,16 +164,20 @@ class ShardedPredictor:
     # -- model hosting ------------------------------------------------------
 
     def load(self, directory: str, *, artifact_id: str | None = None,
-             placement: tuple[int, int] | None = None) -> str:
+             placement: tuple[int, int] | None = None, retries: int = 0,
+             retry_backoff_s: float = 0.05) -> str:
         """Load a sharded artifact and host it on model rows
         ``placement=[lo, hi)`` (default: the whole model axis).  The
         artifact must have been exported for exactly the
         (hi-lo, data_shards) grid — ``load_artifact_sharded`` refuses a
-        mismatched manifest."""
+        mismatched manifest.  ``retries`` re-attempts transient piece/manifest
+        read failures with exponential backoff (same contract as
+        ``Predictor.load``)."""
         lo, hi = placement or (0, self.mesh_shape[0])
         loaded = load_artifact_sharded(
             directory, mesh_shape=(hi - lo, self.mesh_shape[1]),
-            backend=self.backend, artifact_id=artifact_id)
+            backend=self.backend, artifact_id=artifact_id, retries=retries,
+            retry_backoff_s=retry_backoff_s)
         return self.add_model(loaded, placement=(lo, hi))
 
     def add_model(self, loaded: LoadedShardedArtifact, *,
@@ -231,6 +235,17 @@ class ShardedPredictor:
                 self._default_id = loaded.artifact_id
         obs.counter("serve_models_loaded_total",
                     "artifacts hosted over the process lifetime").inc()
+        if hosted.cache is not None:
+            # same pull-time cache gauges as the single-host Predictor — a
+            # sharded-only process must expose the full serving contract
+            cache = hosted.cache
+            obs.gauge("serve_cache_entries", "live prediction-cache entries",
+                      labels=("model",)).labels(loaded.artifact_id).set_fn(
+                lambda cache=cache: cache.stats()["entries"])
+            obs.gauge("serve_cache_evictions",
+                      "prediction-cache evictions to date",
+                      labels=("model",)).labels(loaded.artifact_id).set_fn(
+                lambda cache=cache: cache.stats()["evictions"])
         # per-shard pull-time gauges, registered at hosting time so the
         # series EXIST (at 0) even in broadcast mode where overflow is
         # structurally impossible — an absent series and a zero series mean
@@ -255,6 +270,15 @@ class ShardedPredictor:
                 raise KeyError(f"no hosted model {aid!r}; "
                                f"have {sorted(self._models)}")
             return self._models[aid]
+
+    def unload(self, artifact_id: str) -> bool:
+        """Drop a hosted model (jitted programs, device-placed tables,
+        caches).  Same contract as ``Predictor.unload``."""
+        with self._lock:
+            hosted = self._models.pop(artifact_id, None)
+            if self._default_id == artifact_id:
+                self._default_id = min(self._models, default=None)
+        return hosted is not None
 
     @property
     def artifact_ids(self) -> list[str]:

@@ -26,6 +26,20 @@ Injection points:
 * predictor        — ``serve_fault`` stalls or fails warm-path calls per the
                      plan (drives load-shedding/deadline tests with real
                      latency, no monkeypatching).
+* artifact on disk — ``poison_artifact_tables`` corrupts a PUBLISHED
+                     artifact's tables in place (bitrot / bad replication):
+                     the model that exported it was healthy, so its recorded
+                     golden predictions disagree — the lifecycle canary's
+                     bread-and-butter catch.
+* canary readout   — ``canary_poison`` arms a ServingRuntime hook that
+                     perturbs canary predictions only (serving path clean),
+                     isolating the reject logic from real model damage.
+* torn publish     — ``torn_publish`` exports a version under a killed
+                     checkpoint writer, leaving exactly what a SIGKILL'd
+                     publisher leaves; the watcher must not see it.
+* supervised worker— ``crash_supervised_workers`` kills the next N workers a
+                     SupervisedBatcher spawns (the hook re-arms across
+                     restarts), driving breaker-trip + half-open recovery.
 
 Host-side faults raise ``repro.errors.FaultInjected`` so tests can tell an
 injected fault from a genuine bug.
@@ -169,6 +183,110 @@ def serve_fault(plan: FaultPlan | None, call_idx: int) -> None:
         time.sleep(plan.serve_delay_s)
     if plan.serve_fail_every > 0 and (call_idx % plan.serve_fail_every) == 0:
         raise FaultInjected(f"injected predict failure (call {call_idx})")
+
+
+def poison_artifact_tables(directory: str, scale: float = 3.0) -> int:
+    """Corrupt a PUBLISHED artifact's hash tables on disk, in place.
+
+    Rewrites every ``arrays.npz`` under ``directory`` (flat artifacts have
+    one completed checkpoint step; sharded ones a step per piece) with its
+    ``tables`` entry scaled by ``scale`` — finite but WRONG, the shape of
+    damage structural validation cannot catch (bitrot, a bad replica, a
+    partially-applied rewrite).  The recorded golden predictions were made
+    by the healthy pre-poison model, so the lifecycle canary must reject
+    the version.  Returns the number of npz payloads rewritten.
+    """
+    import os
+
+    import numpy as np
+
+    rewritten = 0
+    for base, _dirs, files in os.walk(directory):
+        if "arrays.npz" not in files or base.endswith(".tmp"):
+            continue
+        path = os.path.join(base, "arrays.npz")
+        with np.load(path) as npz:
+            arrays = {k: npz[k] for k in npz.files}
+        # checkpoint flattening stringifies the state path, so the tables
+        # land under a key like "['tables']" — match by substring
+        keys = [k for k in arrays if "tables" in k]
+        if not keys:
+            continue
+        for k in keys:
+            arrays[k] = arrays[k] * np.float32(scale)
+        np.savez(path, **arrays)
+        rewritten += 1
+    if rewritten == 0:
+        raise FaultInjected(
+            f"poison_artifact_tables: no tables payload under {directory}")
+    return rewritten
+
+
+@contextlib.contextmanager
+def canary_poison(runtime, mode: str = "offset", magnitude: float = 1.0):
+    """Arm a ServingRuntime's canary hook so canary predictions — and ONLY
+    canary predictions — come back perturbed (``offset``) or non-finite
+    (``nan``).  The hosted model itself is untouched: the serving path would
+    answer correctly, which is exactly the point — the test isolates the
+    reject/quarantine logic from real model damage."""
+
+    def hook(got):
+        if mode == "nan":
+            got[..., 0] = float("nan")
+            return got
+        return got + magnitude
+
+    prev = runtime._canary_hook
+    runtime._canary_hook = hook
+    try:
+        yield
+    finally:
+        runtime._canary_hook = prev
+
+
+def torn_publish(directory: str, model, norm=None, *,
+                 mesh_shape: tuple[int, int] | None = None,
+                 after_saves: int = 0, **export_kwargs) -> None:
+    """Publish a version TORN: run the export under a killed checkpoint
+    writer (crash after ``after_saves`` clean piece saves), swallowing the
+    injected crash.  Leaves what a SIGKILL'd publisher leaves — a flat
+    artifact with only a ``step_N.tmp``, or a sharded one with some pieces
+    but no manifest (manifest is written LAST).  The lifecycle watcher must
+    treat the version as unpublished."""
+    from ..serve.artifact import export_artifact, export_artifact_sharded
+
+    with killed_checkpoint_writer(after_saves):
+        try:
+            if mesh_shape is not None:
+                export_artifact_sharded(directory, model, norm=norm,
+                                        mesh_shape=mesh_shape,
+                                        **export_kwargs)
+            else:
+                export_artifact(directory, model, norm=norm, **export_kwargs)
+        except FaultInjected:
+            pass
+
+
+def crash_supervised_workers(sup, crashes: int = 1,
+                             exc: BaseException | None = None) -> None:
+    """Arm a SupervisedBatcher so its next ``crashes`` workers die on their
+    first batch.  The hook lives on the SUPERVISOR (``_worker_fault_hook``),
+    which re-arms it on every fresh worker it spawns — so consecutive
+    restarts keep crashing until the countdown runs out, then the next
+    worker serves cleanly: the exact sequence that trips a breaker closed ->
+    open and recovers it through a half-open probe."""
+    err = exc if exc is not None else FaultInjected("worker thread killed")
+    remaining = itertools.count(1)
+
+    def hook(batch) -> None:
+        n = next(remaining)
+        if n <= crashes:
+            if n >= crashes:
+                sup._worker_fault_hook = None    # countdown spent: disarm
+            raise err
+
+    sup._worker_fault_hook = hook
+    sup._mb._fault_hook = hook     # current worker too, not just future ones
 
 
 def poison_matvec(matvec, column: int = 0):

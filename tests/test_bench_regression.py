@@ -71,6 +71,26 @@ def test_sharded_serving_no_regression():
     assert not failures, "\n".join(failures)
 
 
+def test_lifecycle_no_regression():
+    """Acceptance pin (self-healing runtime): rerun the lifecycle section
+    against BENCH_serving.json's ``lifecycle`` cell and fail when a live
+    swap recompiles warm buckets (``swap_compile_delta`` != 0), post-swap
+    p50 drifts beyond 2x steady p50 (machine-speed-immune ratio), or forced
+    rollback-to-first-healthy-prediction regresses >2x the baseline.
+    In-process, but fits + exports several versions — hence slow-marked."""
+    from benchmarks.check_regression import (DEFAULT_SERVING_BASELINE,
+                                             check_lifecycle)
+    assert DEFAULT_SERVING_BASELINE.exists(), \
+        "committed BENCH_serving.json missing"
+    failures, fresh = check_lifecycle()
+    if not fresh:
+        pytest.skip("no comparable lifecycle baseline (platform differs "
+                    "or section absent)")
+    if "error" in fresh:
+        pytest.skip(f"lifecycle measurement failed: {fresh['error'][:120]}")
+    assert not failures, "\n".join(failures)
+
+
 def test_blocked_split_pallas_speedup():
     """Acceptance pin (PR 5): the visit-list blocked split matvec must beat
     the cross-product split pallas matvec by >= 3x at n=1024 in interpret
